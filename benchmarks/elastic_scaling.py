@@ -1,0 +1,53 @@
+"""Benchmark: Table VII-C — scaling strategies (makespan / cost / wait)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import run_table7c
+
+PAPER = {  # policy row -> (makespan, spot$, od$, max wait, avg wait)
+    ("none", 40): ("07:43:00", 10.26, 74.57, "00:00:00", "00:00:00"),
+    ("none", 20): ("08:33:00", 5.98, 40.87, "01:27:00", "00:11:30"),
+    ("unlimited", None): ("07:43:00", 3.95, 28.92, "00:30:00", "00:07:39"),
+    ("limited", 20): ("08:22:00", 4.52, 26.77, "01:46:00", "00:15:10"),
+    ("limited", 10): ("12:50:00", 3.62, 23.18, "05:41:00", "02:08:06"),
+}
+
+
+def hms(s: float) -> str:
+    s = int(s)
+    return f"{s // 3600:02d}:{s % 3600 // 60:02d}:{s % 60:02d}"
+
+
+def run(verbose: bool = True, seed: int = 7):
+    t0 = time.perf_counter()
+    reports = run_table7c(seed=seed)
+    elapsed_us = (time.perf_counter() - t0) * 1e6 / len(reports)
+    base = reports[0]
+    rows = []
+    if verbose:
+        print("\n== Table VII-C: elastic scaling strategies ==")
+        print(f"{'policy':<11}{'nodes':<9}{'makespan':<10}{'spot$':>7}"
+              f"{'od$':>8}{'maxwait':>9}{'avgwait':>9}{'sav%':>6}   paper row")
+    for r in reports:
+        sav = 100 * (1 - r.on_demand_cost / base.on_demand_cost)
+        key = (r.policy, r.max_nodes)
+        paper = PAPER.get(key, ("-",) * 5)
+        rows.append((r, sav))
+        if verbose:
+            nodes = f"{r.min_nodes},{r.max_nodes if r.max_nodes else '-'}"
+            print(f"{r.policy:<11}{nodes:<9}{hms(r.makespan_s):<10}"
+                  f"{r.spot_cost:>7.2f}{r.on_demand_cost:>8.2f}"
+                  f"{hms(r.max_wait_s):>9}{hms(r.avg_wait_s):>9}{sav:>6.1f}"
+                  f"   {paper[0]} / ${paper[1]} / ${paper[2]}")
+    unlimited = next(r for r, _ in rows if r.policy == "unlimited")
+    headline = base.on_demand_cost / unlimited.spot_cost
+    if verbose:
+        print(f"headline: static-OD / elastic-spot = {headline:.1f}x "
+              f"(paper: 'up to 16x')")
+    return [("elastic_scaling.table7c", elapsed_us,
+             f"headline_savings={headline:.1f}x")]
+
+
+if __name__ == "__main__":
+    run()

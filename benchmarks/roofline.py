@@ -1,0 +1,62 @@
+"""Benchmark: roofline table from the dry-run artifacts (assignment §g).
+
+Reads results/dryrun/*.json written by ``repro.launch.dryrun`` and prints the
+per-(arch × shape × mesh) three-term roofline with bottleneck + MFU-style
+fraction. Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+DRYRUN_DIR = os.environ.get("KOTTA_DRYRUN_DIR", "results/dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    cells = load()
+    base = [c for c in cells if not c.get("config_overrides")
+            and c.get("microbatches", 1) == 1 and not c.get("rule_overrides")]
+    ok = [c for c in base if c.get("status") == "ok"]
+    if not cells:
+        print("(no dry-run artifacts found — run repro.launch.dryrun --all)")
+        return [("roofline.cells", 0.0, "missing")]
+    if verbose:
+        print("\n== Roofline (single-pod baselines; terms in seconds/step) ==")
+        print(f"{'arch':<18}{'shape':<12}{'mesh':<7}{'compute':>9}"
+              f"{'memory':>9}{'mem.fus':>9}{'collect':>9} {'bottleneck':<12}"
+              f"{'useful':>7}{'frac':>7}{'fits':>5}")
+        for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+            r = c["roofline"]
+            print(f"{c['arch']:<18}{c['shape']:<12}{c['mesh']:<7}"
+                  f"{r['compute_s']:>9.2e}{r['memory_s']:>9.2e}"
+                  f"{r.get('memory_fused_s', 0):>9.2e}"
+                  f"{r['collective_s']:>9.2e} "
+                  f"{r['bottleneck'].replace('_s', ''):<12}"
+                  f"{r['useful_flops_ratio']:>7.2f}"
+                  f"{r['roofline_fraction']:>7.3f}"
+                  f"{'y' if c['memory']['fits_hbm'] else 'N':>5}")
+        skipped = [c for c in base if c.get("status") == "skipped"]
+        for c in sorted(skipped, key=lambda c: (c["arch"], c["shape"])):
+            print(f"{c['arch']:<18}{c['shape']:<12}{c['mesh']:<7} "
+                  f"SKIP: {c['reason']}")
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    multi = [c for c in base if c.get("status") == "ok" and c["mesh"] == "multi"]
+    return [("roofline.cells_ok", elapsed_us, f"ok={len(ok)}"),
+            ("roofline.multi_pod_ok", elapsed_us, f"ok={len(multi)}")]
+
+
+if __name__ == "__main__":
+    run()

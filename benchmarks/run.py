@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints a ``name,us_per_call,derived`` CSV summary after the human-readable
+tables. Usage: ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import (cost_aware, elastic_scaling, roofline, storage_cost,
+                        throughput, train_microbench)
+
+BENCHES = {
+    "storage_cost": storage_cost.run,        # paper Table III
+    "elastic_scaling": elastic_scaling.run,  # paper Table VII-C + Fig 5
+    "throughput": throughput.run,            # paper Fig 6
+    "cost_aware": cost_aware.run,            # paper Fig 7
+    "roofline": roofline.run,                # assignment §Roofline
+    "train_microbench": train_microbench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(BENCHES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    rows = []
+    for name in names:
+        rows.extend(BENCHES[name](verbose=True))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

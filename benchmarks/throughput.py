@@ -1,0 +1,99 @@
+"""Benchmark: Fig 6 — task-throughput strong scaling with the DB bottleneck.
+
+The paper pushes 10,000 ``sleep(0)`` tasks through worker pools of
+{1,2,4,8,16,32} m4.xlarge nodes and observes linear scaling up to 16 nodes
+(~4.9 tasks/s/node) before the DynamoDB provisioned capacity saturates the
+system at ~80 tasks/s. We reproduce the same dynamics with the live threaded
+runtime: the ``StateStore`` token buckets ARE the provisioned capacity; the
+per-worker service time models the paper's per-task overhead.
+
+Scaled for a 1-core CI container: a fixed measurement window instead of 10k
+tasks (the steady-state rate is the quantity of interest). Our workers spend
+2 reads + 3 writes per task, so a 160 reads/s budget caps the system at
+~80 tasks/s — the paper's saturation point — putting the knee at 16 workers
+exactly as in Fig 6.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (ExecutableRegistry, JobSpec, KottaService, ObjectStore,
+                        PolicyEngine, Principal, Role, StateStore, allow,
+                        install_standard_roles)
+
+WORKERS = (1, 2, 4, 8, 16, 24)
+PER_WORKER_RATE = 5.0        # paper: 4.90 tasks/s/node
+DB_READ_CAP = 160.0          # 2 reads/task -> 80 tasks/s ceiling (Fig 6)
+DB_WRITE_CAP = 640.0
+WINDOW_S = 6.0
+
+
+def _service(n_workers: int) -> KottaService:
+    engine = PolicyEngine()
+    install_standard_roles(engine)
+    store = ObjectStore(clock=engine.clock)
+    registry = ExecutableRegistry()
+    exec_time = 1.0 / PER_WORKER_RATE
+
+    @registry.register("sleep0")
+    def sleep0(ctx):
+        time.sleep(exec_time)  # paper's sleep(0) + per-task node overhead
+        return 0
+
+    svc = KottaService(engine, store, registry,
+                       db=StateStore(engine.clock, DB_READ_CAP, DB_WRITE_CAP),
+                       watcher_kwargs={"heartbeat_timeout_s": 60.0,
+                                       "interval_s": 1.0,
+                                       "speculation": False})
+    role = Role("bench", policies=[allow(["jobs:*"], ["*"])])
+    engine.register_role(role)
+    p = Principal("bench")
+    engine.authenticator.register_identity(p, "pw")
+    engine.bind(p, "bench")
+    svc._bench_token = engine.login("bench", "pw")
+    svc.start(dev_workers=0, prod_workers=n_workers)
+    return svc
+
+
+def run(verbose: bool = True):
+    rows = []
+    if verbose:
+        print("\n== Fig 6: throughput strong scaling (scaled 1/5) ==")
+        print(f"{'workers':>8}{'tasks/s':>9}{'per-node':>9}{'ideal':>7}")
+    results = []
+    for n in WORKERS:
+        svc = _service(n)
+        try:
+            tok = svc._bench_token
+            # enough backlog to keep every worker busy through the window
+            backlog = int(2 * WINDOW_S * PER_WORKER_RATE * n + 20)
+            jobs = [svc.submit(tok, JobSpec("sleep0", queue="prod"))
+                    for _ in range(backlog)]
+            t0 = time.perf_counter()
+            done0 = sum(w.jobs_done for w in svc.workers())
+            time.sleep(WINDOW_S)
+            done1 = sum(w.jobs_done for w in svc.workers())
+            rate = (done1 - done0) / (time.perf_counter() - t0)
+        finally:
+            svc.shutdown()
+        ideal = n * PER_WORKER_RATE
+        results.append((n, rate))
+        if verbose:
+            print(f"{n:>8}{rate:>9.2f}{rate / n:>9.2f}{ideal:>7.1f}")
+        rows.append((f"throughput.workers_{n}", WINDOW_S * 1e6 / max(rate * WINDOW_S, 1),
+                     f"tasks_per_s={rate:.2f}"))
+    # Fig 6 shape: near-linear to 16 workers, flat 16 -> 24 (DB-bound).
+    d = dict(results)
+    lin = d.get(16, 0.0) / max(d.get(1, 1e-9) * 16, 1e-9)
+    flat = d.get(24, 0.0) / max(d.get(16, 1e-9), 1e-9)
+    rows.append(("throughput.linearity_to_16", 0.0, f"{lin:.2f} (paper ~1.0)"))
+    rows.append(("throughput.saturation_16_24", 0.0,
+                 f"{flat:.2f} (flat => DB-bound, paper-like)"))
+    if verbose:
+        print(f"linearity to 16 workers: {lin:.2f} (1.0 = ideal); "
+              f"r24/r16 = {flat:.2f} (paper flattens past 16 nodes)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

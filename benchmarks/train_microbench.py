@@ -1,0 +1,45 @@
+"""Microbenchmark: wall-clock per train/serve step on a reduced model (CPU).
+
+Not a TPU number — a regression canary for the step-construction path
+(jit cache, microbatching, optimizer)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_reduced_config
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.train import AdamWConfig, adamw
+from repro.train.train_step import build_train_step
+
+
+def run(verbose: bool = True):
+    cfg = get_reduced_config("internlm2-1.8b")
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    opt_cfg = AdamWConfig(warmup_steps=1, decay_steps=100)
+    opt_state = adamw.init(opt_cfg, params)
+    step = jax.jit(build_train_step(cfg, opt_cfg))
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (4, 64), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (4, 64), 0, cfg.vocab_size)}
+    params, opt_state, m = step(params, opt_state, batch)  # compile
+    jax.block_until_ready(m["total_loss"])
+    n = 10
+    t0 = time.perf_counter()
+    for _ in range(n):
+        params, opt_state, m = step(params, opt_state, batch)
+    jax.block_until_ready(m["total_loss"])
+    us = (time.perf_counter() - t0) * 1e6 / n
+    if verbose:
+        print(f"\n== train-step microbench (reduced internlm2, CPU) ==")
+        print(f"per-step: {us:.0f} us, loss={float(m['total_loss']):.4f}")
+    return [("train_microbench.step", us,
+             f"loss={float(m['total_loss']):.4f}")]
+
+
+if __name__ == "__main__":
+    run()

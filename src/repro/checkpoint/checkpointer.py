@@ -1,0 +1,148 @@
+"""Tiered, async, checksummed checkpointing through the lifecycle store.
+
+Checkpoints are Kotta's own dogfood for the paper's storage contribution:
+every leaf of (params, opt_state) is written as an object under
+``checkpoints/<run>/<step>/...`` in the :class:`ObjectStore`, so old
+checkpoints age HOT→STD→IA→ARCHIVE under the LRU lifecycle policy exactly
+like the paper's corpora, and restoring an archived checkpoint goes through
+the Glacier-restore path.
+
+Properties:
+- sharded: one object per pytree leaf (parallel-writable on a real fleet);
+- checksummed: SHA-256 per leaf + manifest (detects corruption on restore);
+- async: ``save(..., blocking=False)`` snapshots to host memory and writes in
+  a background thread (training continues);
+- topology-independent: leaves are stored as full logical arrays and can be
+  resharded onto any mesh at restore (elastic rescale after revocation).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.lifecycle import ObjectStore, Tier
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out) or "root"
+
+
+class Checkpointer:
+    def __init__(self, store: ObjectStore, run_name: str,
+                 tier: Tier = Tier.STD, keep_last: Optional[int] = None):
+        self.store = store
+        self.run = run_name
+        self.tier = tier
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+
+    # -- keys ---------------------------------------------------------------
+    def _prefix(self, step: int) -> str:
+        return f"checkpoints/{self.run}/{step:08d}"
+
+    def _manifest_key(self, step: int) -> str:
+        return self._prefix(step) + "/MANIFEST.json"
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        # Snapshot to host memory synchronously (cheap); write async.
+        leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        host = [(_path_str(path), np.asarray(leaf)) for path, leaf in leaves]
+        if blocking:
+            self._write(step, host)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves) -> None:
+        manifest = {"run": self.run, "step": step, "leaves": []}
+        for name, arr in host_leaves:
+            # raw bytes + manifest dtype: np.save cannot represent ml_dtypes
+            # (bfloat16 round-trips as void).
+            data = np.ascontiguousarray(arr).tobytes()
+            key = f"{self._prefix(step)}/{name}.npy"
+            self.store.put(key, data, owner=f"run:{self.run}", tier=self.tier)
+            manifest["leaves"].append({
+                "name": name, "key": key, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(data).hexdigest(),
+            })
+        self.store.put(self._manifest_key(step),
+                       json.dumps(manifest).encode(),
+                       owner=f"run:{self.run}", tier=self.tier)
+        self.saves += 1
+        if self.keep_last is not None:
+            self._gc()
+
+    # -- restore -------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for key in self.store.keys(f"checkpoints/{self.run}/"):
+            if key.endswith("MANIFEST.json"):
+                out.append(int(key.split("/")[-2]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None) -> tuple[int, Any]:
+        """Restore into the structure of ``like``. Returns (step, tree).
+
+        Raises ObjectArchivedError if the checkpoint has aged into ARCHIVE
+        (callers then go through the restore queue, paper §V-A).
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints for run {self.run!r}")
+        manifest = json.loads(self.store.get(self._manifest_key(step)))
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, leaf in leaves:
+            name = _path_str(path)
+            entry = by_name[name]
+            data = self.store.get(entry["key"])
+            if hashlib.sha256(data).hexdigest() != entry["sha256"]:
+                raise IOError(f"checksum mismatch restoring {name}")
+            dt = jax.numpy.dtype(entry["dtype"])
+            arr = np.frombuffer(data, dtype=dt).reshape(entry["shape"])
+            if list(arr.shape) != list(np.shape(leaf)):
+                raise ValueError(f"{name}: saved {arr.shape} vs expected "
+                                 f"{np.shape(leaf)} (topology change needs "
+                                 f"logical-shape parity)")
+            out.append(jax.numpy.asarray(arr))
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), out)
+        return step, tree
+
+    # -- gc ---------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_last]:
+            for key in self.store.keys(self._prefix(s)):
+                self.store.delete(key)

@@ -1,0 +1,28 @@
+"""Kotta core: the paper's contributions as composable components.
+
+- :mod:`repro.core.security`  — RBAC fabric, assume-role, signed URLs, audit (§VI)
+- :mod:`repro.core.lifecycle` — tiered object store + LRU lifecycle (§V-A)
+- :mod:`repro.core.cost`      — storage/compute/placement cost models (§V, §VII)
+- :mod:`repro.core.market`    — spot price traces + revocation (§IV-C)
+- :mod:`repro.core.scheduler` — queues, workers, queue-watcher (§IV-D)
+- :mod:`repro.core.elastic`   — scaling policies / provisioner (§V-B)
+- :mod:`repro.core.simulator` — discrete-event reproduction of §VII-C
+"""
+from .clock import Clock, VirtualClock, days, hours
+from .cost import (ComputePricing, StoragePricing, TPU_V5E, TpuChipSpec,
+                   lifecycle_annual_cost, placement_cost)
+from .elastic import Provisioner, ProvisioningModel, ScalingPolicy
+from .lifecycle import (LifecyclePolicy, ObjectArchivedError, ObjectStore,
+                        SecureStorage, Tier)
+from .market import DEFAULT_ZONES, AvailabilityZone, SpotMarket
+from .placement import PlacementDecision, PlacementPolicy
+from .scheduler import (ExecutableRegistry, JobContext, JobQueue, JobSpec,
+                        JobStatus, KottaService, StateStore, Worker)
+from .security import (AuditLog, AuthorizationError, Policy, PolicyEngine,
+                       Principal, Role, SecurityError, SessionToken,
+                       TokenExpiredError, allow, deny, install_standard_roles,
+                       make_dataset_role)
+from .simulator import (ElasticSimulator, SimJob, SimReport,
+                        make_paper_workload, run_table7c)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

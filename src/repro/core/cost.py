@@ -1,0 +1,201 @@
+"""Cost models (paper §V, §VII-B, §VII-E).
+
+Reproduces, with the paper's own constants:
+
+- S3-Standard / S3-Infrequent-Access / Glacier storage pricing and the
+  lifecycle-policy cost model, Eqs (1)-(3) / Table III.
+- Glacier retrieval (peak-rate) pricing, Eqs (1)-(2).
+- Cost-aware placement with inter-region egress, Eqs (4)-(5) / Fig 7.
+- EC2 on-demand/spot instance pricing used by Table VII-C.
+
+Note on Eq (3): as printed in the paper the active fraction ``A_data``
+multiplies the *Glacier* term, which cannot reproduce the paper's own
+Table III ($880.259 for STD30-IA60-Glacier at 3%). Solving the table
+backwards shows the intended semantics: the **active** fraction cycles
+through STD→IA (amortised ``(C_std + 2·C_ia)/3`` per month over the
+3-month window) while the **inactive** ``1 - A_data`` fraction rests in
+Glacier. With that reading we match all Table III rows to the cent:
+
+    STD30-IA60-Glacier(3%):  (C_std + 2·C_ia)/3 · 0.03 + C_gl · 0.97 = $880.26/yr
+    STD30-IA60-Glacier(10%): ... = $974.20/yr
+
+The paper also uses decimal units (10 TB = 10,000 GB); we follow suit.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+GB = 1.0  # all sizes in this module are decimal GB, as in the paper
+
+
+@dataclass(frozen=True)
+class StoragePricing:
+    """2016-era AWS storage prices (paper Table III / Fig 2)."""
+
+    # S3-Standard tiered $/GB-month: first 1 TB, next 49 TB, beyond.
+    s3_std_tiers: tuple[tuple[float, float], ...] = (
+        (1_000.0, 0.0300),
+        (49_000.0, 0.0295),
+        (math.inf, 0.0290),
+    )
+    s3_ia_per_gb_month: float = 0.0125
+    glacier_per_gb_month: float = 0.0070
+    ebs_per_gb_month: float = 0.1000          # gp2, for the static-EBS strawman
+    glacier_free_monthly_frac: float = 0.05   # 5% of stored data/month free
+    glacier_retrieval_hours: float = 4.0      # paper: avg retrieval time
+    glacier_retrieval_per_gb_hour: float = 0.011  # $ per GB/hr of peak rate
+    inter_region_transfer_per_gb: float = 0.020   # paper ref [10]
+    s3_request_per_10k: float = 0.004             # noted as negligible
+
+
+@dataclass(frozen=True)
+class ComputePricing:
+    """2016-era EC2 prices for the instance types in §VII."""
+
+    on_demand_per_hour: dict[str, float] = field(default_factory=lambda: {
+        "m4.xlarge": 0.239,   # §VII-D throughput experiment
+        "c4.8xlarge": 1.675,  # §VII-E cost-aware provisioning
+        "r3.8xlarge": 2.660,
+    })
+    # Long-run average spot discount observed in the paper's Table VII-C
+    # ($10.26 spot vs $74.57 on-demand for the same node-hours).
+    typical_spot_fraction: float = 0.138
+
+
+def s3_std_monthly(gb: float, pricing: StoragePricing | None = None) -> float:
+    """Tiered S3-Standard $/month for ``gb`` stored."""
+    p = pricing or StoragePricing()
+    remaining, cost = gb, 0.0
+    for tier_gb, rate in p.s3_std_tiers:
+        take = min(remaining, tier_gb)
+        cost += take * rate
+        remaining -= take
+        if remaining <= 0:
+            break
+    return cost
+
+
+def s3_ia_monthly(gb: float, pricing: StoragePricing | None = None) -> float:
+    p = pricing or StoragePricing()
+    return gb * p.s3_ia_per_gb_month
+
+
+def glacier_monthly(gb: float, pricing: StoragePricing | None = None) -> float:
+    p = pricing or StoragePricing()
+    return gb * p.glacier_per_gb_month
+
+
+def glacier_retrieval_monthly(
+    daily_peak_gb: float,
+    glacier_stored_gb: float,
+    pricing: StoragePricing | None = None,
+) -> float:
+    """Paper Eqs (1)-(2): peak-rate Glacier retrieval fee for one month.
+
+    ``daily_peak_gb`` is the largest single-day retrieval volume, assumed to be
+    pulled within ``glacier_retrieval_hours`` (4 h). The free quota is 5% of
+    stored data per month, pro-rated daily and spread over the same window.
+    """
+    p = pricing or StoragePricing()
+    tx_time = p.glacier_retrieval_hours
+    tx_peak = daily_peak_gb / tx_time                                   # Eq (1)
+    tx_quota = glacier_stored_gb * p.glacier_free_monthly_frac / (30 * tx_time)
+    if tx_peak <= tx_quota:
+        return 0.0                                                       # Eq (2)
+    return (tx_peak - tx_quota) * p.glacier_retrieval_per_gb_hour * 720.0
+
+
+@dataclass(frozen=True)
+class LifecycleCost:
+    storage_annual: float
+    access_annual: float
+    access_hours: float  # retrieval latency exposure (0 when no Glacier stage)
+
+
+def lifecycle_annual_cost(
+    policy: str,
+    total_gb: float,
+    active_frac: float = 0.0,
+    annual_recalls: int = 1,
+    pricing: StoragePricing | None = None,
+) -> LifecycleCost:
+    """Annual cost of a storage strategy over ``total_gb`` (paper Table III).
+
+    ``policy`` is one of the paper's strategies:
+      ``"STD"`` | ``"IA"`` | ``"GLACIER"`` | ``"STD30-IA"`` | ``"STD30-IA60-GLACIER"``
+    ``active_frac`` is A_data — the fraction of data touched within a 3-month
+    window (paper: 3-10%). ``annual_recalls`` is how many times per year the
+    active set is pulled back out of Glacier (for strategies that archive it).
+    """
+    p = pricing or StoragePricing()
+    policy = policy.upper()
+    std_mo = s3_std_monthly(total_gb, p)
+    ia_mo = s3_ia_monthly(total_gb, p)
+    gl_mo = glacier_monthly(total_gb, p)
+
+    if policy == "STD":
+        return LifecycleCost(12 * std_mo, 0.0, 0.0)
+    if policy == "IA":
+        return LifecycleCost(12 * ia_mo, 0.0, 0.0)
+    if policy == "GLACIER":
+        # Everything lives in Glacier; every month the working set (A_data
+        # spread over its 3-month window) must be recalled in a one-day burst.
+        burst = total_gb * active_frac / 3.0
+        fee = glacier_retrieval_monthly(burst, total_gb, p)
+        return LifecycleCost(12 * gl_mo, fee * 12, p.glacier_retrieval_hours)
+    if policy == "STD30-IA":
+        # Month 1 in STD, 11 months in IA (no access ⇒ everything ages out).
+        return LifecycleCost(std_mo + 11 * ia_mo, 0.0, 0.0)
+    if policy in ("STD30-IA60-GLACIER", "STD30-IA60-GL"):
+        # Active fraction cycles STD(1mo)→IA(2mo); inactive rests in Glacier.
+        cycle_mo = (std_mo + 2 * ia_mo) / 3.0
+        storage_mo = cycle_mo * active_frac + gl_mo * (1.0 - active_frac)
+        # Occasional recalls of archived objects: the paper reports a fixed
+        # $169.73/yr for both the 3% and 10% policies; a one-day burst of the
+        # monthly working set (total·A/3) priced by Eqs (1)-(2) yields $165.0
+        # (the small residual comes from the paper mixing binary/decimal GB;
+        # with 10 TiB the same formula gives $169.75). We use decimal GB
+        # throughout, matching the storage column exactly.
+        burst = total_gb * active_frac / 3.0
+        fee = glacier_retrieval_monthly(burst, total_gb, p) * annual_recalls
+        return LifecycleCost(12 * storage_mo, fee, p.glacier_retrieval_hours)
+    raise ValueError(f"unknown storage policy {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware placement (paper §VII-E, Eqs (4)-(5), Fig 7)
+# ---------------------------------------------------------------------------
+
+def placement_cost(
+    instance_price_per_hour: float,
+    hours: float,
+    data_down_gb: float,
+    data_up_gb: float,
+    same_region_as_data: bool,
+    pricing: StoragePricing | None = None,
+) -> float:
+    """Total cost of a placement choice: P_total = P_i + P_transfer."""
+    p = pricing or StoragePricing()
+    compute = instance_price_per_hour * hours
+    if same_region_as_data:
+        transfer = 0.0                                                   # Eq (5)
+    else:
+        transfer = (data_down_gb + data_up_gb) * p.inter_region_transfer_per_gb
+    return compute + transfer                                            # Eq (4)
+
+
+# ---------------------------------------------------------------------------
+# Roofline hardware constants (assignment: TPU v5e-class target)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TpuChipSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12   # FLOP/s
+    hbm_bandwidth: float = 819e9      # B/s
+    ici_link_bandwidth: float = 50e9  # B/s per link
+    hbm_bytes: float = 16 * 1024**3
+
+
+TPU_V5E = TpuChipSpec()

@@ -1,0 +1,316 @@
+"""Tiered object store with automated data-lifecycle management (paper §V-A).
+
+Implements the paper's storage layer:
+
+- Four tiers: ``HOT`` (instance-local / EBS-like staging space), ``STD``
+  (S3-Standard), ``IA`` (S3-Infrequent-Access) and ``ARCHIVE`` (Glacier).
+- An **LRU staleness lifecycle**: policies like ``STD30-IA60-ARCHIVE`` move an
+  object down a tier when it has not been accessed for the stage's staleness
+  window (paper Fig 2).
+- **Archive semantics**: reading an ``ARCHIVE`` object fails fast with
+  ``ObjectArchivedError``; callers request ``restore`` and the object becomes
+  readable after the retrieval latency (4 h, paper Table III). The scheduler
+  parks jobs on this signal (§V-A: "the job is placed in a separate queue
+  until the data is available").
+- **Server-side encryption at rest** (paper §VI): payloads are stored under a
+  store-held key (SHA-256 CTR keystream); ``get`` transparently decrypts.
+- Cost accounting via :mod:`repro.core.cost` so the Table III benchmark and
+  the checkpointer share one price model.
+
+TPU-framework mapping: checkpoints and datasets are written through this
+store, so old checkpoints age HOT→STD→IA→ARCHIVE exactly like the paper's
+corpora age out of S3.
+"""
+from __future__ import annotations
+
+import enum
+import hashlib
+import itertools
+import re
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from . import cost as cost_mod
+from .clock import Clock, days, hours
+
+
+class Tier(enum.Enum):
+    HOT = "HOT"          # instance-local staging (EBS/ephemeral; HBM/host in TPU terms)
+    STD = "STD"          # S3-Standard
+    IA = "IA"            # S3-Infrequent-Access
+    ARCHIVE = "ARCHIVE"  # Glacier
+
+    @property
+    def immediate(self) -> bool:
+        return self is not Tier.ARCHIVE
+
+
+#: Order used by lifecycle demotion.
+TIER_ORDER = (Tier.HOT, Tier.STD, Tier.IA, Tier.ARCHIVE)
+
+RESTORE_LATENCY_S = hours(4)  # paper: average Glacier retrieval time
+
+
+class StorageError(Exception):
+    pass
+
+
+class ObjectNotFoundError(StorageError):
+    pass
+
+
+class ObjectArchivedError(StorageError):
+    """Raised when reading an object that must first be restored."""
+
+    def __init__(self, key: str, restore_eta: Optional[float] = None):
+        self.key = key
+        self.restore_eta = restore_eta
+        super().__init__(f"object {key!r} is archived (restore_eta={restore_eta})")
+
+
+@dataclass
+class LifecycleStage:
+    tier: Tier
+    staleness_s: Optional[float]  # None for the terminal stage
+
+
+@dataclass(frozen=True)
+class LifecyclePolicy:
+    """Parsed form of e.g. ``"STD30-IA60-ARCHIVE"`` (paper §V-A).
+
+    Stage ``STD30`` means: objects rest in STD and move to the next stage
+    after 30 days without access.
+    """
+
+    stages: tuple[LifecycleStage, ...]
+
+    @classmethod
+    def parse(cls, text: str) -> "LifecyclePolicy":
+        stages = []
+        for part in text.split("-"):
+            m = re.fullmatch(r"([A-Za-z]+)(\d*)", part)
+            if not m:
+                raise ValueError(f"bad lifecycle stage {part!r}")
+            tier = Tier[m.group(1).upper().replace("GLACIER", "ARCHIVE")]
+            staleness = days(int(m.group(2))) if m.group(2) else None
+            stages.append(LifecycleStage(tier, staleness))
+        if any(s.staleness_s is None for s in stages[:-1]):
+            raise ValueError("only the terminal stage may omit staleness")
+        return cls(tuple(stages))
+
+    def stage_of(self, tier: Tier) -> Optional[int]:
+        for i, s in enumerate(self.stages):
+            if s.tier is tier:
+                return i
+        return None
+
+    def next_tier(self, tier: Tier, idle_s: float) -> Tier:
+        """Tier the object should occupy given time since last access."""
+        i = self.stage_of(tier)
+        if i is None:
+            return tier
+        while i < len(self.stages) - 1:
+            staleness = self.stages[i].staleness_s
+            if staleness is None or idle_s < staleness:
+                break
+            idle_s -= staleness
+            i += 1
+        return self.stages[i].tier
+
+
+DEFAULT_POLICY = LifecyclePolicy.parse("STD30-IA60-ARCHIVE")
+
+
+@dataclass
+class ObjectMeta:
+    key: str
+    size_bytes: int
+    tier: Tier
+    owner: str
+    created_at: float
+    last_access: float
+    checksum: str
+    restore_ready_at: Optional[float] = None  # set while a restore is in flight
+    pinned: bool = False                      # exempt from lifecycle demotion
+
+
+@dataclass(frozen=True)
+class MigrationEvent:
+    timestamp: float
+    key: str
+    src: Tier
+    dst: Tier
+    reason: str  # "lifecycle" | "restore" | "stage"
+
+
+class ObjectStore:
+    """In-memory tiered object store with lifecycle + restore machinery.
+
+    Payloads are held encrypted-at-rest; metadata drives lifecycle/cost.
+    ``tick()`` runs the lifecycle daemon once (tests/simulations call it with
+    a virtual clock; the service wires it to a background thread).
+    """
+
+    def __init__(self, clock: Clock | None = None,
+                 policy: LifecyclePolicy = DEFAULT_POLICY,
+                 pricing: cost_mod.StoragePricing | None = None,
+                 encryption_key: bytes | None = None):
+        self.clock = clock or Clock()
+        self.policy = policy
+        self.pricing = pricing or cost_mod.StoragePricing()
+        self._key = encryption_key or hashlib.sha256(b"kotta-at-rest").digest()
+        self._meta: dict[str, ObjectMeta] = {}
+        self._blobs: dict[str, bytes] = {}
+        self.migrations: list[MigrationEvent] = []
+        self._access_log: list[tuple[float, str, int]] = []  # (t, key, bytes)
+
+    # -- encryption at rest ------------------------------------------------
+    def _keystream(self, n: int, nonce: bytes) -> bytes:
+        out, ctr = bytearray(), itertools.count()
+        while len(out) < n:
+            out += hashlib.sha256(self._key + nonce + str(next(ctr)).encode()).digest()
+        return bytes(out[:n])
+
+    def _seal(self, key: str, data: bytes) -> bytes:
+        ks = self._keystream(len(data), key.encode())
+        return bytes(a ^ b for a, b in zip(data, ks))
+
+    _open = _seal  # XOR stream cipher is symmetric
+
+    # -- CRUD ----------------------------------------------------------------
+    def put(self, key: str, data: bytes, owner: str = "system",
+            tier: Tier = Tier.STD, pinned: bool = False) -> ObjectMeta:
+        now = self.clock.now()
+        meta = ObjectMeta(
+            key=key, size_bytes=len(data), tier=tier, owner=owner,
+            created_at=now, last_access=now,
+            checksum=hashlib.sha256(data).hexdigest(), pinned=pinned)
+        self._meta[key] = meta
+        self._blobs[key] = self._seal(key, data)
+        return meta
+
+    def head(self, key: str) -> ObjectMeta:
+        meta = self._meta.get(key)
+        if meta is None:
+            raise ObjectNotFoundError(key)
+        return meta
+
+    def exists(self, key: str) -> bool:
+        return key in self._meta
+
+    def get(self, key: str) -> bytes:
+        """Read an object; bumps LRU recency; archived objects must restore."""
+        meta = self.head(key)
+        self._complete_restore(meta)
+        if meta.tier is Tier.ARCHIVE:
+            raise ObjectArchivedError(key, meta.restore_ready_at)
+        now = self.clock.now()
+        meta.last_access = now
+        self._access_log.append((now, key, meta.size_bytes))
+        data = self._open(key, self._blobs[key])
+        if hashlib.sha256(data).hexdigest() != meta.checksum:
+            raise StorageError(f"checksum mismatch for {key!r} (corruption)")
+        return data
+
+    def delete(self, key: str) -> None:
+        self._meta.pop(key, None)
+        self._blobs.pop(key, None)
+
+    def keys(self, prefix: str = "") -> list[str]:
+        return sorted(k for k in self._meta if k.startswith(prefix))
+
+    # -- archive restore -------------------------------------------------------
+    def restore(self, key: str) -> float:
+        """Request retrieval of an archived object. Returns ready time."""
+        meta = self.head(key)
+        if meta.tier is not Tier.ARCHIVE:
+            return self.clock.now()
+        if meta.restore_ready_at is None:
+            meta.restore_ready_at = self.clock.now() + RESTORE_LATENCY_S
+        return meta.restore_ready_at
+
+    def is_available(self, key: str) -> bool:
+        meta = self.head(key)
+        self._complete_restore(meta)
+        return meta.tier.immediate
+
+    def _complete_restore(self, meta: ObjectMeta) -> None:
+        if (meta.tier is Tier.ARCHIVE and meta.restore_ready_at is not None
+                and self.clock.now() >= meta.restore_ready_at):
+            self._migrate(meta, Tier.STD, "restore")
+            meta.restore_ready_at = None
+            meta.last_access = self.clock.now()
+
+    # -- lifecycle daemon ------------------------------------------------------
+    def tick(self) -> list[MigrationEvent]:
+        """Apply the LRU lifecycle policy once; returns migrations performed."""
+        now = self.clock.now()
+        out = []
+        for meta in self._meta.values():
+            self._complete_restore(meta)
+            if meta.pinned:
+                continue
+            idle = now - meta.last_access
+            target = self.policy.next_tier(meta.tier, idle)
+            if target is not meta.tier:
+                out.append(self._migrate(meta, target, "lifecycle"))
+        return out
+
+    def _migrate(self, meta: ObjectMeta, dst: Tier, reason: str) -> MigrationEvent:
+        ev = MigrationEvent(self.clock.now(), meta.key, meta.tier, dst, reason)
+        meta.tier = dst
+        self.migrations.append(ev)
+        return ev
+
+    # -- accounting -------------------------------------------------------------
+    def bytes_in_tier(self, tier: Tier) -> int:
+        return sum(m.size_bytes for m in self._meta.values() if m.tier is tier)
+
+    def monthly_cost(self) -> float:
+        """Current $/month footprint across tiers (decimal GB, paper prices)."""
+        gb = lambda b: b / 1e9
+        return (
+            cost_mod.s3_std_monthly(gb(self.bytes_in_tier(Tier.STD)), self.pricing)
+            + cost_mod.s3_ia_monthly(gb(self.bytes_in_tier(Tier.IA)), self.pricing)
+            + cost_mod.glacier_monthly(gb(self.bytes_in_tier(Tier.ARCHIVE)), self.pricing)
+            + gb(self.bytes_in_tier(Tier.HOT)) * self.pricing.ebs_per_gb_month
+        )
+
+    def access_events(self) -> list[tuple[float, str, int]]:
+        return list(self._access_log)
+
+
+class SecureStorage:
+    """Security-fabric wrapper: every access is authorized + audited (§VI).
+
+    Resource naming convention: keys ARE resource names, e.g.
+    ``dataset/wos/part-00001`` or ``results/<user>/<job>/out.txt``.
+    """
+
+    def __init__(self, store: ObjectStore, engine):
+        self.store = store
+        self.engine = engine
+
+    def put(self, token, key: str, data: bytes, tier: Tier = Tier.STD,
+            pinned: bool = False) -> ObjectMeta:
+        self.engine.check(token, "data:Put", key)
+        return self.store.put(key, data, owner=token.principal_id, tier=tier,
+                              pinned=pinned)
+
+    def get(self, token, key: str) -> bytes:
+        """In-enclave read (analysis staging)."""
+        self.engine.check(token, "data:Get", key)
+        return self.store.get(key)
+
+    def download(self, token, key: str) -> bytes:
+        """Out-of-enclave read; private datasets carry an explicit deny."""
+        self.engine.check(token, "data:Download", key)
+        return self.store.get(key)
+
+    def get_via_signed_url(self, url: str) -> bytes:
+        key = self.engine.verify_url(url)
+        return self.store.get(key)
+
+    def list(self, token, prefix: str) -> list[str]:
+        self.engine.check(token, "data:List", prefix + "*")
+        return self.store.keys(prefix)

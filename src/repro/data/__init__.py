@@ -1,0 +1,3 @@
+from .pipeline import PrefetchLoader, SyntheticCorpus, TokenLoader
+
+__all__ = ["PrefetchLoader", "SyntheticCorpus", "TokenLoader"]

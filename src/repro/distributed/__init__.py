@@ -1,0 +1,5 @@
+from .sharding import (DEFAULT_RULES, ShardingRules, activate_rules,
+                       current_rules, input_sharding, param_sharding, shard)
+
+__all__ = ["DEFAULT_RULES", "ShardingRules", "activate_rules", "current_rules",
+           "input_sharding", "param_sharding", "shard"]

@@ -1,0 +1,114 @@
+"""Ring attention over a mesh axis (Liu et al., arXiv:2310.01889 — blockwise
+ring attention), implemented with ``jax.shard_map`` + ``lax.ppermute``.
+
+Motivation (EXPERIMENTS §Perf A4): architectures whose head count does not
+divide the model axis (Arctic 56H, StarCoder2 36H, PaliGemma 8H) leave
+attention *replicated* across that axis — 16x redundant FLOPs and tile
+traffic. Plain sequence sharding fixes the redundancy but GSPMD reshards the
+residual stream at every layer boundary. Ring attention instead:
+
+- shards Q, K, V by *sequence* over the ring axis (inputs arrive already
+  batch/seq-sharded, no resharding of the residual stream);
+- each of the R devices loops R times over its local Q shard, combining with
+  the KV shard currently resident, then ``ppermute``s the KV block to its
+  ring neighbour — online-softmax accumulators merge the partial results
+  exactly (same recurrence as the flash kernel);
+- per-device wire traffic is (R-1)/R · |KV shard| · R = |KV| — the same bytes
+  a single all-gather moves, but in R pipelined hops that overlap with the
+  per-block attention compute on real hardware, and the full KV never
+  materializes on any device.
+
+Causality is handled by absolute positions carried with each KV block.
+Oracle-tested against dense attention (tests/test_ring_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import MASK_VALUE
+
+
+def _local_attention(q, k, v, q_pos, kv_pos, causal):
+    """Partial attention of local q against one KV block; returns
+    (m, l, acc) online-softmax accumulators (fp32)."""
+    b, sq, nkv, g, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        s = jnp.where(mask[None, None, None], s, MASK_VALUE)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def _merge(m1, l1, a1, m2, l2, a2):
+    """Combine two online-softmax partials."""
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m)
+    w2 = jnp.exp(m2 - m)
+    return m, l1 * w1 + l2 * w2, a1 * w1[..., None] + a2 * w2[..., None]
+
+
+def ring_attention(q, k, v, *, axis_name: str, causal: bool = True,
+                   q_offset=None):
+    """Inside shard_map: q,k,v are the LOCAL sequence shards
+    (B, S_local, H|KV, hd); the global sequence is the ring-axis
+    concatenation. Returns the local output shard (B, S_local, H, hd)."""
+    b, sq, h, hd = q.shape
+    nkv = k.shape[2]
+    qg = q.reshape(b, sq, nkv, h // nkv, hd)
+    r = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    if q_offset is None:
+        q_pos = idx * sq + jnp.arange(sq)
+    else:
+        q_pos = q_offset + jnp.arange(sq)
+
+    m0 = jnp.full((b, nkv, h // nkv, sq), MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((b, nkv, h // nkv, sq), jnp.float32)
+    a0 = jnp.zeros((b, nkv, h // nkv, sq, hd), jnp.float32)
+    perm = [(i, (i + 1) % r) for i in range(r)]
+
+    @jax.checkpoint  # flash semantics: recompute ring blocks in backward
+    def body(carry, step):
+        m, l, acc, k_blk, v_blk, kv_owner = carry
+        kv_pos = kv_owner * k_blk.shape[1] + jnp.arange(k_blk.shape[1])
+        m2, l2, a2 = _local_attention(qg, k_blk, v_blk, q_pos, kv_pos, causal)
+        m, l, acc = _merge(m, l, acc, m2, l2, a2)
+        # stream the KV block to the next ring neighbour
+        k_blk = lax.ppermute(k_blk, axis_name, perm)
+        v_blk = lax.ppermute(v_blk, axis_name, perm)
+        kv_owner = lax.ppermute(kv_owner, axis_name, perm)
+        return (m, l, acc, k_blk, v_blk, kv_owner), None
+
+    init = (m0, l0, a0, k, v, idx)
+    (m, l, acc, _, _, _), _ = lax.scan(body, init, jnp.arange(r))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def ring_attention_sharded(q, k, v, mesh, *, axis_name: str = "model",
+                           causal: bool = True, batch_axes=("pod", "data")):
+    """jit-level wrapper: shard (B, S, H, hd) inputs by (batch, seq) and run
+    the ring. Usable directly inside a pjit'd step function."""
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+    spec_q = P(baxes if baxes else None, axis_name, None, None)
+    fn = functools.partial(ring_attention, axis_name=axis_name, causal=causal)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(spec_q, spec_q, spec_q),
+        out_specs=spec_q,
+        check_vma=False,
+    )(q, k, v)

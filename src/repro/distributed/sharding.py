@@ -1,0 +1,131 @@
+"""Logical-axis sharding rule engine.
+
+Model code annotates tensors with *logical* axis names (``"batch"``,
+``"heads"``, ``"experts"`` …). A ``ShardingRules`` context maps those names to
+mesh axes, with automatic divisibility fallback (an axis whose size does not
+divide the mesh extent is left unsharded — e.g. Arctic's 56 query heads on a
+16-way model axis). The same model code therefore runs unmodified on a single
+CPU device, a (data, model) pod, or a (pod, data, model) multi-pod mesh.
+
+Per-architecture overrides come from ``ModelConfig.sharding_overrides``;
+per-shape overrides (e.g. sequence-sharding the 500k KV cache when
+global_batch=1) from the launch layer.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Optional, Union
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, tuple[str, ...]]
+
+#: logical axis -> mesh axis (or tuple of mesh axes). Axes absent from the
+#: active mesh are dropped, so one rule set serves 1-pod and 2-pod meshes.
+DEFAULT_RULES: dict[str, AxisRule] = {
+    "batch": ("pod", "data"),
+    "moe_groups": ("pod", "data"),
+    "vocab": "model",
+    "embed": "data",          # FSDP over parameter rows
+    "heads": "model",
+    "kv_heads": "model",
+    # context parallelism for archs whose head count doesn't divide the model
+    # axis (arctic 56H, starcoder2 36H, paligemma 8H): override to "model" so
+    # attention work shards by sequence instead of being 16x replicated.
+    "attn_seq": None,
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "moe_mlp": None,
+    "layers": None,
+    "seq": None,
+    "cache_seq": None,        # long-context decode overrides this to "data"
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "frontend": None,
+}
+
+_tls = threading.local()
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, AxisRule] = field(default_factory=dict)
+
+    def __post_init__(self):
+        merged = dict(DEFAULT_RULES)
+        merged.update(self.rules)
+        self.rules = merged
+
+    # -- resolution ------------------------------------------------------------
+    def mesh_axes_for(self, logical: Optional[str]) -> tuple[str, ...]:
+        rule = self.rules.get(logical) if logical else None
+        if rule is None:
+            return ()
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        return tuple(a for a in axes if a in self.mesh.shape)
+
+    def _extent(self, axes: tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+    def spec_for(self, shape: tuple[int, ...],
+                 axes: tuple[Optional[str], ...]) -> P:
+        """PartitionSpec with divisibility fallback; mesh axes used once."""
+        used: set[str] = set()
+        entries = []
+        for dim, logical in zip(shape, axes):
+            mesh_axes = tuple(a for a in self.mesh_axes_for(logical)
+                              if a not in used)
+            if mesh_axes and dim % self._extent(mesh_axes) == 0:
+                entries.append(mesh_axes[0] if len(mesh_axes) == 1 else mesh_axes)
+                used.update(mesh_axes)
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    def named(self, shape: tuple[int, ...],
+              axes: tuple[Optional[str], ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextmanager
+def activate_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def shard(x, axes: tuple[Optional[str], ...]):
+    """Annotate ``x`` with logical axes; no-op outside a rules context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} vs rank-{x.ndim} tensor")
+    spec = rules.spec_for(x.shape, axes)
+    return lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def param_sharding(layout, rules: ShardingRules):
+    """NamedSharding tree for a parameter layout (for jit in_shardings)."""
+    from repro.models.params import tree_map_specs  # lazy: avoids import cycle
+    return tree_map_specs(lambda s: rules.named(s.shape, s.axes), layout)
+
+
+def input_sharding(rules: ShardingRules, shape: tuple[int, ...],
+                   axes: tuple[Optional[str], ...]) -> NamedSharding:
+    return rules.named(shape, axes)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Cloud Kotta itself has no kernel-level contribution (it is a scheduling /
+storage / security paper), but the training & serving substrate it schedules
+does: attention, the Mamba2 SSD scan and RMSNorm dominate step time. Each
+kernel ships with ``ops.py`` (jit wrapper) and ``ref.py`` (pure-jnp oracle)
+and is validated in interpret mode on CPU (tests/test_kernels.py); real-TPU
+dispatch is selected by ``ModelConfig.attn_impl="pallas"``.
+"""
+from .flash_attention import attention_reference, flash_attention
+from .mamba_scan import mamba_chunk_scan, ssd_reference
+from .rmsnorm import rmsnorm, rmsnorm_reference
+
+__all__ = ["flash_attention", "attention_reference", "mamba_chunk_scan",
+           "ssd_reference", "rmsnorm", "rmsnorm_reference"]

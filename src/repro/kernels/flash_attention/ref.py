@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal optional)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd) -> (B,Sq,H,hd). fp32 softmax."""
+    b, sq, h, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = h // nkv
+    qg = q.reshape(b, sq, nkv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import mamba_chunk_scan
+from .ref import ssd_reference
+
+__all__ = ["mamba_chunk_scan", "ssd_reference"]

@@ -1,0 +1,111 @@
+"""Mamba2 / SSD chunk-scan Pallas TPU kernel.
+
+TPU-native blocking of the state-space-duality algorithm (Dao & Gu,
+arXiv:2405.21060 §6). One grid step processes one (batch, head-block) chunk
+of L timesteps entirely in VMEM:
+
+- Grid = (B·H/BH, S/L); the chunk axis is innermost (sequential), the SSM
+  state (BH, N, P) persists in VMEM scratch across chunks — the recurrence
+  never round-trips HBM.
+- Per chunk the kernel computes, all on the MXU:
+    CB^T (L,L) ⊙ segsum-decay, masked lower-triangular -> intra-chunk Y
+    C · h_state (L,P) -> inter-chunk Y
+    decay-weighted B^T X (N,P) -> state update.
+- VMEM @ L=128, N=64, P=64, BH=8:
+    x,dt,B,C tiles ~ (128·64·4)·3 + s-tile 128²·4 + state 8·64·64·4
+    ≈ 0.5 MiB — small; BH (heads per block) is the occupancy lever.
+- The (L,L) decay matrix is built from a cumulative log-sum (segsum) with
+  broadcasted iota, not a gather — MXU/VPU friendly.
+
+Layout note: heads are blocked on the leading grid axis so one kernel
+instance owns BH heads; B/C are shared across heads (n_groups=1) and staged
+once per chunk.
+
+Validated against ``ref.py`` (sequential recurrence) in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (L, BH, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (L, BH)
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))  # (BH,)
+    bmat = b_ref[0].astype(jnp.float32)       # (L, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (L, N)
+
+    la = jnp.cumsum(dt * a[None, :], axis=0)  # (L, BH) log-decay prefix
+    # intra-chunk: Y[l] += sum_{m<=l} (C_l.B_m) exp(la_l - la_m) dt_m x_m
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = la[:, None, :] - la[None, :, :]                     # (L, M, BH)
+    decay = jnp.where((li >= mi)[:, :, None], jnp.exp(seg), 0.0)
+    w = cb[:, :, None] * decay                                # (L, M, BH)
+    wx = dt[:, :, None] * x                                   # (L, BH, P)
+    y = jnp.einsum("lmh,mhp->lhp", w, wx)
+    # inter-chunk: Y[l] += C_l · (exp(la_l) ⊙ h_prev)
+    y = y + jnp.einsum("ln,lh,hnp->lhp", cmat, jnp.exp(la), h_scr[...])
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: h = exp(la_last) h + sum_m exp(la_last - la_m) dt_m B_m x_m^T
+    w_state = jnp.exp(la[-1:, :] - la) * dt                   # (L, BH)
+    st = jnp.einsum("ln,lh,lhp->hnp", bmat, w_state, x)
+    h_scr[...] = jnp.exp(la[-1, :])[:, None, None] * h_scr[...] + st
+
+
+def ssd_scan(x, dt, a_log, bmat, cmat, *, chunk: int = 128,
+             head_block: int = 8, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); bmat/cmat: (B,S,N).
+
+    Returns y: (B,S,H,P) (no D-skip/gating — those fuse outside).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    head_block = min(head_block, h)
+    if s % chunk or h % head_block:
+        raise ValueError(f"S {s} % chunk {chunk} or H {h} % block {head_block}")
+    nb = h // head_block
+
+    # (B·nb, S, BH, ...) streams
+    xr = x.reshape(b, s, nb, head_block, p).transpose(0, 2, 1, 3, 4) \
+          .reshape(b * nb, s, head_block, p)
+    dtr = dt.reshape(b, s, nb, head_block).transpose(0, 2, 1, 3) \
+            .reshape(b * nb, s, head_block)
+    ar = jnp.tile(a_log.reshape(nb, head_block), (b, 1))      # (B·nb, BH)
+    br = jnp.broadcast_to(bmat[:, None], (b, nb, s, n)).reshape(b * nb, s, n)
+    cr = jnp.broadcast_to(cmat[:, None], (b, nb, s, n)).reshape(b * nb, s, n)
+
+    grid = (b * nb, s // chunk)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, head_block, p), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, chunk, head_block), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, head_block), lambda i, c: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, head_block, p),
+                               lambda i, c: (i, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * nb, s, head_block, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((head_block, n, p), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+    return out.reshape(b, nb, s, head_block, p).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, s, h, p)

@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def mamba_chunk_scan(x, dt, a_log, bmat, cmat, *, chunk: int = 128,
+                     head_block: int = 8, interpret: bool = False):
+    return ssd_scan(x, dt, a_log, bmat, cmat, chunk=chunk,
+                    head_block=head_block, interpret=interpret)

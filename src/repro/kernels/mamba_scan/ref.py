@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Mamba2/SSD chunk kernel: sequential recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, a_log, bmat, cmat):
+    """Sequential SSD recurrence.
+
+    x: (B,S,H,P); dt: (B,S,H); a_log: (H,); bmat/cmat: (B,S,N).
+    Returns (y: (B,S,H,P), h_final: (B,H,N,P)). fp32 throughout.
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    hstate = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        dt_t = dt[:, t].astype(jnp.float32)                   # (B,H)
+        decay = jnp.exp(dt_t * a)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t,
+                         bmat[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32))
+        hstate = decay[:, :, None, None] * hstate + upd
+        ys.append(jnp.einsum("bn,bhnp->bhp",
+                             cmat[:, t].astype(jnp.float32), hstate))
+    return jnp.stack(ys, axis=1).astype(x.dtype), hstate

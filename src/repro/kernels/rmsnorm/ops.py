@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import rmsnorm_fused
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    return rmsnorm_fused(x, weight, eps, block_rows, interpret)

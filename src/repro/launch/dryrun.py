@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("KOTTA_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: abstract inputs,
+AOT compile on 256/512 placeholder devices, then memory_analysis (fits?),
+cost_analysis + while-aware HLO parsing (roofline terms).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_NAMES, SHAPES, get_config, get_shape, runnable)
+from repro.core.cost import TPU_V5E
+from repro.distributed.sharding import ShardingRules, activate_rules
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.input_specs import build_cell, shape_rule_overrides
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None, microbatches: int = 1,
+             rule_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = get_shape(shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "config_overrides": overrides or {}, "microbatches": microbatches,
+              "rule_overrides": rule_overrides or {}}
+
+    ok, why = runnable(cfg, shape)
+    if not ok:
+        result.update(status="skipped", reason=why)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    rules = ShardingRules(mesh, {**cfg.sharding_overrides,
+                                 **shape_rule_overrides(cfg, shape),
+                                 **(rule_overrides or {})})
+    step, args, shardings = build_cell(cfg, shape, rules,
+                                       microbatches=microbatches)
+    donate = (0, 1) if shape.kind == "train" else ()
+    t0 = time.time()
+    with jax.set_mesh(mesh), activate_rules(rules):
+        lowered = jax.jit(step, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    rep = analyze_hlo(hlo)
+
+    chip = TPU_V5E
+    per_dev_bytes = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    model_flops = _model_flops(cfg, shape)
+    t_compute = rep.dot_flops / chip.peak_bf16_flops
+    t_memory = rep.bytes_accessed / chip.hbm_bandwidth
+    t_memory_fused = rep.bytes_accessed_fused / chip.hbm_bandwidth
+    t_collective = rep.collective_wire_bytes / chip.ici_link_bandwidth
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    model_time = model_flops / (n_dev * chip.peak_bf16_flops)
+    roofline_frac = model_time / max(max(terms.values()), 1e-30)
+
+    result.update(
+        status="ok",
+        devices=n_dev,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory={"argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total": per_dev_bytes,
+                "fits_hbm": bool(per_dev_bytes <= chip.hbm_bytes)},
+        cost_analysis={"flops": ca.get("flops", 0.0),
+                       "bytes_accessed": ca.get("bytes accessed", 0.0)},
+        hlo={"dot_flops": rep.dot_flops, "dot_count": rep.dot_count,
+             "kernel_region_flops": rep.kernel_region_flops,
+             "bytes_accessed": rep.bytes_accessed,
+             "bytes_accessed_fused": rep.bytes_accessed_fused,
+             "kernel_region_bytes": rep.kernel_region_bytes,
+             "collective_wire_bytes": rep.collective_wire_bytes,
+             "collective_by_op": rep.collective_by_op,
+             "collective_count": rep.collective_count,
+             "while_trips": rep.while_trips},
+        roofline={**terms, "memory_fused_s": t_memory_fused,
+                  "bottleneck": bottleneck,
+                  "model_flops": model_flops,
+                  "hlo_flops_global": rep.dot_flops * n_dev,
+                  "useful_flops_ratio":
+                      model_flops / max(rep.dot_flops * n_dev, 1e-30),
+                  "model_time_s": model_time,
+                  "roofline_fraction": roofline_frac},
+    )
+    return result
+
+
+def _model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS per step: 6·N_active·D train, 2·N_active·D fwd."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def cell_path(out_dir: str, arch: str, shape: str, mesh: str,
+              tag: str = "") -> str:
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf variants)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule logical=mesh_axis (repeatable)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = _coerce(v)
+    rule_overrides = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rule_overrides[k] = None if v in ("none", "None") else (
+            tuple(v.split(",")) if "," in v else v)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        cells.append((args.arch, args.shape))
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            path = cell_path(args.out, arch, shape, mesh_kind, args.tag)
+            if args.skip_existing and os.path.exists(path):
+                continue
+            try:
+                res = run_cell(arch, shape, mesh_kind, overrides,
+                               args.microbatches, rule_overrides)
+            except Exception as e:  # noqa: BLE001 - record and continue
+                res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-2000:]}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            _print_summary(res)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+def _coerce(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "True"):
+        return True
+    if v in ("false", "False"):
+        return False
+    return v
+
+
+def _print_summary(res: dict) -> None:
+    if res["status"] == "ok":
+        r = res["roofline"]
+        m = res["memory"]
+        print(f"[ok]   {res['arch']:<18} {res['shape']:<12} {res['mesh']:<6} "
+              f"compile={res['compile_s']:6.1f}s "
+              f"mem/dev={m['per_device_total']/2**30:6.2f}GiB "
+              f"fits={m['fits_hbm']} "
+              f"terms(c/m/x)={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+              f"{r['collective_s']:.2e}s bottleneck={r['bottleneck']} "
+              f"frac={r['roofline_fraction']:.3f}", flush=True)
+    elif res["status"] == "skipped":
+        print(f"[skip] {res['arch']:<18} {res['shape']:<12} {res['mesh']:<6} "
+              f"{res['reason']}", flush=True)
+    else:
+        print(f"[ERR]  {res['arch']:<18} {res['shape']:<12} {res['mesh']:<6} "
+              f"{res['error'][:140]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

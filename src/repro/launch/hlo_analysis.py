@@ -1,0 +1,310 @@
+"""Post-SPMD HLO analysis for the roofline report.
+
+``compiled.cost_analysis()`` on the CPU backend does not scale while-loop
+bodies by their trip counts, so a scanned 35-layer model would be accounted
+as one layer. This module parses ``compiled.as_text()`` directly:
+
+- builds the computation call graph (``body=``/``condition=``/``calls=``/
+  ``to_apply=``) and recovers **while trip counts** from the loop-condition
+  ``constant(N)`` compare;
+- counts **matmul FLOPs** from ``dot`` instructions (2·|result|·|contract|),
+  scaled by the enclosing computation's execution multiplier;
+- counts **memory traffic** as result bytes of executed *HBM-resident* ops
+  (dots, fusions, slices, copies, reduces, collectives — a fusion-optimistic
+  convention: raw elementwise ops are assumed fused into their consumers, as
+  the TPU backend does), write-once/read-once, documented in EXPERIMENTS.md;
+- splits traffic into kernel-eligible regions (``flash_tile``/``ssd_tile``/
+  ``mlstm_tile`` named_scopes) vs the rest, so the roofline can model the
+  Pallas-fused variant where those tiles never leave VMEM;
+- counts **collective wire bytes** per op with ring-algorithm conventions:
+  all-gather/all-to-all: |result|·(g-1)/g; all-reduce: 2·|result|·(g-1)/g;
+  reduce-scatter: |result|·(g-1); collective-permute: |result|.
+
+All numbers are per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALL_ATTR_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_info(text: str):
+    """First shape token in ``text`` -> (elements, bytes). Tuples: sum parts."""
+    total_elems = total_bytes = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_elems += elems
+        total_bytes += elems * _DTYPE_BYTES[dtype]
+    return total_elems, total_bytes
+
+
+def _result_shape(rhs: str):
+    """Shape of the instruction's result = first shape token(s) before op name."""
+    # rhs looks like: "f32[16,64]{1,0} dot(%a, %b), ..." or a tuple
+    m = re.match(r"^(\(?[a-z0-9]+\[[^\)]*?\)?)\s+[\w\-]+\(", rhs)
+    if m:
+        return _shape_info(m.group(1))
+    # fall back: first shape token
+    return _shape_info(rhs.split("(")[0])
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    is_entry: bool = False
+    is_fusion_like: bool = False  # reached via calls=/to_apply=
+
+
+#: scopes whose intermediates a Pallas kernel keeps in VMEM
+KERNEL_SCOPES = ("flash_tile", "ssd_tile", "mlstm_tile")
+
+#: ops that necessarily touch HBM even on a well-fused backend
+_HBM_OPS = frozenset({
+    "dot", "fusion", "custom-call", "convolution", "copy",
+    "dynamic-slice", "dynamic-update-slice", "transpose",
+    "reduce", "reduce-window", "gather", "scatter",
+    "concatenate", "pad", "sort", "cholesky", "rng",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+})
+
+#: "<shape>{layout} opcode(" — the opcode position in an instruction rhs
+_OPCODE_RE = re.compile(
+    r"^\(?[a-z0-9]+\[[^\]]*\][^\s]*(?:, [a-z0-9]+\[[^\]]*\][^\s]*)*\)?\s+([\w\-]+)\(")
+
+
+@dataclass
+class HloReport:
+    dot_flops: float = 0.0
+    kernel_region_flops: float = 0.0
+    bytes_written: float = 0.0
+    kernel_region_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_by_op: dict = field(default_factory=dict)
+    collective_count: int = 0
+    while_trips: dict = field(default_factory=dict)
+    dot_count: int = 0
+
+    @property
+    def bytes_accessed(self) -> float:
+        return 2.0 * self.bytes_written  # write-once / read-once convention
+
+    @property
+    def bytes_accessed_fused(self) -> float:
+        """Traffic when kernel-eligible tile regions stay in VMEM."""
+        return 2.0 * (self.bytes_written - self.kernel_region_bytes)
+
+
+def _opcode(rhs: str) -> str:
+    m = _OPCODE_RE.match(rhs)
+    return m.group(1) if m else ""
+
+
+def _is_kernel_tile_dot(rhs: str) -> bool:
+    """Attention/SSD/mLSTM tile dot: batched, f32 accumulator, rank >= 3."""
+    if _opcode(rhs) != "dot" or "lhs_batch_dims={}" in rhs:
+        return False
+    bm = re.search(r"lhs_batch_dims=\{([0-9,]*)\}", rhs)
+    if not bm or not bm.group(1):
+        return False
+    sm = _SHAPE_RE.match(rhs)
+    if not sm or sm.group(1) != "f32":
+        return False
+    dims = sm.group(2).split(",") if sm.group(2) else []
+    elems = 1
+    for d in dims:
+        elems *= int(d)
+    return len(dims) >= 3 and elems * 4 >= 1 << 20
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if header and not line.startswith(" "):
+            cur = Computation(header.group(2), is_entry=bool(header.group(1)))
+            comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and stripped:
+            cur.lines.append(stripped)
+    return comps
+
+
+def _while_trip(cond: Computation) -> int:
+    consts = [int(c) for ln in cond.lines for c in _CONST_RE.findall(ln)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution-count multiplier per computation via call-graph traversal."""
+    mult: dict[str, float] = defaultdict(float)
+    entries = [c for c in comps.values() if c.is_entry]
+    stack = [(c.name, 1.0) for c in entries]
+    seen_edges = set()
+    while stack:
+        name, m = stack.pop()
+        mult[name] += m
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ln in comp.lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trips = _while_trip(comps[cond_name]) if cond_name in comps else 1
+                edge = (name, body_name, ln[:60])
+                if edge not in seen_edges:
+                    seen_edges.add(edge)
+                    stack.append((body_name, m * trips))
+                continue
+            for callee in _CALL_ATTR_RE.findall(ln):
+                if callee in comps and "while(" not in ln:
+                    edge = (name, callee, ln[:60])
+                    if edge not in seen_edges:
+                        seen_edges.add(edge)
+                        stack.append((callee, m))
+    return dict(mult)
+
+
+_SKIP_BYTES_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+                   "bitcast(", "after-all(", "iota(")
+
+
+def analyze_hlo(hlo: str) -> HloReport:
+    comps = parse_computations(hlo)
+    mult = _multipliers(comps)
+    rep = HloReport()
+    rep.collective_by_op = {op: 0.0 for op in COLLECTIVE_OPS}
+
+    # Which computations count for byte traffic: entry + while bodies/conds.
+    body_like = set()
+    for c in comps.values():
+        for ln in c.lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                body_like.add(wm.group(1))
+                body_like.add(wm.group(2))
+                rep.while_trips[wm.group(2)] = (
+                    _while_trip(comps[wm.group(1)]) if wm.group(1) in comps else 1)
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        count_bytes = comp.is_entry or comp.name in body_like
+        # symbol table: instruction name -> dims of its result
+        symbols: dict[str, list[int]] = {}
+        for ln in comp.lines:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            name, rhs = dm.group(1), dm.group(2)
+            sm = _SHAPE_RE.search(rhs.split("(")[0] + "(")
+            if sm and sm.group(2):
+                symbols[name] = [int(d) for d in sm.group(2).split(",")]
+            elif sm:
+                symbols[name] = []
+        for ln in comp.lines:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            opcode = _opcode(rhs)
+            # ---- dot flops (anywhere, incl. fusion computations) ----------
+            if opcode == "dot":
+                res_elems, _res_b = _result_shape(rhs)
+                contract = 1
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                lhs_dims = None
+                # operand shapes: inline in long format, else via symbol table
+                operand_str = rhs.split("dot(", 1)[1].split(")")[0]
+                inline = _SHAPE_RE.findall(operand_str)
+                if inline and inline[0][1]:
+                    lhs_dims = [int(d) for d in inline[0][1].split(",")]
+                else:
+                    names = re.findall(r"%([\w\.\-]+)", operand_str)
+                    if names and names[0] in symbols:
+                        lhs_dims = symbols[names[0]]
+                if cm and lhs_dims:
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            contract *= lhs_dims[int(ci)]
+                rep.dot_flops += 2.0 * res_elems * contract * m
+                if _is_kernel_tile_dot(rhs):
+                    rep.kernel_region_flops += 2.0 * res_elems * contract * m
+                rep.dot_count += 1
+            # ---- collectives ------------------------------------------------
+            for op in COLLECTIVE_OPS:
+                if opcode == op:
+                    res_elems, res_bytes = _result_shape(rhs)
+                    gm = _GROUPS_RE.search(rhs)
+                    g = int(gm.group(2)) if gm else 2
+                    g = max(g, 2)
+                    if op == "all-gather":
+                        wire = res_bytes * (g - 1) / g
+                    elif op == "all-reduce":
+                        wire = 2.0 * res_bytes * (g - 1) / g
+                    elif op == "reduce-scatter":
+                        wire = res_bytes * (g - 1)
+                    elif op == "all-to-all":
+                        wire = res_bytes * (g - 1) / g
+                    else:
+                        wire = res_bytes
+                    rep.collective_wire_bytes += wire * m
+                    rep.collective_by_op[op] += wire * m
+                    rep.collective_count += int(m) if m >= 1 else 1
+                    break
+            # ---- byte traffic (fusion-optimistic: HBM-resident ops only) ----
+            if count_bytes and opcode in _HBM_OPS:
+                _, res_bytes = _result_shape(rhs)
+                eff_m = m
+                # dynamic-update-slice (incl. DUS-rooted fusions) writes one
+                # slice per invocation, aliasing the rest: inside a while body
+                # of T trips, the full buffer is written once per *caller*
+                # execution, not once per trip.
+                if "dynamic-update-slice" in dm.group(1) \
+                        or opcode == "dynamic-update-slice":
+                    eff_m = m / max(rep.while_trips.get(comp.name, 1), 1)
+                rep.bytes_written += res_bytes * eff_m
+                # Tile intermediates stay in VMEM under the Pallas kernels;
+                # streaming reads (dynamic-slice of K/V blocks) remain HBM
+                # traffic. Two detectors: named_scope metadata (elementwise/
+                # fusion ops keep it) and batch-dim f32 tile dots (XLA strips
+                # their metadata, but the shape signature is unambiguous —
+                # projection/expert GEMMs have no dot batch dims).
+                in_scope = (any(s in rhs for s in KERNEL_SCOPES)
+                            and opcode in ("dot", "fusion"))
+                if in_scope or _is_kernel_tile_dot(rhs):
+                    rep.kernel_region_bytes += res_bytes * m
+
+    return rep

@@ -1,0 +1,162 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape) cell.
+
+No device allocation happens here: abstract params, abstract optimizer state,
+abstract batches and abstract decode caches feed ``jit(...).lower()`` for the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules, param_sharding
+from repro.models import get_family
+from repro.models.params import abstract_params
+from repro.train import adamw
+from repro.train.train_step import (build_decode_step, build_encode_step,
+                                    build_prefill_step, build_train_step)
+
+BATCH_AXES = ("batch", None)
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(structs, logical_axes) for the input batch of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.frontend == "frame":
+            structs = {"frames": _struct((b, s, cfg.frontend_dim), "float32"),
+                       "labels": _struct((b, s), "int32"),
+                       "loss_mask": _struct((b, s), "float32")}
+            axes = {"frames": ("batch", None, None), "labels": BATCH_AXES,
+                    "loss_mask": BATCH_AXES}
+        elif cfg.frontend == "patch":
+            text = s - cfg.frontend_len
+            structs = {"tokens": _struct((b, text), "int32"),
+                       "labels": _struct((b, text), "int32"),
+                       "patches": _struct((b, cfg.frontend_len, cfg.frontend_dim),
+                                          "float32")}
+            axes = {"tokens": BATCH_AXES, "labels": BATCH_AXES,
+                    "patches": ("batch", None, None)}
+        else:
+            structs = {"tokens": _struct((b, s), "int32"),
+                       "labels": _struct((b, s), "int32")}
+            axes = {"tokens": BATCH_AXES, "labels": BATCH_AXES}
+        return structs, axes
+
+    if shape.kind == "prefill":
+        if cfg.frontend == "frame":
+            structs = {"frames": _struct((b, s, cfg.frontend_dim), "float32")}
+            axes = {"frames": ("batch", None, None)}
+        elif cfg.frontend == "patch":
+            structs = {"tokens": _struct((b, s - cfg.frontend_len), "int32"),
+                       "patches": _struct((b, cfg.frontend_len, cfg.frontend_dim),
+                                          "float32")}
+            axes = {"tokens": BATCH_AXES, "patches": ("batch", None, None)}
+        else:
+            structs = {"tokens": _struct((b, s), "int32")}
+            axes = {"tokens": BATCH_AXES}
+        return structs, axes
+
+    if shape.kind == "decode":
+        structs = {"tokens": _struct((b, 1), "int32"),
+                   "pos": _struct((b,), "int32")}
+        axes = {"tokens": BATCH_AXES, "pos": ("batch",)}
+        return structs, axes
+
+    raise ValueError(shape.kind)
+
+
+def _shard_tree(rules: ShardingRules, structs, axes):
+    return jax.tree.map(lambda st, ax: rules.named(st.shape, ax), structs, axes)
+
+
+def optimizer_state_sharding(opt_cfg, abs_params, layout, rules: ShardingRules):
+    """Shardings for AdamWState: fp32 moments mirror their parameter; int8
+    QTensor moments shard their flat block dim across the whole mesh."""
+    st = jax.eval_shape(partial(adamw.init, opt_cfg), abs_params)
+    p_sh_tree = param_sharding(layout, rules)
+    flat_sh = jax.tree.leaves(p_sh_tree)
+    treedef = jax.tree.structure(abs_params)
+    mesh = rules.mesh
+
+    def map_moment(mtree):
+        flat_m = treedef.flatten_up_to(mtree)
+        out = []
+        for sh, leaf in zip(flat_sh, flat_m):
+            if isinstance(leaf, adamw.QTensor):
+                # blocks tile the last axis: keep the parameter's leading-dim
+                # sharding, leave (blocks, QBLOCK) unsharded.
+                rank = len(leaf.shape)
+                entries = tuple(sh.spec) + (None,) * (rank - len(tuple(sh.spec)))
+                qspec = P(*entries[:-1], None, None)
+                qsh = NamedSharding(mesh, qspec)
+                out.append(adamw.QTensor(qsh, qsh, leaf.shape))
+            else:
+                out.append(sh)
+        return treedef.unflatten(out)
+
+    scalar = NamedSharding(mesh, P())
+    return adamw.AdamWState(scalar, map_moment(st.m), map_moment(st.v)), st
+
+
+def default_opt_cfg(cfg: ModelConfig) -> adamw.AdamWConfig:
+    # bf16-param archs (Arctic) pair with int8 moments (DESIGN §3).
+    state_dtype = "int8" if cfg.param_dtype == "bfloat16" else "float32"
+    return adamw.AdamWConfig(state_dtype=state_dtype)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules,
+               opt_cfg: adamw.AdamWConfig | None = None,
+               microbatches: int = 1):
+    """Returns (step_fn, abstract_args tuple, in_shardings tuple)."""
+    family = get_family(cfg)
+    layout = family.layout(cfg)
+    abs_params = abstract_params(layout, cfg.param_dtype)
+    p_sh = param_sharding(layout, rules)
+    structs, axes = batch_specs(cfg, shape)
+    b_sh = _shard_tree(rules, structs, axes)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or default_opt_cfg(cfg)
+        o_sh, abs_opt = optimizer_state_sharding(opt_cfg, abs_params, layout,
+                                                 rules)
+        step = build_train_step(cfg, opt_cfg, microbatches)
+        return step, (abs_params, abs_opt, structs), (p_sh, o_sh, b_sh)
+
+    if shape.kind == "prefill":
+        step = (build_encode_step(cfg) if cfg.encoder_only
+                else build_prefill_step(cfg))
+        return step, (abs_params, structs), (p_sh, b_sh)
+
+    if shape.kind == "decode":
+        cache_structs, cache_axes = family.cache_layout(
+            cfg, shape.global_batch, shape.seq_len)
+        c_sh = _shard_tree(rules, cache_structs, cache_axes)
+        step = build_decode_step(cfg)
+        return step, (abs_params, structs, cache_structs), (p_sh, b_sh, c_sh)
+
+    raise ValueError(shape.kind)
+
+
+def shape_rule_overrides(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Per-cell sharding-rule tweaks (e.g. sequence-shard huge KV caches)."""
+    overrides: dict[str, Any] = {}
+    if shape.kind == "decode":
+        if shape.global_batch < 8:
+            # batch=1 long-context decode: batch unshardable; shard the cache
+            # sequence over data (flash-decoding style partial softmax).
+            overrides["cache_seq"] = "data"
+        else:
+            # GQA KV heads rarely divide the 16-way model axis; shard the
+            # cache sequence over "model" instead so the KV cache fits.
+            overrides["cache_seq"] = "model"
+    return overrides

@@ -1,0 +1,40 @@
+"""Serving launcher: batched greedy decoding for a (reduced) architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --max-new 16
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_reduced_config
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="yi-6b")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    if cfg.encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only (no decode step)")
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    engine = ServeEngine(cfg, params, max_len=args.max_len)
+    rng = jax.random.PRNGKey(1)
+    prompts = [[int(t) for t in jax.random.randint(
+        jax.random.fold_in(rng, i), (3 + i % 4,), 0, cfg.vocab_size)]
+        for i in range(args.batch)]
+    out = engine.generate(prompts, max_new=args.max_new)
+    for p, toks in zip(prompts, out.tokens.tolist()):
+        print(f"{p} -> {toks}")
+
+
+if __name__ == "__main__":
+    main()

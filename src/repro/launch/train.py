@@ -1,0 +1,58 @@
+"""Training launcher: run an architecture end-to-end under the Kotta stack.
+
+On this CPU container it trains reduced configs for real; with ``--dry``
+it AOT-compiles the full config on the production mesh instead (see
+``dryrun.py`` for the sweep form).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 20
+"""
+import argparse
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ARCH_NAMES, get_reduced_config
+from repro.core import ObjectStore, PolicyEngine, install_standard_roles
+from repro.data import SyntheticCorpus, TokenLoader
+from repro.models import count_params
+from repro.train import AdamWConfig, ElasticTrainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="yi-6b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--run-name", default="train-cli")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    if cfg.frontend:
+        raise SystemExit(f"{args.arch}: modality-frontend archs train via "
+                         "their smoke tests; use a text arch here")
+    print(f"{cfg.name} (reduced): {count_params(cfg) / 1e6:.2f}M params")
+
+    engine = PolicyEngine()
+    install_standard_roles(engine)
+    store = ObjectStore(clock=engine.clock)
+    keys = SyntheticCorpus.build(
+        store, "cli", num_shards=2,
+        tokens_per_shard=max(65_536, args.batch * (args.seq + 1) * 8),
+        vocab_size=cfg.vocab_size)
+    loader = TokenLoader(store.get, keys, batch_size=args.batch,
+                         seq_len=args.seq)
+    opt = AdamWConfig(learning_rate=args.lr, warmup_steps=5,
+                      decay_steps=max(args.steps, 10))
+    trainer = ElasticTrainer(cfg, opt, Checkpointer(store, args.run_name),
+                             microbatches=args.microbatches, seed=0)
+    rep = trainer.train(loader, args.steps,
+                        checkpoint_every=args.checkpoint_every)
+    first, last = min(rep.losses), max(rep.losses)
+    print(f"steps={rep.final_step} loss {rep.losses[first]:.4f} -> "
+          f"{rep.losses[last]:.4f}; checkpoints {trainer.ckpt.steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .registry import count_params, get_family
+
+__all__ = ["count_params", "get_family"]

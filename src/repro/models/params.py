@@ -1,0 +1,99 @@
+"""Parameter-layout system.
+
+A model is described by a nested dict of ``ParamSpec`` leaves. From one layout
+we derive (a) initialized arrays, (b) ``ShapeDtypeStruct`` trees for the
+AOT dry-run, and (c) logical-axis trees that the sharding rule engine maps to
+``NamedSharding``. Layer-stacked parameters carry a leading ``"layers"`` axis
+and are consumed by ``lax.scan``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override for "normal"/"embed"
+    dtype: Optional[str] = None    # override param dtype (e.g. f32 norms)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _leaf_dtype(spec: ParamSpec, param_dtype) -> jnp.dtype:
+    return jnp.dtype(spec.dtype) if spec.dtype else jnp.dtype(param_dtype)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], object], layout):
+    """Map over ParamSpec leaves of a nested-dict layout."""
+    if isinstance(layout, ParamSpec):
+        return fn(layout)
+    if isinstance(layout, dict):
+        return {k: tree_map_specs(fn, v) for k, v in layout.items()}
+    raise TypeError(f"bad layout node {type(layout)}")
+
+
+def abstract_params(layout, param_dtype="float32"):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, _leaf_dtype(s, param_dtype)), layout)
+
+
+def logical_axes(layout):
+    return tree_map_specs(lambda s: s.axes, layout)
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    # contract all but the last axis by convention
+    if len(spec.shape) <= 1:
+        return max(spec.shape[-1] if spec.shape else 1, 1)
+    return int(np.prod(spec.shape[:-1])) or 1
+
+
+def init_params(layout, key, param_dtype="float32"):
+    """Materialize a layout deterministically (fold-in by path)."""
+
+    def go(node, path):
+        if isinstance(node, ParamSpec):
+            dt = _leaf_dtype(node, param_dtype)
+            sub = jax.random.fold_in(key, hash(path) % (2**31))
+            if node.init == "zeros":
+                return jnp.zeros(node.shape, dt)
+            if node.init == "ones":
+                return jnp.ones(node.shape, dt)
+            if node.init == "embed":
+                std = node.scale if node.scale is not None else 1.0
+            else:
+                std = node.scale if node.scale is not None else _fan_in(node) ** -0.5
+            return (jax.random.truncated_normal(sub, -2.0, 2.0, node.shape,
+                                                jnp.float32) * std).astype(dt)
+        return {k: go(v, path + "/" + k) for k, v in node.items()}
+
+    return go(layout, "")
+
+
+def stack_specs(layer_specs, n: int):
+    """Add a leading ``layers`` axis of extent ``n`` to every leaf (for scan)."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            s.init, s.scale, s.dtype), layer_specs)
+
+
+def count_params_in_layout(layout, predicate=None) -> int:
+    total = 0
+
+    def add(spec: ParamSpec):
+        nonlocal total
+        if predicate is None or predicate(spec):
+            total += int(np.prod(spec.shape))
+
+    tree_map_specs(add, layout)
+    return total

@@ -1,0 +1,34 @@
+"""Model-family registry + parameter accounting."""
+from __future__ import annotations
+
+import numpy as np
+
+from .params import ParamSpec, count_params_in_layout, tree_map_specs
+from .transformer import TransformerFamily, XLSTMFamily, ZambaFamily
+
+_TRANSFORMER = TransformerFamily()
+_XLSTM = XLSTMFamily()
+_ZAMBA = ZambaFamily()
+
+
+def get_family(cfg):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return _TRANSFORMER
+    if cfg.family == "ssm" and cfg.ssm_variant == "xlstm":
+        return _XLSTM
+    if cfg.family in ("hybrid",) or cfg.ssm_variant == "mamba2":
+        return _ZAMBA
+    raise ValueError(f"no family for {cfg.name} ({cfg.family}/{cfg.ssm_variant})")
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Total (or per-token active) parameter count from the layout itself."""
+    layout = get_family(cfg).layout(cfg)
+    total = count_params_in_layout(layout)
+    if not active_only or not cfg.num_experts:
+        return total
+
+    expert = count_params_in_layout(
+        layout, predicate=lambda s: "experts" in s.axes and len(s.shape) > 2)
+    frac = cfg.experts_per_token / cfg.num_experts
+    return int(total - expert + expert * frac)

@@ -1,0 +1,179 @@
+"""Mamba2 (state-space duality / SSD) blocks.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060):
+intra-chunk outputs via a masked (L×L) contraction, inter-chunk via a scan
+over chunk states — O(S·L) work, O(S/L) sequential steps. Decode maintains
+the recurrent state h ∈ (B, H, N, P) plus a short-conv tail.
+
+Single SSM parameter group (n_groups=1): B/C projections are shared across
+heads, as in the released Mamba2 models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+from .layers import norm_spec, rmsnorm
+from .params import ParamSpec
+
+A_INIT_RANGE = (1.0, 16.0)
+
+
+def mamba_param_specs(cfg) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n  # conv over (x, B, C) as in Mamba2
+    return {
+        "norm": norm_spec(d),
+        "w_in": ParamSpec((d, 2 * din + 2 * n + h), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", "mlp")),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), init="zeros"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "gate_norm": ParamSpec((din,), ("mlp",), init="ones", dtype="float32"),
+        "w_out": ParamSpec((din, d), ("mlp", "embed")),
+    }
+
+
+def _split_in(cfg, proj):
+    """Split the fused input projection into (z, x, B, C, dt)."""
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, x, bmat, cmat, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _conv1d(seq, w, b, cache=None):
+    """Causal depthwise conv. seq: (B,S,C); w: (K,C). cache: (B,K-1,C)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((seq.shape[0], k - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = cache.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(k)) + b
+    new_cache = full[:, -(k - 1):] if k > 1 else full[:, :0]
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(xh, dt, a_log, bmat, cmat, d_skip, chunk: int, h_init=None):
+    """Chunked SSD: one ``lax.scan`` over chunks carrying the SSM state.
+
+    xh:   (B,S,H,P) inputs per head
+    dt:   (B,S,H)   positive step sizes
+    a_log:(H,)      A = -exp(a_log)
+    bmat: (B,S,N), cmat: (B,S,N)  shared across heads
+    Returns (y: (B,S,H,P), h_final: (B,H,N,P)).
+
+    The per-chunk body (the (L,L) decay-masked contraction) is rematerialized
+    in the backward pass, so activation traffic is O(S·L) transient and the
+    only saved residual per chunk is the carried state (B,H,N,P).
+    """
+    b, s, h, p_ = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} % chunk {chunk} != 0"
+
+    xc = xh.reshape(b, nc, chunk, h, p_).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def body(hprev, inp):
+      with jax.named_scope("ssd_tile"):  # Pallas-kernel-eligible region
+        x_, dt_, b_, c_ = inp            # (B,L,H,P),(B,L,H),(B,L,N),(B,L,N)
+        la = jnp.cumsum(dt_ * a, axis=1)                     # (B,L,H)
+        # intra-chunk
+        cb = jnp.einsum("bln,bmn->blm", c_.astype(jnp.float32),
+                        b_.astype(jnp.float32))
+        seg = la[:, :, None, :] - la[:, None, :, :]          # (B,L,M,H)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        decay = shard(decay, ("batch", None, None, "ssm_heads"))
+        w_in = dt_[..., None] * x_.astype(jnp.float32)       # (B,L,H,P)
+        y = jnp.einsum("blm,blmh,bmhp->blhp", cb, decay, w_in)
+        # contribution of the carried state
+        y = y + jnp.einsum("bln,blh,bhnp->blhp", c_.astype(jnp.float32),
+                           jnp.exp(la), hprev)
+        # next state
+        wS = jnp.exp(la[:, -1:, :] - la) * dt_               # (B,L,H)
+        st = jnp.einsum("bln,blh,blhp->bhnp", b_.astype(jnp.float32),
+                        wS, x_.astype(jnp.float32))
+        hnew = jnp.exp(la[:, -1, :])[:, :, None, None] * hprev + st
+        return hnew, y.astype(xh.dtype)
+
+    h0 = (jnp.zeros((b, h, n, p_), jnp.float32) if h_init is None
+          else h_init.astype(jnp.float32))
+    h_final, yc = lax.scan(body, h0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_).astype(jnp.float32)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_step(xh, dt, a_log, bmat, cmat, d_skip, h_prev):
+    """Single decode step. xh: (B,1,H,P); h_prev: (B,H,N,P)."""
+    b, _, h, p_ = xh.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                       # (B,H)
+    decay = jnp.exp(dtf * a)                                 # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtf, bmat[:, 0].astype(jnp.float32),
+                     xh[:, 0].astype(jnp.float32))
+    h_new = decay[:, :, None, None] * h_prev.astype(jnp.float32) + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h_new)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+    return y[:, None].astype(xh.dtype), h_new
+
+
+def mamba_block(cfg, p, x, *, cache=None):
+    """Pre-norm Mamba2 residual block.
+
+    cache: None (train/prefill from scratch) or dict(conv=(B,K-1,C),
+    ssm=(B,H,N,P)) for decode; returns (y, new_cache).
+    """
+    dt_ = cfg.cdtype
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, p["w_in"].astype(dt_))
+    z, xs, bmat, cmat, dtp = _split_in(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, conv_cache = _conv1d(conv_in, p["conv_w"].astype(dt_),
+                                   p["conv_b"].astype(dt_),
+                                   None if cache is None else cache["conv"])
+    xs, bmat, cmat = jnp.split(conv_out, [din, din + n], axis=-1)
+
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    xh = xs.reshape(*xs.shape[:2], h, cfg.ssm_headdim)
+    xh = shard(xh, ("batch", None, "ssm_heads", None))
+
+    if cache is None:
+        y, h_final = ssd_chunked(xh, dtv, p["A_log"], bmat, cmat, p["D"],
+                                 min(cfg.ssm_chunk, xs.shape[1]))
+    else:
+        y, h_final = ssd_step(xh, dtv, p["A_log"], bmat, cmat, p["D"],
+                              cache["ssm"])
+
+    y = y.reshape(*y.shape[:2], din)
+    # gated RMSNorm (Mamba2's norm-before-out with SiLU(z) gate)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    new_cache = {"conv": conv_cache.astype(dt_), "ssm": h_final}
+    return x + out, new_cache
+
+
+def mamba_cache_shapes(cfg, batch: int) -> dict:
+    """Abstract decode-cache shapes for one layer (pre-stacking)."""
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": ((batch, cfg.ssm_conv - 1, conv_ch), cfg.dtype,
+                 ("batch", None, "mlp")),
+        "ssm": ((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+                "float32", ("batch", "ssm_heads", None, None)),
+    }

@@ -1,0 +1,379 @@
+"""Model assembly for the assigned architecture families.
+
+``TransformerFamily`` covers dense, MoE, VLM (stubbed patch frontend) and
+audio (stubbed frame frontend, encoder-only) variants. ``XLSTMFamily``
+alternates mLSTM/sLSTM blocks; ``ZambaFamily`` is the Mamba2 backbone with a
+*shared* attention+FFN block applied at a fixed cadence.
+
+All families expose the same surface:
+
+    layout(cfg)                       -> ParamSpec tree (stacked for scan)
+    train_loss(cfg, params, batch)    -> (loss, metrics)
+    prefill(cfg, params, batch)       -> (logits, cache)
+    decode(cfg, params, batch, cache) -> (logits, new_cache)
+    cache_layout(cfg, batch, len)     -> abstract cache tree (for the dry-run)
+
+Homogeneous layer stacks run under ``lax.scan`` with configurable remat, so
+HLO size is depth-independent (Arctic-480B compiles in seconds).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+from . import layers as L
+from .moe import moe_block, moe_param_specs
+from .params import ParamSpec, stack_specs
+from .ssm import mamba_block, mamba_cache_shapes, mamba_param_specs
+from .xlstm import (mlstm_block, mlstm_cache_shapes, mlstm_param_specs,
+                    slstm_block, slstm_cache_shapes, slstm_param_specs)
+
+ZERO_AUX = {"moe_lb_loss": 0.0, "moe_z_loss": 0.0, "moe_drop_frac": 0.0}
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _abstract(entries):
+    """(shape, dtype, axes) tree -> ShapeDtypeStruct tree (axes tree aside)."""
+    structs = jax.tree.map(
+        lambda e: jax.ShapeDtypeStruct(e[0], jnp.dtype(e[1])), entries,
+        is_leaf=lambda e: isinstance(e, tuple) and isinstance(e[0], tuple))
+    axes = jax.tree.map(lambda e: e[2], entries,
+                        is_leaf=lambda e: isinstance(e, tuple) and isinstance(e[0], tuple))
+    return structs, axes
+
+
+# ===========================================================================
+# Transformer (dense / moe / vlm / audio)
+# ===========================================================================
+
+class TransformerFamily:
+    name = "transformer"
+
+    # -- params ---------------------------------------------------------------
+    def layer_specs(self, cfg) -> dict:
+        specs = {"attn": L.attention_param_specs(cfg)}
+        if cfg.num_experts:
+            specs["ffn"] = moe_param_specs(cfg)
+        else:
+            specs["ffn"] = L.mlp_param_specs(cfg)
+        return specs
+
+    def layout(self, cfg) -> dict:
+        layout = {
+            **L.embed_param_specs(cfg),
+            "layers": stack_specs(self.layer_specs(cfg), cfg.num_layers),
+            "final_norm": L.norm_spec(cfg.d_model),
+        }
+        if cfg.frontend:
+            layout["frontend_proj"] = ParamSpec(
+                (cfg.frontend_dim, cfg.d_model), ("frontend", "embed"))
+        return layout
+
+    # -- embedding / frontend ---------------------------------------------------
+    def _embed(self, cfg, params, batch):
+        """Returns (x, positions, text_offset)."""
+        offset = 0
+        if cfg.frontend == "frame":
+            x = jnp.einsum("bsf,fd->bsd",
+                           batch["frames"].astype(cfg.cdtype),
+                           params["frontend_proj"].astype(cfg.cdtype))
+        else:
+            x = L.embed_tokens(cfg, params, batch["tokens"])
+            if cfg.frontend == "patch" and "patches" in batch:
+                px = jnp.einsum("bpf,fd->bpd",
+                                batch["patches"].astype(cfg.cdtype),
+                                params["frontend_proj"].astype(cfg.cdtype))
+                x = jnp.concatenate([px, x], axis=1)
+                offset = px.shape[1]
+        x = shard(x, ("batch", None, None))
+        positions = jnp.arange(x.shape[1])
+        return x, positions, offset
+
+    # -- full forward (train / prefill) -------------------------------------------
+    def _stack_forward(self, cfg, params, x, positions, want_cache: bool):
+        moe = bool(cfg.num_experts)
+
+        def body(carry, layer_params):
+            h = carry
+            h, kv = L.attention_block(cfg, layer_params["attn"], h, positions)
+            if moe:
+                h, aux = moe_block(cfg, layer_params["ffn"], h)
+            else:
+                h = L.mlp_block(cfg, layer_params["ffn"], h)
+                aux = dict(ZERO_AUX)
+            h = shard(h, ("batch", None, None))
+            out = (kv, aux) if want_cache else (None, aux)
+            return h, out
+
+        x, (kv, aux) = lax.scan(_remat(cfg, body), x, params["layers"])
+        aux = {k: jnp.mean(jnp.asarray(v)) for k, v in aux.items()}
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, kv, aux
+
+    # -- losses ---------------------------------------------------------------------
+    def train_loss(self, cfg, params, batch):
+        x, _, aux = self._stack_forward(
+            cfg, params, *self._embed(cfg, params, batch)[:2], want_cache=False)
+        offset = (cfg.frontend_len if cfg.frontend == "patch" else 0)
+        if offset:
+            x = x[:, offset:]
+        labels = batch["labels"]
+        if cfg.logit_chunk:
+            loss = L.chunked_xent(cfg, params, x, labels, cfg.logit_chunk)
+        else:
+            logits = L.logits_fn(cfg, params, x)
+            if "loss_mask" in batch:
+                m = batch["loss_mask"].astype(jnp.float32)
+                lg = logits.astype(jnp.float32)
+                lse = jax.nn.logsumexp(lg, axis=-1)
+                ll = jnp.take_along_axis(lg, labels[..., None], -1)[..., 0]
+                loss = jnp.sum((lse - ll) * m) / jnp.maximum(m.sum(), 1.0)
+            else:
+                loss = L.softmax_xent(logits, labels)
+        total = (loss
+                 + cfg.load_balance_loss * aux["moe_lb_loss"]
+                 + cfg.router_z_loss * aux["moe_z_loss"])
+        metrics = {"loss": loss, **aux}
+        return total, metrics
+
+    # -- prefill ----------------------------------------------------------------------
+    def prefill(self, cfg, params, batch):
+        x, positions, _ = self._embed(cfg, params, batch)
+        x, kv, _ = self._stack_forward(cfg, params, x, positions,
+                                       want_cache=not cfg.encoder_only)
+        if cfg.encoder_only:
+            return L.logits_fn(cfg, params, x), {}
+        logits = L.logits_fn(cfg, params, x[:, -1:])[:, 0]
+        k, v = kv                                   # stacked (L,B,S,KV,hd)
+        cache = {"k": shard(k, ("layers", "batch", "cache_seq", "kv_heads", None)),
+                 "v": shard(v, ("layers", "batch", "cache_seq", "kv_heads", None))}
+        return logits, cache
+
+    # -- decode -----------------------------------------------------------------------
+    def decode(self, cfg, params, batch, cache):
+        tokens, pos = batch["tokens"], batch["pos"]      # (B,1), (B,)
+        x = L.embed_tokens(cfg, params, tokens)
+
+        def body(carry, xs):
+            h = carry
+            layer_params, kc, vc = xs
+            h, (kc, vc) = L.attention_block(cfg, layer_params["attn"], h,
+                                            pos[:, None], cache=(kc, vc),
+                                            decode_pos=pos)
+            if cfg.num_experts:
+                h, _ = moe_block(cfg, layer_params["ffn"], h)
+            else:
+                h = L.mlp_block(cfg, layer_params["ffn"], h)
+            return h, (kc, vc)
+
+        x, (k, v) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.logits_fn(cfg, params, x)[:, 0]
+        return logits, {"k": k, "v": v}
+
+    # -- abstract cache (dry-run input specs) ----------------------------------------
+    def cache_layout(self, cfg, batch: int, cache_len: int):
+        shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+        axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+        entry = (shape, cfg.dtype, axes)
+        return _abstract({"k": entry, "v": entry})
+
+
+# ===========================================================================
+# xLSTM (alternating mLSTM / sLSTM pairs)
+# ===========================================================================
+
+class XLSTMFamily:
+    name = "xlstm"
+
+    def n_pairs(self, cfg) -> int:
+        return cfg.num_layers // 2
+
+    def layout(self, cfg) -> dict:
+        n = self.n_pairs(cfg)
+        return {
+            **L.embed_param_specs(cfg),
+            "pairs": {
+                "m": stack_specs(mlstm_param_specs(cfg), n),
+                "s": stack_specs(slstm_param_specs(cfg), n),
+            },
+            "final_norm": L.norm_spec(cfg.d_model),
+        }
+
+    def _forward(self, cfg, params, x, caches=None):
+        def body(carry, xs):
+            h = carry
+            pair, mc, sc = xs
+            h, mc = mlstm_block(cfg, pair["m"], h, cache=mc)
+            h, sc = slstm_block(cfg, pair["s"], h, cache=sc)
+            h = shard(h, ("batch", None, None))
+            return h, (mc, sc)
+
+        n = self.n_pairs(cfg)
+        if caches is None:
+            mc = sc = None
+            xs = (params["pairs"], [None] * n, [None] * n)
+            # scan cannot carry None xs; run without cache via dummy flag
+            def body_nc(carry, pair):
+                h = carry
+                h, mc = mlstm_block(cfg, pair["m"], h)
+                h, sc = slstm_block(cfg, pair["s"], h)
+                h = shard(h, ("batch", None, None))
+                return h, (mc, sc)
+            x, (mcs, scs) = lax.scan(_remat(cfg, body_nc), x, params["pairs"])
+        else:
+            x, (mcs, scs) = lax.scan(body, x,
+                                     (params["pairs"], caches["m"], caches["s"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, {"m": mcs, "s": scs}
+
+    def train_loss(self, cfg, params, batch):
+        x = L.embed_tokens(cfg, params, batch["tokens"])
+        x, _ = self._forward(cfg, params, x)
+        logits = L.logits_fn(cfg, params, x)
+        loss = L.softmax_xent(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    def prefill(self, cfg, params, batch):
+        x = L.embed_tokens(cfg, params, batch["tokens"])
+        x, caches = self._forward(cfg, params, x)
+        logits = L.logits_fn(cfg, params, x[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode(self, cfg, params, batch, cache):
+        x = L.embed_tokens(cfg, params, batch["tokens"])
+        x, caches = self._forward(cfg, params, x, caches=cache)
+        logits = L.logits_fn(cfg, params, x)[:, 0]
+        return logits, caches
+
+    def cache_layout(self, cfg, batch: int, cache_len: int):
+        n = self.n_pairs(cfg)
+        def stk(entries):
+            return {k: ((n,) + s, d, ("layers",) + a) for k, (s, d, a) in entries.items()}
+        return _abstract({"m": stk(mlstm_cache_shapes(cfg, batch)),
+                          "s": stk(slstm_cache_shapes(cfg, batch))})
+
+
+# ===========================================================================
+# Zamba2 hybrid (Mamba2 backbone + shared attention block)
+# ===========================================================================
+
+class ZambaFamily:
+    name = "zamba"
+
+    def group_sizes(self, cfg) -> list[int]:
+        k = cfg.shared_attn_every
+        n = cfg.num_layers
+        sizes = [k] * (n // k)
+        if n % k:
+            sizes.append(n % k)
+        return sizes
+
+    def n_shared_applications(self, cfg) -> int:
+        return cfg.num_layers // cfg.shared_attn_every
+
+    def layout(self, cfg) -> dict:
+        return {
+            **L.embed_param_specs(cfg),
+            "mamba": stack_specs(mamba_param_specs(cfg), cfg.num_layers),
+            "shared": {"attn": L.attention_param_specs(cfg),
+                       "ffn": L.mlp_param_specs(cfg)},
+            "final_norm": L.norm_spec(cfg.d_model),
+        }
+
+    def _forward(self, cfg, params, x, positions, caches=None,
+                 decode_pos=None, want_cache=False):
+        sizes = self.group_sizes(cfg)
+        n_apps = self.n_shared_applications(cfg)
+
+        def mamba_body(carry, xs):
+            h = carry
+            if caches is None:
+                lp = xs
+                h, c = mamba_block(cfg, lp, h)
+            else:
+                lp, c_in = xs
+                h, c = mamba_block(cfg, lp, h, cache=c_in)
+            h = shard(h, ("batch", None, None))
+            return h, c
+
+        new_mamba, new_kv = [], []
+        start = 0
+        app = 0
+        for gi, size in enumerate(sizes):
+            sl = jax.tree.map(lambda a: a[start:start + size], params["mamba"])
+            if caches is None:
+                x, mc = lax.scan(_remat(cfg, mamba_body), x, sl)
+            else:
+                csl = jax.tree.map(lambda a: a[start:start + size],
+                                   caches["mamba"])
+                x, mc = lax.scan(mamba_body, x, (sl, csl))
+            new_mamba.append(mc)
+            start += size
+            if (gi + 1) * cfg.shared_attn_every <= cfg.num_layers and app < n_apps:
+                if caches is None:
+                    x, kv = L.attention_block(cfg, params["shared"]["attn"], x,
+                                              positions)
+                else:
+                    kv_in = (caches["attn_k"][app], caches["attn_v"][app])
+                    x, kv = L.attention_block(cfg, params["shared"]["attn"], x,
+                                              positions, cache=kv_in,
+                                              decode_pos=decode_pos)
+                x = L.mlp_block(cfg, params["shared"]["ffn"], x)
+                new_kv.append(kv)
+                app += 1
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        mamba_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+        cache = {"mamba": mamba_cache}
+        if new_kv:
+            cache["attn_k"] = jnp.stack([k for k, _ in new_kv])
+            cache["attn_v"] = jnp.stack([v for _, v in new_kv])
+        return x, cache
+
+    def train_loss(self, cfg, params, batch):
+        x = L.embed_tokens(cfg, params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        x, _ = self._forward(cfg, params, x, positions)
+        logits = L.logits_fn(cfg, params, x)
+        loss = L.softmax_xent(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    def prefill(self, cfg, params, batch):
+        x = L.embed_tokens(cfg, params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        x, cache = self._forward(cfg, params, x, positions)
+        logits = L.logits_fn(cfg, params, x[:, -1:])[:, 0]
+        return logits, cache
+
+    def decode(self, cfg, params, batch, cache):
+        x = L.embed_tokens(cfg, params, batch["tokens"])
+        pos = batch["pos"]
+        x, cache = self._forward(cfg, params, x, pos[:, None], caches=cache,
+                                 decode_pos=pos)
+        logits = L.logits_fn(cfg, params, x)[:, 0]
+        return logits, cache
+
+    def cache_layout(self, cfg, batch: int, cache_len: int):
+        n_apps = self.n_shared_applications(cfg)
+        entries = {"mamba": {
+            k: ((cfg.num_layers,) + s, d, ("layers",) + a)
+            for k, (s, d, a) in mamba_cache_shapes(cfg, batch).items()}}
+        kv_shape = (n_apps, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+        kv_axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+        entries["attn_k"] = (kv_shape, cfg.dtype, kv_axes)
+        entries["attn_v"] = (kv_shape, cfg.dtype, kv_axes)
+        return _abstract(entries)

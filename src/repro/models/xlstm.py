@@ -1,0 +1,283 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): alternating mLSTM (matrix
+memory, covariance update) and sLSTM (scalar memory, recurrent gates) blocks.
+
+Both use exponential gating with the paper's log-space stabilizer state m.
+Training runs the recurrence with ``lax.scan`` over time (O(1) HLO size);
+decode is the single-step form. The d_ff=0 convention in the assigned config
+means the blocks own their projections (mLSTM: 2x up-projection, sLSTM:
+4/3-factor gated FFN after the cell), as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import shard
+from .layers import norm_spec, rmsnorm
+from .params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_param_specs(cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    din = 2 * d                     # paper: projection factor 2
+    hd = din // h
+    return {
+        "norm": norm_spec(d),
+        "w_up_x": ParamSpec((d, din), ("embed", "mlp")),
+        "w_up_z": ParamSpec((d, din), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, din), ("conv", "mlp")),
+        "conv_b": ParamSpec((din,), ("mlp",), init="zeros"),
+        "wq": ParamSpec((din, h, hd), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((din, h, hd), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((din, h, hd), ("mlp", "heads", "head_dim")),
+        "w_i": ParamSpec((din, h), ("mlp", "heads")),
+        "w_f": ParamSpec((din, h), ("mlp", "heads")),
+        "b_i": ParamSpec((h,), ("heads",), init="zeros"),
+        "b_f": ParamSpec((h,), ("heads",), init="ones"),
+        "out_norm": ParamSpec((din,), ("mlp",), init="ones", dtype="float32"),
+        "w_down": ParamSpec((din, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_scan(q, k, v, log_i, log_f, state=None):
+    """Stabilized mLSTM recurrence over time.
+
+    q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H).
+    state: None or (C:(B,H,hd,hd), n:(B,H,hd), m:(B,H)).
+    Returns (h: (B,S,H,hd), final state).
+    """
+    b, s, h, hd = q.shape
+    scale = hd ** -0.5
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (x.astype(jnp.float32) for x in state)
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp                             # (B,H,hd)...(B,H)
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        kt = kt.astype(jnp.float32) * scale
+        c = f_[..., None, None] * c + i_[..., None, None] * (
+            vt.astype(jnp.float32)[..., :, None] * kt[..., None, :])
+        n = f_[..., None] * n + i_[..., None] * kt
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), (num / den[..., None])
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+          log_f.transpose(1, 0, 2))
+    (c, n, m), hs = lax.scan(step, (c0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype), (c, n, m)
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, state=None, chunk: int = 64):
+    """Chunkwise-parallel mLSTM (the paper's training form; GLA-style).
+
+    Identical math to :func:`mlstm_scan` (property-tested) but O(S·L) work
+    with an (L,L) decay-masked intra-chunk contraction and a scan that only
+    carries (C, n, m) across chunks — the per-chunk body is rematerialized in
+    the backward pass.
+    """
+    b, s, h, hd = q.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk}")
+    nc = s // chunk
+    scale = hd ** -0.5
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (x.astype(jnp.float32) for x in state)
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(
+            1, 0, *range(2, x.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def body(carry, inp):
+      with jax.named_scope("mlstm_tile"):  # Pallas-kernel-eligible region
+        c, n, m = carry                                      # (B,H,hd,hd) ...
+        q_, k_, v_, li, lf = inp                             # (B,L,H,hd)...(B,L,H)
+        bcum = jnp.cumsum(lf, axis=1)                        # (B,L,H) inclusive
+        # intra-chunk log weights: b_l - b_m + li_m   (l >= m)
+        g = bcum[:, :, None, :] - bcum[:, None, :, :] + li[:, None, :, :]
+        g = jnp.where(tri[None, :, :, None], g, -jnp.inf)    # (B,L,M,H)
+        m_intra = jnp.max(g, axis=2)                         # (B,L,H)
+        m_l = jnp.maximum(m[:, None, :] + bcum, m_intra)     # (B,L,H)
+        d_intra = jnp.exp(g - m_l[:, :, None, :])            # (B,L,M,H)
+        d_inter = jnp.exp(bcum + m[:, None, :] - m_l)        # (B,L,H)
+
+        s_qk = jnp.einsum("blhd,bmhd->blmh", q_.astype(jnp.float32),
+                          k_.astype(jnp.float32)) * scale
+        w = s_qk * d_intra
+        num = jnp.einsum("blmh,bmhd->blhd", w, v_.astype(jnp.float32))
+        num = num + d_inter[..., None] * jnp.einsum(
+            "bhvk,blhk->blhv", c, q_.astype(jnp.float32))
+        den = jnp.einsum("blmh->blh", w) + d_inter * jnp.einsum(
+            "bhk,blhk->blh", n, q_.astype(jnp.float32))
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_l))[..., None]
+
+        # chunk-boundary state update
+        b_last = bcum[:, -1, :]                              # (B,H)
+        g_last = b_last[:, None, :] - bcum + li              # (B,L,H)
+        m_next = jnp.maximum(m + b_last, jnp.max(g_last, axis=1))
+        w_state = jnp.exp(g_last - m_next[:, None, :])       # (B,L,H)
+        kf = k_.astype(jnp.float32) * scale
+        c_new = (jnp.exp(m + b_last - m_next)[:, :, None, None] * c
+                 + jnp.einsum("blh,blhv,blhk->bhvk", w_state,
+                              v_.astype(jnp.float32), kf))
+        n_new = (jnp.exp(m + b_last - m_next)[:, :, None] * n
+                 + jnp.einsum("blh,blhk->bhk", w_state, kf))
+        return (c_new, n_new, m_next), hout.astype(q.dtype)
+
+    (c, n, m), hs = lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return hs, (c, n, m)
+
+
+def mlstm_block(cfg, p, x, *, cache=None):
+    from .ssm import _conv1d
+
+    dt_ = cfg.cdtype
+    h = cfg.num_heads
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xin = jnp.einsum("bsd,de->bse", xn, p["w_up_x"].astype(dt_))
+    z = jnp.einsum("bsd,de->bse", xn, p["w_up_z"].astype(dt_))
+    conv_out, conv_cache = _conv1d(xin, p["conv_w"].astype(dt_),
+                                   p["conv_b"].astype(dt_),
+                                   None if cache is None else cache["conv"])
+    q = jnp.einsum("bse,ehk->bshk", conv_out, p["wq"].astype(dt_))
+    k = jnp.einsum("bse,ehk->bshk", conv_out, p["wk"].astype(dt_))
+    v = jnp.einsum("bse,ehk->bshk", xin, p["wv"].astype(dt_))
+    q = shard(q, ("batch", None, "heads", None))
+    log_i = (jnp.einsum("bse,eh->bsh", conv_out, p["w_i"].astype(dt_))
+             .astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", conv_out, p["w_f"].astype(dt_))
+        .astype(jnp.float32) + p["b_f"].astype(jnp.float32))
+
+    state = None if cache is None else (cache["C"], cache["n"], cache["m"])
+    if q.shape[1] > 1:
+        chunk = min(64, q.shape[1])
+        hs, (c, n, m) = mlstm_chunked(q, k, v, log_i, log_f, state, chunk)
+    else:
+        hs, (c, n, m) = mlstm_scan(q, k, v, log_i, log_f, state)
+    hs = hs.reshape(*hs.shape[:2], -1)
+    hs = rmsnorm(hs, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", hs, p["w_down"].astype(dt_))
+    new_cache = {"conv": conv_cache.astype(dt_), "C": c, "n": n, "m": m}
+    return x + out, new_cache
+
+
+def mlstm_cache_shapes(cfg, batch: int) -> dict:
+    h = cfg.num_heads
+    din = 2 * cfg.d_model
+    hd = din // h
+    return {
+        "conv": ((batch, cfg.ssm_conv - 1, din), cfg.dtype, ("batch", None, "mlp")),
+        "C": ((batch, h, hd, hd), "float32", ("batch", "heads", None, None)),
+        "n": ((batch, h, hd), "float32", ("batch", "heads", None)),
+        "m": ((batch, h), "float32", ("batch", "heads")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_param_specs(cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    f = int(d * 8 / 3) // 64 * 64   # post-cell gated FFN, 4/3 factor (x2 for GLU)
+    return {
+        "norm": norm_spec(d),
+        # input weights for the four gates (z, i, f, o)
+        "w_gates": ParamSpec((d, 4, h, hd), ("embed", None, "heads", "head_dim")),
+        # block-diagonal recurrent weights per head, per gate
+        "r_gates": ParamSpec((4, h, hd, hd), (None, "heads", "head_dim", None)),
+        "b_gates": ParamSpec((4, h, hd), (None, "heads", "head_dim"), init="zeros"),
+        "ffn_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "ffn_up": ParamSpec((d, f), ("embed", "mlp")),
+        "ffn_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def slstm_scan(gates_in, r, b, state=None):
+    """sLSTM recurrence. gates_in: (B,S,4,H,hd). Returns (h:(B,S,H,hd), state).
+
+    State: (c, n, m, h_prev) each (B,H,hd).
+    """
+    bsz, s, _, h, hd = gates_in.shape
+    if state is None:
+        zeros = jnp.zeros((bsz, h, hd), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros - 1e30, zeros)
+    else:
+        state = tuple(x.astype(jnp.float32) for x in state)
+
+    rf = r.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(carry, g_t):
+        c, n, m, h_prev = carry
+        # recurrent contribution: block-diag per head
+        rec = jnp.einsum("bhk,ghkj->bghj", h_prev, rf)        # (B,4,H,hd)
+        pre = g_t.astype(jnp.float32) + rec + bf[None]
+        zt = jnp.tanh(pre[:, 0])
+        it = pre[:, 1]
+        ft = pre[:, 2]
+        ot = jax.nn.sigmoid(pre[:, 3])
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * zt
+        n = f_ * n + i_
+        h_new = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    (c, n, m, h_last), hs = lax.scan(step, state,
+                                     gates_in.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), (c, n, m, h_last)
+
+
+def slstm_block(cfg, p, x, *, cache=None):
+    dt_ = cfg.cdtype
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    gates_in = jnp.einsum("bsd,dghk->bsghk", xn, p["w_gates"].astype(dt_))
+    state = (None if cache is None else
+             (cache["c"], cache["n"], cache["m"], cache["h"]))
+    hs, (c, n, m, hl) = slstm_scan(gates_in, p["r_gates"], p["b_gates"], state)
+    hs = hs.reshape(*hs.shape[:2], -1).astype(dt_)
+    y = x + hs
+    # gated FFN (GLU, 4/3 factor)
+    gate = jnp.einsum("bsd,df->bsf", hs, p["ffn_gate"].astype(dt_))
+    up = jnp.einsum("bsd,df->bsf", hs, p["ffn_up"].astype(dt_))
+    hf = jax.nn.gelu(gate, approximate=True) * up
+    hf = shard(hf, ("batch", None, "mlp"))
+    y = y + jnp.einsum("bsf,fd->bsd", hf, p["ffn_down"].astype(dt_))
+    new_cache = {"c": c, "n": n, "m": m, "h": hl}
+    return y, new_cache
+
+
+def slstm_cache_shapes(cfg, batch: int) -> dict:
+    h, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    shp = ((batch, h, hd), "float32", ("batch", "heads", None))
+    return {"c": shp, "n": shp, "m": shp, "h": shp}

@@ -1,0 +1,64 @@
+"""Batched serving engine: prefill + greedy decode over a shared KV cache.
+
+The paper's serving analogue: analysis jobs that *serve* a model near the
+data. The engine pads a request batch to a fixed shape, prefills once, then decodes token-by-token with jit-compiled steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_family
+from repro.train.train_step import build_decode_step, build_prefill_step
+
+
+@dataclass
+class ServeResult:
+    tokens: np.ndarray          # (B, max_new)
+    prompt_lens: list[int]
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_len: int = 512):
+        if cfg.encoder_only:
+            raise ValueError("encoder-only models cannot decode")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.family = get_family(cfg)
+        self._prefill = jax.jit(build_prefill_step(cfg))
+        self._decode = jax.jit(build_decode_step(cfg))
+
+    def _pad_cache(self, cache, cur_len: int):
+        """Grow the prefill cache to max_len along the cache_seq axis."""
+        def grow(x):
+            # cache_seq axis = 2 for (L,B,S,KV,hd); SSM states have no seq axis.
+            if x.ndim >= 3 and x.shape[2] == cur_len:
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, self.max_len - cur_len)
+                return jnp.pad(x, pad)
+            return x
+        return jax.tree.map(grow, cache)
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16) -> ServeResult:
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad so last position is newest
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._pad_cache(cache, plen)
+        pos = jnp.full((b,), plen - 1, jnp.int32)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        out = np.zeros((b, max_new), np.int32)
+        for t in range(max_new):
+            out[:, t] = np.asarray(next_tok)
+            pos = pos + 1
+            step_batch = {"tokens": next_tok[:, None], "pos": pos}
+            next_tok, _, cache = self._decode(self.params, step_batch, cache)
+        return ServeResult(out, [len(p) for p in prompts])

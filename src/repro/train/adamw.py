@@ -1,0 +1,168 @@
+"""In-house AdamW with optional int8 block-quantized moments.
+
+No optax in this environment — and the assignment asks for every substrate to
+be built. Features:
+
+- decoupled weight decay, bias-corrected moments, global-norm clipping;
+- linear-warmup + cosine-decay schedule;
+- ``state_dtype="int8"``: both moments stored as int8 with per-block (256)
+  float32 scales — 4x less optimizer HBM, the adaptation that lets
+  Arctic-480B train on 256 chips (DESIGN §3). Quantization error is bounded
+  by scale/2 per element (property-tested).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# Block quantization
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """int8 block-quantized tensor; ``shape`` is static aux data."""
+
+    def __init__(self, q, scale, shape):
+        self.q = q             # int8 (n_blocks, QBLOCK)
+        self.scale = scale     # float32 (n_blocks, 1)
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        return cls(children[0], children[1], shape)
+
+    def __repr__(self):
+        return f"QTensor(shape={self.shape})"
+
+
+def quantize_blockwise(x) -> QTensor:
+    """Blocks tile the LAST axis (which must divide QBLOCK), preserving the
+    leading axes — so GSPMD sharding propagates from the parameter to its
+    quantized moments (flattening would force replication)."""
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    if last % QBLOCK:
+        raise ValueError(f"last dim {last} % QBLOCK {QBLOCK} != 0")
+    blocks = x.astype(jnp.float32).reshape(*shape[:-1], last // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale, shape)
+
+
+def dequantize_blockwise(qt: QTensor) -> jax.Array:
+    return (qt.q.astype(jnp.float32) * qt.scale).reshape(qt.shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"     # "float32" | "int8"
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return cfg.learning_rate * warm * cos
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any   # pytree of arrays or QTensors
+    v: Any
+
+
+#: tensors smaller than this stay float32 even under int8 states
+#: (norm gains, biases — negligible memory, high sensitivity).
+QUANT_MIN_SIZE = 2048
+
+
+def _encode(cfg: AdamWConfig, x, sqrt_domain: bool = False):
+    if (cfg.state_dtype != "int8" or x.size < QUANT_MIN_SIZE
+            or (x.ndim and x.shape[-1] % QBLOCK)):
+        return x
+    if sqrt_domain:  # v >= 0: quantize sqrt(v) — compresses the dynamic range
+        return quantize_blockwise(jnp.sqrt(x))
+    return quantize_blockwise(x)
+
+
+def _decode(cfg: AdamWConfig, x, sqrt_domain: bool = False):
+    if not isinstance(x, QTensor):
+        return x
+    d = dequantize_blockwise(x)
+    return d * d if sqrt_domain else d
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    def zero_m(p):
+        return _encode(cfg, jnp.zeros(p.shape, jnp.float32))
+
+    def zero_v(p):
+        return _encode(cfg, jnp.zeros(p.shape, jnp.float32), sqrt_domain=True)
+
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zero_m, params), jax.tree.map(zero_v, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.asarray(leaves)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.max_grad_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m_enc, v_enc):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _decode(cfg, m_enc) + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(cfg, v_enc, sqrt_domain=True) + (1 - cfg.b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, _encode(cfg, m), _encode(cfg, v, sqrt_domain=True)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    results = [leaf(*args) for args in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([r[0] for r in results])
+    new_m = treedef.unflatten([r[1] for r in results])
+    new_v = treedef.unflatten([r[2] for r in results])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

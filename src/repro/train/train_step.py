@@ -1,0 +1,95 @@
+"""Train / serve step construction.
+
+``build_train_step`` produces the jit-able step function: microbatch gradient
+accumulation (``lax.scan`` over microbatches, float32 accumulators), AdamW
+update, metrics. ``build_prefill_step`` / ``build_decode_step`` produce the
+serving steps. All of them run under the active sharding-rules context, so
+the same functions lower for 1 CPU device and for the production meshes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import get_family
+from . import adamw
+
+
+def _microbatches(batch, n: int):
+    """Split the leading batch dim into n microbatches: (n, B/n, ...)."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} % microbatches {n} != 0"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(cfg, opt_cfg: adamw.AdamWConfig,
+                     microbatches: int = 1) -> Callable:
+    family = get_family(cfg)
+
+    def loss_fn(params, mb):
+        return family.train_loss(cfg, params, mb)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _microbatches(batch, microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"total_loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def build_prefill_step(cfg) -> Callable:
+    family = get_family(cfg)
+
+    def prefill_step(params, batch):
+        return family.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def build_decode_step(cfg) -> Callable:
+    family = get_family(cfg)
+
+    def decode_step(params, batch, cache):
+        logits, cache = family.decode(cfg, params, batch, cache)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return decode_step
+
+
+def build_encode_step(cfg) -> Callable:
+    """Encoder-only serve step (HuBERT): frames -> per-frame logits."""
+    family = get_family(cfg)
+
+    def encode_step(params, batch):
+        logits, _ = family.prefill(cfg, params, batch)
+        return logits
+
+    return encode_step

@@ -1,0 +1,106 @@
+"""Elastic, fault-tolerant trainer.
+
+Cloud Kotta's execution model applied to training: the trainer is the *job*,
+revocations kill it mid-step, the queue-watcher resubmits it, and it resumes
+from the latest tiered checkpoint. Because ``TokenLoader.batch_at(step)`` is
+pure, a restart replays the exact data order — restart equality is bitwise
+(tested). Elastic rescale = restore the topology-independent checkpoint with
+a different dp_size and keep the same global batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.models import get_family
+from repro.models.params import init_params
+from . import adamw
+from .train_step import build_train_step
+
+
+class Revoked(Exception):
+    """Raised by a revocation signal mid-training (spot reclaim)."""
+
+
+@dataclass
+class TrainerReport:
+    steps_run: int
+    final_step: int
+    losses: dict[int, float] = field(default_factory=dict)
+    restarts: int = 0
+
+
+class ElasticTrainer:
+    def __init__(self, cfg, opt_cfg: adamw.AdamWConfig,
+                 checkpointer: Checkpointer, *,
+                 microbatches: int = 1, seed: int = 0,
+                 async_checkpoint: bool = False):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.ckpt = checkpointer
+        self.family = get_family(cfg)
+        self.microbatches = microbatches
+        self.seed = seed
+        self.async_checkpoint = async_checkpoint
+        self._step_fn = jax.jit(build_train_step(cfg, opt_cfg, microbatches),
+                                donate_argnums=(0, 1))
+
+    # -- state -----------------------------------------------------------------
+    def init_state(self):
+        params = init_params(self.family.layout(self.cfg),
+                             jax.random.PRNGKey(self.seed),
+                             self.cfg.param_dtype)
+        opt_state = adamw.init(self.opt_cfg, params)
+        return params, opt_state
+
+    def restore_or_init(self):
+        params, opt_state = self.init_state()
+        step = self.ckpt.latest_step()
+        if step is None:
+            return 0, params, opt_state
+        step, (params, opt_state) = self.ckpt.restore((params, opt_state))
+        return step, params, opt_state
+
+    # -- loop ---------------------------------------------------------------------
+    def train(self, loader, num_steps: int, *, checkpoint_every: int = 50,
+              revoke_at: Optional[Callable[[int], bool]] = None,
+              max_restarts: int = 10) -> TrainerReport:
+        """Run to ``num_steps`` global steps, surviving revocations."""
+        report = TrainerReport(0, 0)
+        restarts = 0
+        while True:
+            start, params, opt_state = self.restore_or_init()
+            try:
+                step = start
+                while step < num_steps:
+                    if revoke_at is not None and revoke_at(step):
+                        raise Revoked(f"revoked at step {step}")
+                    batch = loader.batch_at(step)
+                    batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                    params, opt_state, metrics = self._step_fn(
+                        params, opt_state, batch)
+                    step += 1
+                    report.steps_run += 1
+                    report.losses[step] = float(metrics["total_loss"])
+                    if step % checkpoint_every == 0 or step == num_steps:
+                        self.ckpt.save(step, (params, opt_state),
+                                       blocking=not self.async_checkpoint)
+                self.ckpt.wait()
+                report.final_step = step
+                report.restarts = restarts
+                self._final = (params, opt_state)
+                return report
+            except Revoked:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                # params/opt_state lost with the instance; loop restores.
+                continue
+
+    @property
+    def final_state(self):
+        return self._final

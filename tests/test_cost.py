@@ -1,0 +1,53 @@
+"""Cost models: Table III exact reproduction + placement (Fig 7) relations."""
+import pytest
+
+from repro.core import lifecycle_annual_cost, placement_cost
+from repro.core.cost import StoragePricing, glacier_retrieval_monthly, s3_std_monthly
+
+TEN_TB = 10_000.0  # decimal GB, as the paper uses
+
+
+@pytest.mark.parametrize("policy,active,expected", [
+    ("STD", 0.0, 3546.0),
+    ("IA", 0.0, 1500.0),
+    ("GLACIER", 0.03, 840.0),
+    ("STD30-IA", 0.0, 1670.5),
+    ("STD30-IA60-GLACIER", 0.03, 880.259),
+    ("STD30-IA60-GLACIER", 0.10, 974.20),
+])
+def test_table3_storage_column_exact(policy, active, expected):
+    got = lifecycle_annual_cost(policy, TEN_TB, active).storage_annual
+    assert got == pytest.approx(expected, abs=0.01)
+
+
+def test_table3_lifecycle_access_cost_close_to_paper():
+    # Paper: $169.73/yr (their spreadsheet mixes binary/decimal GB; the same
+    # Eq (1)-(2) burst with decimal GB gives $165.0 — within 3%).
+    got = lifecycle_annual_cost("STD30-IA60-GLACIER", TEN_TB, 0.03).access_annual
+    assert got == pytest.approx(169.73, rel=0.04)
+
+
+def test_glacier_free_quota_means_zero_fee():
+    # retrieving under 5%/month pro-rated daily is free
+    assert glacier_retrieval_monthly(10.0, 10_000.0) == 0.0
+    assert glacier_retrieval_monthly(300.0, 10_000.0) > 0.0
+
+
+def test_std_tiered_pricing():
+    assert s3_std_monthly(1_000.0) == pytest.approx(30.0)
+    assert s3_std_monthly(10_000.0) == pytest.approx(295.5)
+
+
+def test_placement_egress_tradeoff():
+    """Fig 7: remote-cheap wins at low data volume, local wins at high."""
+    local = placement_cost(1.675, 1.0, 0, 0, same_region_as_data=True)
+    # remote instance 40% cheaper
+    for gb, expect_remote_cheaper in [(5.0, True), (200.0, False)]:
+        remote = placement_cost(1.0, 1.0, gb, gb, same_region_as_data=False)
+        assert (remote < local) == expect_remote_cheaper
+
+
+def test_pricing_is_frozen_dataclass():
+    p = StoragePricing()
+    with pytest.raises(Exception):
+        p.s3_ia_per_gb_month = 0.0

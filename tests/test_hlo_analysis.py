@@ -1,0 +1,85 @@
+"""HLO parser: trip counts, dot FLOPs vs analytic, collective conventions."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_computations
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_scales_flops():
+    d, L = 128, 7
+
+    def f(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = lax.scan(body, x, w)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, d), jnp.float32)
+    rep = analyze_hlo(_compile_text(f, w, x))
+    expected = 2 * 4 * d * d * L
+    assert rep.dot_flops == pytest.approx(expected, rel=0.05)
+    assert L in [int(t) for t in rep.while_trips.values()]
+
+
+def test_plain_matmul_flops():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    rep = analyze_hlo(_compile_text(f, a, b))
+    assert rep.dot_flops == pytest.approx(2 * 64 * 32 * 16, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    d, outer, inner = 32, 3, 5
+
+    def f(w, x):
+        def obody(h, _):
+            def ibody(hh, _):
+                return jnp.tanh(hh @ w), None
+            h2, _ = lax.scan(ibody, h, None, length=inner)
+            return h2, None
+        h, _ = lax.scan(obody, x, None, length=outer)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, d), jnp.float32)
+    rep = analyze_hlo(_compile_text(f, w, x))
+    expected = 2 * 2 * d * d * outer * inner
+    assert rep.dot_flops == pytest.approx(expected, rel=0.05)
+
+
+def test_computation_parsing_smoke():
+    def f(x):
+        return jnp.sum(x * 2.0)
+
+    comps = parse_computations(_compile_text(
+        f, jax.ShapeDtypeStruct((8,), jnp.float32)))
+    assert any(c.is_entry for c in comps.values())
+
+
+def test_collective_conventions():
+    """Hand-written SPMD-style HLO exercises the ring formulas."""
+    hlo = """
+ENTRY %main (p: f32[16,64]) -> f32[16,64] {
+  %p = f32[16,64]{1,0} parameter(0)
+  %ag = f32[16,256]{1,0} all-gather(%p), replica_groups=[4,4]<=[16], dimensions={1}
+  %ar = f32[16,64]{1,0} all-reduce(%p), replica_groups=[2,8]<=[16], to_apply=%add
+  ROOT %cp = f32[16,64]{1,0} collective-permute(%p), source_target_pairs={{0,1}}
+}
+"""
+    rep = analyze_hlo(hlo)
+    ag = 16 * 256 * 4 * (4 - 1) / 4
+    ar = 2 * 16 * 64 * 4 * (8 - 1) / 8
+    cp = 16 * 64 * 4
+    assert rep.collective_by_op["all-gather"] == pytest.approx(ag)
+    assert rep.collective_by_op["all-reduce"] == pytest.approx(ar)
+    assert rep.collective_by_op["collective-permute"] == pytest.approx(cp)

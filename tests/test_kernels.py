@@ -1,0 +1,82 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (attention_reference, flash_attention,
+                           mamba_chunk_scan, rmsnorm, rmsnorm_reference,
+                           ssd_reference)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 128, 4, 4, 32),    # MHA
+    (2, 256, 8, 2, 32),    # GQA group=4
+    (1, 128, 4, 1, 64),    # MQA
+    (2, 192, 6, 3, 16),    # non-power-of-two seq/heads
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, kv, hd, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_cross_lengths():
+    """Sq != Skv (chunked prefill / cross-attention shape)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 256, 4, 32))
+    v = jax.random.normal(ks[2], (1, 256, 4, 32))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk,hb", [
+    (1, 64, 4, 16, 8, 16, 2),
+    (2, 128, 8, 32, 16, 32, 4),
+    (1, 96, 2, 8, 4, 32, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_chunk_scan_sweep(b, s, h, p, n, chunk, hb, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(dtype)
+    a_log = jnp.linspace(0.0, 1.5, h)
+    bm = jax.random.normal(ks[2], (b, s, n), dtype)
+    cm = jax.random.normal(ks[3], (b, s, n), dtype)
+    y = mamba_chunk_scan(x, dt, a_log, bm, cm, chunk=chunk, head_block=hb,
+                         interpret=True)
+    yref, _ = ssd_reference(x, dt, a_log, bm, cm)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("rows,d,block", [(64, 128, 16), (256, 512, 64),
+                                          (32, 1024, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, block, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = (jax.random.normal(ks[0], (4, rows // 4, d)) * 3.0).astype(dtype)
+    w = jax.random.normal(ks[1], (d,), jnp.float32)
+    out = rmsnorm(x, w, block_rows=block, interpret=True)
+    ref = rmsnorm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))

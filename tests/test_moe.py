@@ -1,0 +1,83 @@
+"""MoE dispatch: sort-vs-einsum equivalence + capacity/balance properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models import get_family
+from repro.models.moe import expert_capacity, moe_block, moe_param_specs
+from repro.models.params import init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced_config("olmoe-1b-7b").replace(dtype="float32")
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, fam, params
+
+
+def _batch(cfg, seed, b=2, s=64):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)}
+
+
+def test_sort_equals_einsum_forward_and_grads(setup):
+    cfg, fam, params = setup
+    batch = _batch(cfg, 1)
+    cfg_s = cfg.replace(moe_impl="sort")
+    l_e, m_e = fam.train_loss(cfg, params, batch)
+    l_s, m_s = fam.train_loss(cfg_s, params, batch)
+    assert float(m_e["moe_drop_frac"]) == float(m_s["moe_drop_frac"])
+    np.testing.assert_allclose(float(l_e), float(l_s), rtol=2e-5)
+    g_e = jax.grad(lambda p: fam.train_loss(cfg, p, batch)[0])(params)
+    g_s = jax.grad(lambda p: fam.train_loss(cfg_s, p, batch)[0])(params)
+    for a, b_ in zip(jax.tree.leaves(g_e), jax.tree.leaves(g_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_property_sort_equals_einsum_many_routings(setup, seed):
+    cfg, fam, params = setup
+    batch = _batch(cfg, seed)
+    l_e, _ = fam.train_loss(cfg, params, batch)
+    l_s, _ = fam.train_loss(cfg.replace(moe_impl="sort"), params, batch)
+    np.testing.assert_allclose(float(l_e), float(l_s), rtol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(gs=st.sampled_from([64, 128, 256]), k=st.integers(1, 4),
+       e=st.sampled_from([4, 8, 16]), cf=st.floats(0.5, 2.0))
+def test_property_capacity_bounds(gs, k, e, cf):
+    """0 < capacity <= group tokens · k; monotone in capacity_factor."""
+    cfg = get_reduced_config("olmoe-1b-7b").replace(
+        num_experts=e, experts_per_token=min(k, e), capacity_factor=cf)
+    cap = expert_capacity(cfg, gs)
+    assert 1 <= cap
+    assert cap * e >= gs * min(k, e) * min(cf, 1.0) * 0.99  # no artificial drop
+    cap_hi = expert_capacity(cfg.replace(capacity_factor=cf + 0.5), gs)
+    assert cap_hi >= cap
+
+
+def test_uniform_routing_drops_nothing(setup):
+    """With capacity_factor >= 1 and perfectly balanced router logits,
+    nothing is dropped."""
+    cfg, fam, params = setup
+    # zero router -> uniform probs -> top-k ties broken deterministically,
+    # all tokens pick the same experts; use generous capacity instead
+    cfg2 = cfg.replace(capacity_factor=float(cfg.num_experts))
+    _, m = fam.train_loss(cfg2, params, _batch(cfg, 3))
+    assert float(m["moe_drop_frac"]) == 0.0
+
+
+def test_aux_losses_positive_and_finite(setup):
+    cfg, fam, params = setup
+    _, m = fam.train_loss(cfg, params, _batch(cfg, 4))
+    assert np.isfinite(float(m["moe_lb_loss"])) and float(m["moe_lb_loss"]) >= 1.0
+    assert np.isfinite(float(m["moe_z_loss"])) and float(m["moe_z_loss"]) >= 0.0

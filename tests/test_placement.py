@@ -1,0 +1,45 @@
+"""Cost-aware placement policy (paper §VII-E live-runtime counterpart)."""
+import pytest
+
+from repro.core.market import SpotMarket
+from repro.core.placement import PlacementPolicy
+
+
+@pytest.fixture
+def market():
+    return SpotMarket(seed=11)
+
+
+def test_global_scope_never_worse_than_region(market):
+    g = PlacementPolicy(market, "c4.8xlarge", scope="global")
+    r = PlacementPolicy(market, "c4.8xlarge", scope="region")
+    for t in (0.0, 100.0, 500.0):
+        dg = g.place(data_region="us-east-1", est_hours=1.0,
+                     data_down_gb=0.0, data_up_gb=0.0, t_hours=t)
+        dr = r.place(data_region="us-east-1", est_hours=1.0,
+                     data_down_gb=0.0, data_up_gb=0.0, t_hours=t)
+        assert dg.expected_total <= dr.expected_total + 1e-9
+
+
+def test_heavy_data_pins_to_home_region(market):
+    """With huge egress, the optimum co-locates with the data (paper Fig 7)."""
+    g = PlacementPolicy(market, "c4.8xlarge", scope="global")
+    d = g.place(data_region="us-east-1", est_hours=1.0,
+                data_down_gb=500.0, data_up_gb=500.0, t_hours=7.0)
+    assert not d.cross_region
+
+
+def test_region_scope_respects_region(market):
+    r = PlacementPolicy(market, "c4.8xlarge", scope="region")
+    d = r.place(data_region="eu-west-1", est_hours=1.0,
+                data_down_gb=1.0, data_up_gb=1.0)
+    assert d.zone.region == "eu-west-1"
+    assert not d.cross_region
+
+
+def test_egress_added_only_cross_region(market):
+    g = PlacementPolicy(market, "c4.8xlarge", scope="global")
+    d = g.place(data_region="us-east-1", est_hours=1.0,
+                data_down_gb=10.0, data_up_gb=10.0, t_hours=3.0)
+    expected_egress = 0.0 if not d.cross_region else 20.0 * 0.02
+    assert d.expected_total == pytest.approx(d.hourly_price + expected_egress)

@@ -1,0 +1,144 @@
+"""Job management (paper §IV-D): queues, workers, watcher, restore parking."""
+import time
+
+import pytest
+
+from repro.core import (ExecutableRegistry, JobSpec, JobStatus, KottaService,
+                        ObjectStore, PolicyEngine, Principal, Role, Tier,
+                        allow, days, install_standard_roles)
+
+
+def make_service(**watcher_kwargs):
+    engine = PolicyEngine()
+    install_standard_roles(engine)
+    store = ObjectStore(clock=engine.clock)
+    registry = ExecutableRegistry()
+
+    @registry.register("wordcount")
+    def wordcount(ctx):
+        total = sum(len(v.split()) for v in ctx.staged_inputs.values())
+        ctx.outputs[f"results/{ctx.job_id}/count.txt"] = str(total).encode()
+        return total
+
+    @registry.register("sleepy")
+    def sleepy(ctx):
+        for _ in range(50):
+            ctx.checkpoint()
+            time.sleep(0.01)
+        return "done"
+
+    @registry.register("boom")
+    def boom(ctx):
+        raise RuntimeError("analysis exploded")
+
+    svc = KottaService(engine, store, registry,
+                       watcher_kwargs=watcher_kwargs or
+                       {"heartbeat_timeout_s": 0.5, "interval_s": 0.05})
+    return svc
+
+
+def make_user(svc, uid="alice", dataset="corpus"):
+    role = Role(f"user-{uid}", policies=[
+        allow(["data:Get", "data:List"], [f"dataset/{dataset}/*"]),
+        allow(["data:*"], [f"results/*"]),
+        allow(["jobs:*"], ["queue/*"]),
+    ], trusted_assumers={"task-executor"})
+    svc.engine.register_role(role)
+    p = Principal(uid)
+    svc.engine.authenticator.register_identity(p, "pw")
+    svc.engine.bind(p, role.name)
+    return svc.engine.login(uid, "pw")
+
+
+@pytest.fixture
+def svc():
+    s = make_service()
+    yield s
+    s.shutdown()
+
+
+def test_end_to_end_job(svc):
+    svc.store.put("dataset/corpus/a.txt", b"the quick brown fox", owner="sys")
+    tok = make_user(svc)
+    svc.start(dev_workers=1)
+    job = svc.submit(tok, JobSpec("wordcount", inputs=("dataset/corpus/a.txt",),
+                                  queue="dev"))
+    rec = svc.wait(job, timeout_s=10)
+    assert rec["status"] == JobStatus.COMPLETED
+    assert svc.store.get(f"results/{job}/count.txt") == b"4"
+
+
+def test_unauthorized_submit_rejected(svc):
+    svc.store.put("dataset/secret/a", b"x", owner="sys")
+    tok = make_user(svc, dataset="corpus")
+    svc.start()
+    with pytest.raises(Exception):
+        svc.submit(tok, JobSpec("wordcount", inputs=("dataset/secret/a",)))
+
+
+def test_failed_job_reports_error(svc):
+    tok = make_user(svc)
+    svc.start()
+    job = svc.submit(tok, JobSpec("boom", queue="dev"))
+    rec = svc.wait(job, timeout_s=10)
+    assert rec["status"] == JobStatus.FAILED
+    assert "exploded" in rec["error"]
+
+
+def test_archived_input_parks_then_runs(svc):
+    svc.store.put("dataset/corpus/cold.txt", b"one two", owner="sys")
+    # age it into ARCHIVE
+    meta = svc.store.head("dataset/corpus/cold.txt")
+    meta.tier = Tier.ARCHIVE
+    tok = make_user(svc)
+    svc.start(dev_workers=1)
+    job = svc.submit(tok, JobSpec("wordcount",
+                                  inputs=("dataset/corpus/cold.txt",),
+                                  queue="dev"))
+    time.sleep(0.3)
+    assert svc.status(job)["status"] == JobStatus.WAITING_DATA
+    # fast-forward the restore (real latency is 4h)
+    meta.restore_ready_at = svc.clock.now() - 1
+    rec = svc.wait(job, timeout_s=10)
+    assert rec["status"] == JobStatus.COMPLETED
+
+
+def test_revocation_resubmits_and_completes(svc):
+    tok = make_user(svc)
+    svc.start(dev_workers=1)
+    w_spot = svc.add_worker("prod", preemptible=True)
+    job = svc.submit(tok, JobSpec("sleepy", queue="prod"))
+    deadline = time.time() + 5
+    while (svc.status(job)["status"] != JobStatus.RUNNING
+           and time.time() < deadline):
+        time.sleep(0.02)
+    w_spot.revoke()                      # spot reclaim mid-run
+    svc.add_worker("prod", preemptible=True)
+    rec = svc.wait(job, timeout_s=20)
+    assert rec["status"] == JobStatus.COMPLETED
+    assert svc.watcher.resubmissions >= 1 or rec.get("attempt", 0) >= 0
+
+
+def test_worker_assumes_user_role_for_staging(svc):
+    svc.store.put("dataset/corpus/a.txt", b"hello world", owner="sys")
+    tok = make_user(svc)
+    svc.start(dev_workers=1)
+    job = svc.submit(tok, JobSpec("wordcount", inputs=("dataset/corpus/a.txt",),
+                                  queue="dev"))
+    svc.wait(job, timeout_s=10)
+    assumes = [r for r in svc.engine.audit.records(decision="allow")
+               if r.action == "sts:AssumeRole" and "user-alice" in r.resource]
+    assert assumes, "worker must assume the submitting user's role to stage"
+
+
+def test_throughput_multiple_jobs(svc):
+    tok = make_user(svc)
+    svc.start(dev_workers=2)
+
+    @svc.registry.register("quick")
+    def quick(ctx):
+        return "ok"
+
+    jobs = [svc.submit(tok, JobSpec("quick", queue="dev")) for _ in range(12)]
+    for j in jobs:
+        assert svc.wait(j, timeout_s=15)["status"] == JobStatus.COMPLETED

@@ -1,0 +1,172 @@
+"""Security fabric (paper §VI): RBAC, assume-role, tokens, signed URLs."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AuthorizationError, Policy, PolicyEngine, Principal,
+                        Role, SecurityError, TokenExpiredError, VirtualClock,
+                        allow, deny, hours, install_standard_roles,
+                        make_dataset_role)
+
+
+@pytest.fixture
+def engine():
+    eng = PolicyEngine(clock=VirtualClock())
+    install_standard_roles(eng)
+    return eng
+
+
+def _user(engine, uid="alice", roles=()):
+    p = Principal(uid)
+    engine.authenticator.register_identity(p, "s3cret")
+    for r in roles:
+        engine.bind(p, r)
+    return p
+
+
+def test_least_privilege_default(engine):
+    _user(engine)
+    # no roles -> cannot even log in to a role
+    with pytest.raises(AuthorizationError):
+        engine.login("alice", "s3cret")
+
+
+def test_wrong_secret_rejected(engine):
+    _user(engine, roles=["kotta-public-only"])
+    with pytest.raises(SecurityError):
+        engine.login("alice", "wrong")
+
+
+def test_public_role_scoping(engine):
+    _user(engine, roles=["kotta-public-only"])
+    tok = engine.login("alice", "s3cret")
+    assert engine.is_authorized(tok, "data:Get", "dataset/public/wiki/part0")
+    assert not engine.is_authorized(tok, "data:Get", "dataset/wos/part0")
+    assert not engine.is_authorized(tok, "data:Put", "dataset/public/x")
+
+
+def test_private_dataset_no_download(engine):
+    make_dataset_role(engine, "wos", downloadable=False)
+    _user(engine, roles=["kotta-read-wos-private"])
+    tok = engine.login("alice", "s3cret")
+    assert engine.is_authorized(tok, "data:Get", "dataset/wos/part0")
+    # explicit deny beats any allow: bytes stay in the enclave
+    assert not engine.is_authorized(tok, "data:Download", "dataset/wos/part0")
+
+
+def test_token_expiry(engine):
+    _user(engine, roles=["kotta-public-only"])
+    tok = engine.login("alice", "s3cret")
+    engine.clock.advance(hours(1) + 1)
+    with pytest.raises(TokenExpiredError):
+        engine.check(tok, "data:Get", "dataset/public/x")
+
+
+def test_web_session_lasts_six_hours(engine):
+    _user(engine, roles=["kotta-public-only"])
+    tok = engine.web_session("alice", "s3cret")
+    engine.clock.advance(hours(5.9))
+    assert engine.is_authorized(tok, "data:Get", "dataset/public/x")
+    engine.clock.advance(hours(0.2))
+    with pytest.raises(TokenExpiredError):
+        engine.check(tok, "data:Get", "dataset/public/x")
+
+
+def test_task_executor_assumes_user_role(engine):
+    make_dataset_role(engine, "acm")
+    worker = engine.service_session("task-executor")
+    # worker itself cannot read the dataset...
+    assert not engine.is_authorized(worker, "data:Get", "dataset/acm/p0")
+    # ...but may assume the dataset role (trusted_assumers) to stage data
+    assumed = engine.assume_role(worker, "kotta-read-acm-private")
+    assert engine.is_authorized(assumed, "data:Get", "dataset/acm/p0")
+
+
+def test_untrusted_role_cannot_assume(engine):
+    make_dataset_role(engine, "acm")
+    _user(engine, roles=["kotta-public-only"])
+    tok = engine.login("alice", "s3cret")
+    with pytest.raises(AuthorizationError):
+        engine.assume_role(tok, "kotta-read-acm-private")
+
+
+def test_assumed_session_bounded_by_parent(engine):
+    make_dataset_role(engine, "acm")
+    worker = engine.service_session("task-executor")
+    assumed = engine.assume_role(worker, "kotta-read-acm-private")
+    assert assumed.expires_at <= worker.expires_at
+
+
+def test_signed_url_roundtrip_and_tamper(engine):
+    make_dataset_role(engine, "pub", downloadable=True)
+    _user(engine, roles=["kotta-read-pub-private"])
+    tok = engine.login("alice", "s3cret")
+    url = engine.sign_url(tok, "dataset/pub/obj")
+    assert engine.verify_url(url) == "dataset/pub/obj"
+    with pytest.raises(AuthorizationError):
+        engine.verify_url(url.replace("obj", "other"))
+    engine.clock.advance(hours(2))
+    with pytest.raises(TokenExpiredError):
+        engine.verify_url(url)
+
+
+def test_audit_log_records_denials(engine):
+    _user(engine, roles=["kotta-public-only"])
+    tok = engine.login("alice", "s3cret")
+    engine.is_authorized(tok, "data:Get", "dataset/wos/secret")
+    denials = engine.audit.records(principal_id="alice", decision="deny")
+    assert any(r.resource == "dataset/wos/secret" for r in denials)
+
+
+# -- property tests -----------------------------------------------------------
+
+_action = st.sampled_from(
+    ["data:Get", "data:Put", "data:Download", "jobs:Submit", "db:Get"])
+_resource = st.text(
+    alphabet="abc/xyz", min_size=1, max_size=12).map(lambda s: "dataset/" + s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(action=_action, resource=_resource)
+def test_property_default_deny(action, resource):
+    """A principal with no bindings is denied everything."""
+    eng = PolicyEngine(clock=VirtualClock())
+    eng.register_role(Role("empty", policies=[]))
+    p = Principal("bob")
+    eng.authenticator.register_identity(p, "pw")
+    eng.bind(p, "empty")
+    tok = eng.login("bob", "pw")
+    assert not eng.is_authorized(tok, action, resource)
+
+
+@settings(max_examples=40, deadline=None)
+@given(action=_action, resource=_resource)
+def test_property_explicit_deny_dominates(action, resource):
+    """deny-all + allow-all == deny, for any (action, resource)."""
+    eng = PolicyEngine(clock=VirtualClock())
+    eng.register_role(Role("mixed", policies=[
+        allow(["*"], ["*"]), deny([action], [resource])]))
+    p = Principal("bob")
+    eng.authenticator.register_identity(p, "pw")
+    eng.bind(p, "mixed")
+    tok = eng.login("bob", "pw")
+    assert not eng.is_authorized(tok, action, resource)
+    assert eng.is_authorized(tok, "other:Action", "elsewhere")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(["u1", "u2", "u3"]), min_size=1, max_size=6))
+def test_property_cross_user_isolation(users):
+    """No user can read another user's results/ prefix."""
+    eng = PolicyEngine(clock=VirtualClock())
+    toks = {}
+    for u in set(users):
+        eng.register_role(Role(f"user-{u}", policies=[
+            allow(["data:*"], [f"results/{u}/*"])]))
+        p = Principal(u)
+        eng.authenticator.register_identity(p, "pw")
+        eng.bind(p, f"user-{u}")
+        toks[u] = eng.login(u, "pw")
+    for u in toks:
+        for other in toks:
+            can = eng.is_authorized(toks[u], "data:Get", f"results/{other}/out")
+            assert can == (u == other)

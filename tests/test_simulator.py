@@ -1,0 +1,73 @@
+"""Elastic-scaling DES: Table VII-C relations + the 16x headline claim."""
+import pytest
+
+from repro.core import (ElasticSimulator, ScalingPolicy, make_paper_workload,
+                        run_table7c)
+
+
+@pytest.fixture(scope="module")
+def reports():
+    return {r.policy + str(r.max_nodes): r for r in run_table7c(seed=7)}
+
+
+def test_workload_matches_paper_spec():
+    jobs = make_paper_workload(seed=7)
+    assert len(jobs) == 40
+    hours = [j.duration_s / 3600 for j in jobs]
+    assert all(0.9 <= h <= 4.3 for h in hours)
+    assert {j.data_gb for j in jobs} <= {1.0, 3.0, 5.0, 7.0, 9.0}
+
+
+def test_static_pool_has_zero_wait(reports):
+    r = reports["none40"]
+    assert r.max_wait_s == 0.0
+    assert r.avg_wait_s == 0.0
+
+
+def test_unlimited_matches_static_makespan(reports):
+    """Paper: unlimited keeps the no-scaling makespan (idle reuse)."""
+    assert reports["unlimitedNone"].makespan_s <= reports["none40"].makespan_s * 1.10
+
+
+def test_unlimited_much_cheaper_than_static(reports):
+    base, elastic = reports["none40"], reports["unlimitedNone"]
+    savings = 1 - elastic.on_demand_cost / base.on_demand_cost
+    assert savings > 0.5  # paper: 61%
+
+
+def test_headline_16x_claim(reports):
+    """Spot + unlimited elastic vs static on-demand: >= 10x cheaper
+    (paper headline: 'up to 16x')."""
+    ratio = reports["none40"].on_demand_cost / reports["unlimitedNone"].spot_cost
+    assert ratio >= 10.0
+
+
+def test_limited_trades_makespan_for_cost(reports):
+    lim10, lim20 = reports["limited10"], reports["limited20"]
+    assert lim10.makespan_s > lim20.makespan_s
+    assert lim10.on_demand_cost < lim20.on_demand_cost
+    assert lim10.peak_instances <= 10 and lim20.peak_instances <= 20
+
+
+def test_all_jobs_complete_under_every_policy(reports):
+    for r in reports.values():
+        assert all(j.done_s is not None for j in r.jobs)
+
+
+def test_revocation_path_requeues_jobs():
+    """With an aggressively low bid, revocations happen and jobs still finish."""
+    wl = make_paper_workload(seed=3)
+    sim = ElasticSimulator(ScalingPolicy.unlimited(bid_fraction=0.05), wl,
+                           seed=3)
+    rep = sim.run()
+    assert all(j.done_s is not None for j in rep.jobs)
+    # a tiny bid under volatile prices must eventually revoke something
+    assert rep.revocations >= 1
+
+
+def test_determinism():
+    a = ElasticSimulator(ScalingPolicy.unlimited(),
+                         make_paper_workload(seed=7), seed=7).run()
+    b = ElasticSimulator(ScalingPolicy.unlimited(),
+                         make_paper_workload(seed=7), seed=7).run()
+    assert a.spot_cost == b.spot_cost and a.makespan_s == b.makespan_s
