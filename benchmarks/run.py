@@ -10,8 +10,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from benchmarks import (cost_aware, elastic_scaling, roofline, storage_cost,
-                        throughput, train_microbench)
+from benchmarks import (cost_aware, elastic_scaling, roofline, serve_bench,
+                        storage_cost, throughput, train_microbench)
 
 BENCHES = {
     "storage_cost": storage_cost.run,        # paper Table III
@@ -20,6 +20,7 @@ BENCHES = {
     "cost_aware": cost_aware.run,            # paper Fig 7
     "roofline": roofline.run,                # assignment §Roofline
     "train_microbench": train_microbench.run,
+    "serve": serve_bench.run,                # continuous batching vs static
 }
 
 

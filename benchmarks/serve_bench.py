@@ -1,0 +1,113 @@
+"""Benchmark: decode serving — static batch vs continuous batching.
+
+The serving analogue of the paper's elastic-vs-static provisioning tables:
+the static engine provisions one dense max_len cache per request and decodes
+the padded batch with one host dispatch per token; the continuous engine
+shares a paged KV pool, admits/evicts between on-device decode chunks, and
+syncs with the host once per chunk.
+
+Reports decode tokens/s and p50/p95 per-token latency at batch 1/8/32 with
+mixed prompt lengths (CPU, jit). Rows feed the ``name,us_per_call,derived``
+CSV that ``benchmarks/run.py`` prints.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import ContinuousBatchingEngine, ServeEngine
+
+ARCH = "yi-6b"
+PROMPT_LENS = (5, 12, 24, 40)       # cycled per request (mixed, ragged)
+MAX_NEW = 32
+BATCHES = (1, 8, 32)
+DECODE_CHUNK = 16
+
+
+def _build():
+    cfg = get_reduced_config(ARCH).replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _prompts(batch: int, vocab: int):
+    rng = np.random.RandomState(0)
+    return [rng.randint(0, vocab, size=PROMPT_LENS[i % len(PROMPT_LENS)])
+            .tolist() for i in range(batch)]
+
+
+def _bench_static(cfg, params, prompts, max_len):
+    eng = ServeEngine(cfg, params, max_len=max_len)
+    eng.generate(prompts, max_new=4)                  # warm the jit caches
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, max_new=MAX_NEW)
+    dt = time.perf_counter() - t0
+    n_tok = out.tokens.size
+    # One device sync per generate: every token lands in the same burst, so
+    # the per-token latency distribution is degenerate (p50 == p95 == mean).
+    return n_tok / dt, dt / MAX_NEW * 1e3
+
+
+def _bench_continuous(cfg, params, prompts, max_len):
+    # One engine for warmup + measurement: the decode-chunk/prefill jits are
+    # per-engine closures, so a fresh engine would re-pay compilation.
+    eng = ContinuousBatchingEngine(
+        cfg, params, max_len=max_len,
+        max_slots=min(len(prompts), cfg.max_decode_slots * 4),
+        decode_chunk=DECODE_CHUNK)
+
+    def run(chunk_times):
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, max_new=MAX_NEW,
+                           on_chunk=lambda steps, s: chunk_times.append(
+                               (steps, s)))
+        return out, time.perf_counter() - t0
+
+    run([])                                           # warm the jit caches
+    chunk_times: list[tuple[int, float]] = []
+    out, dt = run(chunk_times)
+    n_tok = out.tokens.size
+    # Inter-token latency per request stream: a chunk of k steps gives every
+    # active slot k tokens in `s` seconds -> k samples of s/k.
+    lat = np.concatenate([
+        np.full(steps, s / max(steps, 1)) for steps, s in chunk_times])
+    return (n_tok / dt,
+            float(np.percentile(lat, 50)) * 1e3,
+            float(np.percentile(lat, 95)) * 1e3)
+
+
+def run(verbose: bool = True):
+    cfg, params = _build()
+    rows = []
+    if verbose:
+        print("\n== serve: static batch vs continuous batching "
+              f"({ARCH} reduced, mixed prompts {PROMPT_LENS}, "
+              f"max_new={MAX_NEW}) ==")
+        print(f"{'batch':>6}{'static tok/s':>14}{'cont tok/s':>12}"
+              f"{'speedup':>9}{'p50 ms/tok':>12}{'p95 ms/tok':>12}")
+    max_len = max(PROMPT_LENS) + MAX_NEW + 8
+    for b in BATCHES:
+        prompts = _prompts(b, cfg.vocab_size)
+        s_tps, s_lat = _bench_static(cfg, params, prompts, max_len)
+        c_tps, p50, p95 = _bench_continuous(cfg, params, prompts, max_len)
+        speed = c_tps / s_tps
+        if verbose:
+            print(f"{b:>6}{s_tps:>14.0f}{c_tps:>12.0f}{speed:>8.2f}x"
+                  f"{p50:>12.2f}{p95:>12.2f}")
+        rows.append((f"serve.static.b{b}", 1e6 / s_tps,
+                     f"tok_s={s_tps:.0f};lat_ms={s_lat:.2f}"))
+        rows.append((f"serve.continuous.b{b}", 1e6 / c_tps,
+                     f"tok_s={c_tps:.0f};p50_ms={p50:.2f};p95_ms={p95:.2f};"
+                     f"speedup={speed:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

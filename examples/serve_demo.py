@@ -1,7 +1,9 @@
 """Batched serving near the data (paper: 'analytics close to the data').
 
-Prefill + greedy decode over a shared KV cache for a batch of prompts, with
-the model weights restored from a tiered-store checkpoint.
+Continuous-batching greedy decode over a shared *paged* KV cache for a batch
+of ragged prompts, with the model weights restored from a tiered-store
+checkpoint. Finished sequences free their cache pages for queued prompts —
+the serving analogue of the paper's elastic provisioning.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -14,7 +16,7 @@ from repro.configs import get_reduced_config
 from repro.core import ObjectStore, VirtualClock
 from repro.models import get_family
 from repro.models.params import init_params
-from repro.serve import ServeEngine
+from repro.serve import ContinuousBatchingEngine
 
 
 def main():
@@ -31,7 +33,9 @@ def main():
     print(f"restored {len(jax.tree.leaves(params))} weight tensors "
           f"from the object store")
 
-    engine = ServeEngine(cfg, params, max_len=64)
+    # 2 slots for 4 prompts: the last two queue and are admitted the moment
+    # the first finishers evict and free their pages (continuous batching).
+    engine = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2)
     prompts = [[1, 2, 3], [10, 11], [42, 43, 44, 45], [7]]
     t0 = time.time()
     out = engine.generate(prompts, max_new=12)

@@ -59,6 +59,10 @@ class ModelConfig:
     attn_impl: str = "chunked"       # "chunked" | "dense" | "pallas"
     attn_block_triangular: bool = False  # skip fully-masked KV chunks (perf opt)
 
+    # --- serving (paged KV cache / continuous batching) ------------------------
+    page_size: int = 16              # KV rows per physical cache page
+    max_decode_slots: int = 8        # concurrent requests the serve engine admits
+
     # --- modality frontend stub (audio / vlm) ---------------------------------
     frontend: str = ""               # "" | "frame" | "patch"
     frontend_dim: int = 0            # 512 (HuBERT features) / 1152 (SigLIP)

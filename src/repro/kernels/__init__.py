@@ -7,9 +7,12 @@ kernel ships with ``ops.py`` (jit wrapper) and ``ref.py`` (pure-jnp oracle)
 and is validated in interpret mode on CPU (tests/test_kernels.py); real-TPU
 dispatch is selected by ``ModelConfig.attn_impl="pallas"``.
 """
+from .decode_attention import (flash_decode, paged_decode_attention,
+                               paged_decode_reference)
 from .flash_attention import attention_reference, flash_attention
 from .mamba_scan import mamba_chunk_scan, ssd_reference
 from .rmsnorm import rmsnorm, rmsnorm_reference
 
 __all__ = ["flash_attention", "attention_reference", "mamba_chunk_scan",
-           "ssd_reference", "rmsnorm", "rmsnorm_reference"]
+           "ssd_reference", "rmsnorm", "rmsnorm_reference", "flash_decode",
+           "paged_decode_attention", "paged_decode_reference"]

@@ -1,0 +1,5 @@
+from .ops import (default_num_splits, flash_decode, paged_decode_attention)
+from .ref import gather_pages, paged_decode_reference
+
+__all__ = ["flash_decode", "paged_decode_attention", "paged_decode_reference",
+           "gather_pages", "default_num_splits"]

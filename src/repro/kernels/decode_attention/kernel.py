@@ -1,0 +1,150 @@
+"""Split-KV GQA flash-decode Pallas TPU kernel over a block-paged KV cache.
+
+Decode-step attention is bandwidth-bound: one (G, hd) query block per KV head
+must stream the whole cache. This kernel adapts the FlashDecoding split-KV
+dataflow (Dao et al.) to a *paged* cache — the physical pool is
+(KV, P, page_size, hd); each request addresses it through a page table, so
+ragged batches need no host-side padding or cache compaction:
+
+- Grid = (B, KV, splits, pages_per_split). The page axis is innermost
+  (sequential on TPU), so the online-softmax accumulators for one split live
+  in VMEM scratch across its pages. Each split emits an *unnormalized*
+  partial (acc, m, l); the cheap associative combine over splits happens in
+  jnp outside the kernel — that is what lets long caches use the full chip
+  instead of serializing on one accumulator.
+- Page indirection is resolved by the BlockSpec index map reading the
+  scalar-prefetched page table (``PrefetchScalarGridSpec``): the pipeliner
+  DMAs physical page ``pt[b, split*pps + pp]`` HBM->VMEM while the previous
+  page computes. Per-request ``lengths`` mask positions >= length; pages
+  entirely past the length are skipped with ``pl.when`` (their DMA target is
+  a clamped valid page, so no OOB traffic).
+- VMEM @ page_size=64, hd=128, G<=8 fp32: q 4KiB + k,v 32KiB ea + acc 4KiB
+  + m/l <1KiB — far under budget; double-buffered page streaming dominates.
+
+This container is CPU-only: validated against ``ref.py`` in interpret mode
+(tests/test_decode_attention.py); on TPU silicon ``ops.paged_decode_attention``
+dispatches here for ``attn_impl="pallas"``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, page_size: int, pages_per_split: int):
+    b = pl.program_id(0)
+    pp = pl.program_id(2)          # split index
+    pi = pl.program_id(3)          # page-within-split (innermost, sequential)
+    page_global = pp * pages_per_split + pi
+    start = page_global * page_size
+    length = len_ref[b]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Skip pages entirely past this request's length (ragged batches).
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == pages_per_split - 1)
+    def _emit_partial():
+        # Unnormalized: the split combine normalizes once, globally.
+        o_ref[0, 0, 0] = acc_scr[...]
+        m_ref[0, 0, 0] = m_scr[...]
+        l_ref[0, 0, 0] = l_scr[...]
+
+
+def flash_decode_fwd(q, k_pages, v_pages, page_table, lengths, *,
+                     num_splits: int = 1, interpret: bool = False):
+    """q: (B,H,hd); k/v_pages: (KV,P,ps,hd); page_table: (B,npages) int32;
+    lengths: (B,) int32 -> (B,H,hd)."""
+    b, h, hd = q.shape
+    nkv, _, page_size, _ = k_pages.shape
+    g = h // nkv
+    npages = page_table.shape[1]
+    if npages % num_splits:
+        raise ValueError(f"npages {npages} % num_splits {num_splits}")
+    pps = npages // num_splits
+    scale = 1.0 / math.sqrt(hd)
+
+    # Clamp table entries so masked-out pages still DMA a valid physical page.
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, k_pages.shape[1] - 1)
+    qr = q.reshape(b, nkv, g, hd)
+
+    grid = (b, nkv, num_splits, pps)
+    kernel = functools.partial(_flash_decode_kernel, scale=scale,
+                               page_size=page_size, pages_per_split=pps)
+
+    def page_index(bi, kv, sp, pi, pt_ref, len_ref):
+        return (kv, pt_ref[bi, sp * pps + pi], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda bi, kv, sp, pi, pt, ln: (bi, kv, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, hd), page_index),
+            pl.BlockSpec((1, 1, page_size, hd), page_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, hd),
+                         lambda bi, kv, sp, pi, pt, ln: (bi, kv, sp, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda bi, kv, sp, pi, pt, ln: (bi, kv, sp, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda bi, kv, sp, pi, pt, ln: (bi, kv, sp, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),          # running max m
+            pltpu.VMEM((g,), jnp.float32),          # running denom l
+            pltpu.VMEM((g, hd), jnp.float32),       # unnormalized accumulator
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nkv, num_splits, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nkv, num_splits, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, nkv, num_splits, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pt, lengths.astype(jnp.int32), qr, k_pages, v_pages)
+
+    # Associative split combine (FlashDecoding reduction), fp32.
+    m_star = jnp.max(m_part, axis=2, keepdims=True)            # (B,KV,1,G)
+    w = jnp.exp(m_part - m_star)                               # (B,KV,S,G)
+    l_tot = jnp.sum(w * l_part, axis=2)                        # (B,KV,G)
+    acc = jnp.sum(w[..., None] * o_part, axis=2)               # (B,KV,G,hd)
+    out = acc / jnp.maximum(l_tot, 1e-20)[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""jit'd public wrappers for the paged flash-decode kernel.
+
+``flash_decode`` is the raw kernel entry point (interpret-capable for CPU
+validation). ``paged_decode_attention`` is what the model decode path calls:
+it dispatches to the Pallas kernel on TPU silicon (``attn_impl="pallas"``)
+and to the fused-gather jnp reference everywhere else, so the same serving
+engine runs on a laptop CPU and a TPU pod slice.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_decode_fwd
+from .ref import paged_decode_reference
+
+
+@partial(jax.jit, static_argnames=("num_splits", "interpret"))
+def flash_decode(q, k_pages, v_pages, page_table, lengths, *,
+                 num_splits: int = 1, interpret: bool = False):
+    return flash_decode_fwd(q, k_pages, v_pages, page_table, lengths,
+                            num_splits=num_splits, interpret=interpret)
+
+
+def default_num_splits(npages: int, target: int = 4) -> int:
+    """Largest split count <= target that divides the page-table width."""
+    for s in range(min(target, npages), 0, -1):
+        if npages % s == 0:
+            return s
+    return 1
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           impl: str = "pallas"):
+    """Paged GQA decode attention with backend dispatch (see module doc)."""
+    if impl == "pallas" and jax.default_backend() == "tpu":
+        splits = default_num_splits(page_table.shape[1])
+        return flash_decode_fwd(q, k_pages, v_pages, page_table, lengths,
+                                num_splits=splits)
+    return paged_decode_reference(q, k_pages, v_pages, page_table, lengths)

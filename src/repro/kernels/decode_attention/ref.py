@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for paged GQA flash-decode.
+
+The cache is a *block-paged* pool: physical pages of ``page_size`` KV rows,
+addressed per request through a page table. The oracle gathers each request's
+logical KV stream back into a dense (B, T, KV, hd) view and runs masked
+attention in fp32 — the semantics the Pallas kernel must reproduce.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+
+def gather_pages(pages, page_table):
+    """(KV, P, ps, hd), (B, npages) -> dense (B, T, KV, hd), T = npages*ps."""
+    nkv, _, ps, hd = pages.shape
+    b, npages = page_table.shape
+    seq = pages[:, page_table]                       # (KV, B, npages, ps, hd)
+    seq = seq.transpose(1, 2, 3, 0, 4)               # (B, npages, ps, KV, hd)
+    return seq.reshape(b, npages * ps, nkv, hd)
+
+
+def paged_decode_reference(q, k_pages, v_pages, page_table, lengths):
+    """Single-step GQA attention over a paged KV cache.
+
+    q: (B, H, hd) — the new token's queries.
+    k_pages/v_pages: (KV, P, page_size, hd) — the shared physical pool.
+    page_table: (B, npages) int32 — logical page i of request b lives in
+        physical page ``page_table[b, i]``.
+    lengths: (B,) int32 — valid KV rows per request (cache slots >= length
+        are masked; ragged batches need no host-side padding).
+    Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    nkv = k_pages.shape[0]
+    g = h // nkv
+    k = gather_pages(k_pages, page_table)            # (B, T, KV, hd)
+    v = gather_pages(v_pages, page_table)
+    t = k.shape[1]
+    qg = q.reshape(b, nkv, g, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(t)[None, :] < lengths[:, None]               # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,6 +1,11 @@
-"""Serving launcher: batched greedy decoding for a (reduced) architecture.
+"""Serving launcher: greedy decoding for a (reduced) architecture.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --max-new 16
+
+``--engine continuous`` (default for attention families) decodes over the
+shared paged KV cache with continuous batching; ``--engine static`` uses the
+legacy padded-batch engine (and is the only choice for recurrent-state
+families, whose per-slot states are dense).
 """
 import argparse
 
@@ -9,12 +14,14 @@ import jax
 from repro.configs import ARCH_NAMES, get_reduced_config
 from repro.models import get_family
 from repro.models.params import init_params
-from repro.serve import ServeEngine
+from repro.serve import ContinuousBatchingEngine, ServeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_NAMES), default="yi-6b")
+    ap.add_argument("--engine", choices=("continuous", "static", "auto"),
+                    default="auto")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
@@ -26,12 +33,20 @@ def main() -> None:
     fam = get_family(cfg)
     params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
-    engine = ServeEngine(cfg, params, max_len=args.max_len)
+    engine_kind = args.engine
+    if engine_kind == "auto":
+        engine_kind = ("continuous" if hasattr(fam, "decode_paged")
+                       else "static")
+    if engine_kind == "continuous":
+        engine = ContinuousBatchingEngine(cfg, params, max_len=args.max_len)
+    else:
+        engine = ServeEngine(cfg, params, max_len=args.max_len)
     rng = jax.random.PRNGKey(1)
     prompts = [[int(t) for t in jax.random.randint(
         jax.random.fold_in(rng, i), (3 + i % 4,), 0, cfg.vocab_size)]
         for i in range(args.batch)]
     out = engine.generate(prompts, max_new=args.max_new)
+    print(f"engine: {engine_kind}")
     for p, toks in zip(prompts, out.tokens.tolist()):
         print(f"{p} -> {toks}")
 

@@ -216,6 +216,19 @@ def attention_param_specs(cfg) -> dict:
     }
 
 
+def _qkv_proj(cfg, p, x, positions):
+    """Pre-norm q/k/v projections with RoPE — shared by the dense and paged
+    attention blocks so the projection contract cannot diverge."""
+    dt = cfg.cdtype
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
 def attention_block(cfg, p, x, positions, *, cache=None, decode_pos=None):
     """Pre-norm attention residual block.
 
@@ -224,12 +237,7 @@ def attention_block(cfg, p, x, positions, *, cache=None, decode_pos=None):
     → returns (y, (k_cache', v_cache')).
     """
     dt = cfg.cdtype
-    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
-    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(dt))
-    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(dt))
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = _qkv_proj(cfg, p, x, positions)
     q = shard(q, ("batch", "attn_seq", "heads", None))
     k = shard(k, ("batch", None, "kv_heads", None))
     if cache is None:
@@ -257,6 +265,39 @@ def attention_block(cfg, p, x, positions, *, cache=None, decode_pos=None):
     o = shard(o, ("batch", "attn_seq", "heads", None))
     y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
     return x + y, new_cache
+
+
+def paged_attention_block(cfg, p, x, *, k_pages, v_pages, page_table, pos):
+    """Pre-norm attention residual block over a block-paged KV cache.
+
+    x: (B,1,d) new-token activations; k_pages/v_pages: (KV,P,ps,hd) physical
+    pool slices for this layer; page_table: (B,npages) int32; pos: (B,) the
+    new token's position per request (cache holds [0, pos) valid rows).
+    Returns (y, (k_pages', v_pages')) with the new KV row scattered into the
+    pool page ``page_table[b, pos // ps]`` at offset ``pos % ps``.
+
+    ``attn_impl="pallas"`` dispatches the split-KV flash-decode kernel on TPU
+    (see kernels/decode_attention); other impls use the fused-gather oracle.
+    """
+    from repro.kernels.decode_attention import paged_decode_attention
+    dt = cfg.cdtype
+    b = x.shape[0]
+    ps = k_pages.shape[2]
+    q, k, v = _qkv_proj(cfg, p, x, pos[:, None])
+
+    bidx = jnp.arange(b)
+    page = page_table[bidx, pos // ps]                  # (B,) physical pages
+    off = pos % ps
+    # (B,1,KV,hd) -> (KV,B,hd) rows written at [kv, page_b, off_b].
+    k_pages = k_pages.at[:, page, off].set(
+        k[:, 0].transpose(1, 0, 2).astype(k_pages.dtype))
+    v_pages = v_pages.at[:, page, off].set(
+        v[:, 0].transpose(1, 0, 2).astype(v_pages.dtype))
+
+    o = paged_decode_attention(q[:, 0], k_pages, v_pages, page_table,
+                               pos + 1, impl=cfg.attn_impl)
+    y = jnp.einsum("bshk,hkd->bsd", o[:, None].astype(dt), p["wo"].astype(dt))
+    return x + y, (k_pages, v_pages)
 
 
 def _scatter_cache(cache, k, v, pos):

@@ -184,6 +184,58 @@ class TransformerFamily:
         logits = L.logits_fn(cfg, params, x)[:, 0]
         return logits, {"k": k, "v": v}
 
+    # -- ragged prefill (continuous-batching admission) -----------------------------
+    def prefill_ragged(self, cfg, params, batch):
+        """Prefill right-padded prompts; logits taken at ``length - 1``.
+
+        Right padding keeps cache row i at position i (what the page scatter
+        needs); causal masking makes rows < length independent of the pad, so
+        one compile serves every prompt length in a pad bucket.
+        """
+        x, positions, _ = self._embed(cfg, params, batch)
+        x, kv, _ = self._stack_forward(cfg, params, x, positions,
+                                       want_cache=True)
+        idx = batch["length"].astype(jnp.int32) - 1                 # (B,)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B,1,d)
+        logits = L.logits_fn(cfg, params, last)[:, 0]
+        k, v = kv
+        return logits, {"k": k, "v": v}
+
+    # -- paged decode (continuous-batching serve path) -------------------------------
+    def decode_paged(self, cfg, params, batch, pool):
+        """One decode step over the shared paged KV pool.
+
+        batch: tokens (B,1), pos (B,), page_table (B,npages) int32.
+        pool: {"k": (L,KV,P,ps,hd), "v": ...} — the *whole* physical pool; a
+        request touches only the pages its table row names, so finished
+        sequences free pages without any cache compaction or copies.
+        """
+        tokens, pos = batch["tokens"], batch["pos"]
+        page_table = batch["page_table"]
+        x = L.embed_tokens(cfg, params, tokens)
+
+        def body(carry, xs):
+            h = carry
+            layer_params, kp, vp = xs
+            h, (kp, vp) = L.paged_attention_block(
+                cfg, layer_params["attn"], h, k_pages=kp, v_pages=vp,
+                page_table=page_table, pos=pos)
+            if cfg.num_experts:
+                h, _ = moe_block(cfg, layer_params["ffn"], h)
+            else:
+                h = L.mlp_block(cfg, layer_params["ffn"], h)
+            return h, (kp, vp)
+
+        x, (k, v) = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.logits_fn(cfg, params, x)[:, 0]
+        return logits, {"k": k, "v": v}
+
+    def paged_pool_shape(self, cfg, num_pages: int):
+        """Physical pool array shape for ``num_pages`` shared cache pages."""
+        return (cfg.num_layers, cfg.num_kv_heads, num_pages, cfg.page_size,
+                cfg.head_dim)
+
     # -- abstract cache (dry-run input specs) ----------------------------------------
     def cache_layout(self, cfg, batch: int, cache_len: int):
         shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)

@@ -1,3 +1,3 @@
-from .engine import ServeEngine
+from .engine import ContinuousBatchingEngine, ServeEngine, ServeResult
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "ContinuousBatchingEngine", "ServeResult"]

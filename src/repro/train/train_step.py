@@ -84,6 +84,27 @@ def build_decode_step(cfg) -> Callable:
     return decode_step
 
 
+def build_paged_decode_step(cfg) -> Callable:
+    """Decode step over the shared paged KV pool (continuous batching).
+
+    The returned function is pure and donation-friendly: the serve engine
+    jits it with the pool donated so XLA updates pages in place, and wraps it
+    in a ``lax.fori_loop`` so a whole decode chunk runs without host syncs.
+    """
+    family = get_family(cfg)
+    if not hasattr(family, "decode_paged"):
+        raise ValueError(f"{cfg.name}: family {family.name!r} has no paged "
+                         "decode path (recurrent-state families keep their "
+                         "per-slot states dense)")
+
+    def paged_decode_step(params, batch, pool):
+        logits, pool = family.decode_paged(cfg, params, batch, pool)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, pool
+
+    return paged_decode_step
+
+
 def build_encode_step(cfg) -> Callable:
     """Encoder-only serve step (HuBERT): frames -> per-frame logits."""
     family = get_family(cfg)

@@ -1,5 +1,8 @@
 """Data pipeline: determinism, DP-shard disjointness, step purity."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ObjectStore, VirtualClock

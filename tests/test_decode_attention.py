@@ -1,0 +1,160 @@
+"""Paged flash-decode kernel vs oracle (interpret mode) + engine equivalence:
+continuous batching must reproduce the static-batch engine token-for-token."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.kernels import flash_decode, paged_decode_reference
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import ContinuousBatchingEngine, ServeEngine
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-3, atol=1e-3)
+
+
+def _paged_case(key, b, h, kv, hd, ps, npages, num_pool_pages, dtype):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kp = jax.random.normal(ks[1], (kv, num_pool_pages, ps, hd), dtype)
+    vp = jax.random.normal(ks[2], (kv, num_pool_pages, ps, hd), dtype)
+    # each request gets distinct physical pages, shuffled (paging is real)
+    perm = jax.random.permutation(ks[3], num_pool_pages)[:b * npages]
+    pt = perm.reshape(b, npages).astype(jnp.int32)
+    lengths = jax.random.randint(ks[4], (b,), 1, npages * ps + 1)
+    return q, kp, vp, pt, lengths.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("b,h,kv,hd", [
+    (2, 4, 4, 32),     # MHA
+    (3, 8, 2, 32),     # GQA group=4
+    (2, 4, 1, 64),     # MQA
+    (1, 6, 3, 16),     # odd head group
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(b, h, kv, hd, dtype):
+    ps, npages = 8, 4
+    q, kp, vp, pt, lengths = _paged_case(
+        jax.random.PRNGKey(0), b, h, kv, hd, ps, npages, 32, dtype)
+    out = flash_decode(q, kp, vp, pt, lengths, num_splits=2, interpret=True)
+    ref = paged_decode_reference(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_flash_decode_split_kv(num_splits):
+    """Split-KV partial combine is exact for any split factor."""
+    q, kp, vp, pt, lengths = _paged_case(
+        jax.random.PRNGKey(1), 2, 8, 2, 32, 8, 4, 16, jnp.float32)
+    out = flash_decode(q, kp, vp, pt, lengths, num_splits=num_splits,
+                       interpret=True)
+    ref = paged_decode_reference(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_decode_ragged_lengths():
+    """Per-request masking: very short next to pool-filling sequences."""
+    b, h, kv, hd, ps, npages = 4, 4, 2, 16, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kp = jax.random.normal(ks[1], (kv, b * npages, ps, hd))
+    vp = jax.random.normal(ks[2], (kv, b * npages, ps, hd))
+    pt = jnp.arange(b * npages, dtype=jnp.int32).reshape(b, npages)
+    lengths = jnp.array([1, 5, 17, npages * ps], jnp.int32)
+    out = flash_decode(q, kp, vp, pt, lengths, num_splits=2, interpret=True)
+    ref = paged_decode_reference(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level equivalence
+# ---------------------------------------------------------------------------
+
+def _make(arch="yi-6b", **kw):
+    cfg = get_reduced_config(arch).replace(dtype="float32", page_size=8, **kw)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, size=n).tolist() for n in lens]
+
+
+def test_continuous_matches_static_equal_lengths():
+    """No padding in play: both engines must emit identical tokens."""
+    cfg, params = _make()
+    prompts = _prompts(cfg.vocab_size, [8, 8, 8])
+    a = ServeEngine(cfg, params, max_len=48).generate(prompts, max_new=8)
+    b = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=3) \
+        .generate(prompts, max_new=8)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert a.prompt_lens == b.prompt_lens
+
+
+def test_continuous_matches_per_request_gold_mixed_lengths():
+    """Ragged batch: continuous batching must match the exact (unpadded,
+    single-request) decode — the static engine's left-padding perturbs RoPE
+    positions for shorter prompts, so per-request runs are the oracle."""
+    cfg, params = _make()
+    prompts = _prompts(cfg.vocab_size, [3, 7, 12, 5], seed=1)
+    legacy = ServeEngine(cfg, params, max_len=48)
+    gold = np.concatenate(
+        [legacy.generate([p], max_new=8).tokens for p in prompts])
+    out = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=4) \
+        .generate(prompts, max_new=8)
+    np.testing.assert_array_equal(gold, out.tokens)
+
+
+def test_continuous_batching_queues_and_reuses_pages():
+    """More requests than slots: eviction frees pages, waiters are admitted,
+    and tokens are unchanged vs the all-slots run."""
+    cfg, params = _make()
+    prompts = _prompts(cfg.vocab_size, [4, 9, 6, 11, 5, 8], seed=2)
+    wide = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=6) \
+        .generate(prompts, max_new=6)
+    narrow = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=2,
+                                      decode_chunk=4) \
+        .generate(prompts, max_new=6)
+    np.testing.assert_array_equal(wide.tokens, narrow.tokens)
+
+
+def test_decode_writes_cross_page_boundaries():
+    """Decoded KV rows spill from the prompt page into fresh pages."""
+    cfg, params = _make()
+    prompts = _prompts(cfg.vocab_size, [6], seed=3)     # page_size=8: crosses
+    legacy = ServeEngine(cfg, params, max_len=32)
+    gold = legacy.generate(prompts, max_new=12).tokens
+    out = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=1) \
+        .generate(prompts, max_new=12)
+    np.testing.assert_array_equal(gold, out.tokens)
+
+
+def test_engine_validates_before_reserving():
+    """Bad requests are rejected up front: no slot/page leak, engine reusable."""
+    cfg, params = _make()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.generate([[1, 2, 3], []], max_new=4)
+    with pytest.raises(ValueError, match="exceed max_len"):
+        eng.generate([[1, 2, 3], list(range(40))], max_new=4)
+    assert not eng._active.any()
+    assert len(eng._free_pages) == eng.num_pages - 1
+    out = eng.generate(_prompts(cfg.vocab_size, [4, 6], seed=4), max_new=4)
+    assert out.tokens.shape == (2, 4)
+
+
+def test_paged_decode_rejects_recurrent_families():
+    from repro.train.train_step import build_paged_decode_step
+    cfg = get_reduced_config("xlstm-350m")
+    with pytest.raises(ValueError, match="paged"):
+        build_paged_decode_step(cfg)

@@ -1,5 +1,7 @@
 """Storage lifecycle (paper §V-A): LRU tiering, restore queue, encryption."""
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (LifecyclePolicy, ObjectArchivedError, ObjectStore,

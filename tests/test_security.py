@@ -1,5 +1,7 @@
 """Security fabric (paper §VI): RBAC, assume-role, tokens, signed URLs."""
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AuthorizationError, Policy, PolicyEngine, Principal,
