@@ -2,6 +2,9 @@
 
 Prints a ``name,us_per_call,derived`` CSV summary after the human-readable
 tables. Usage: ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``.
+The serve benchmark additionally writes ``BENCH_serve.json`` (tokens/s,
+TTFT, prefix hit rate) so the perf trajectory is machine-readable across
+PRs.
 """
 from __future__ import annotations
 

@@ -62,6 +62,8 @@ class ModelConfig:
     # --- serving (paged KV cache / continuous batching) ------------------------
     page_size: int = 16              # KV rows per physical cache page
     max_decode_slots: int = 8        # concurrent requests the serve engine admits
+    prefill_chunk: int = 32          # query tokens per paged-prefill step
+    enable_prefix_cache: bool = True # share prompt-prefix pages copy-on-write
 
     # --- modality frontend stub (audio / vlm) ---------------------------------
     frontend: str = ""               # "" | "frame" | "patch"

@@ -11,8 +11,12 @@ from .decode_attention import (flash_decode, paged_decode_attention,
                                paged_decode_reference)
 from .flash_attention import attention_reference, flash_attention
 from .mamba_scan import mamba_chunk_scan, ssd_reference
+from .prefill_attention import (flash_prefill, paged_prefill_attention,
+                                paged_prefill_reference)
 from .rmsnorm import rmsnorm, rmsnorm_reference
 
 __all__ = ["flash_attention", "attention_reference", "mamba_chunk_scan",
            "ssd_reference", "rmsnorm", "rmsnorm_reference", "flash_decode",
-           "paged_decode_attention", "paged_decode_reference"]
+           "paged_decode_attention", "paged_decode_reference",
+           "flash_prefill", "paged_prefill_attention",
+           "paged_prefill_reference"]

@@ -1,0 +1,6 @@
+from .kernel import flash_prefill_fwd
+from .ops import flash_prefill, paged_prefill_attention
+from .ref import paged_prefill_reference
+
+__all__ = ["flash_prefill", "flash_prefill_fwd", "paged_prefill_attention",
+           "paged_prefill_reference"]

@@ -1,0 +1,133 @@
+"""Paged chunked-prefill GQA flash-attention Pallas TPU kernel.
+
+The decode kernel streams pool pages for ONE query row per KV head; prefill
+admission needs the same dataflow for a *chunk* of C prompt rows so admission
+cost is O(new tokens) regardless of how long the already-cached context is.
+One grid step attends the whole (C*G, hd) query block of a request against
+one physical page:
+
+- Grid = (B, KV, npages) with the page axis innermost (sequential on TPU), so
+  the online-softmax accumulators for the chunk live in VMEM scratch across
+  pages. No split-KV here: a chunk already exposes C*G rows of parallelism
+  per KV head, and prefill normalizes in-kernel at the last page.
+- Page indirection is resolved by the BlockSpec index map reading the
+  scalar-prefetched page table, exactly as in ``kernels/decode_attention``:
+  physical page ``pt[b, pi]`` is DMA'd HBM->VMEM while the previous page
+  computes. Pages entirely beyond the chunk's last position (``q_start + C``)
+  are skipped with ``pl.when`` (their DMA target is a clamped valid page, so
+  no OOB traffic).
+- Causality is positional: query row r (chunk offset r // G) at global
+  position ``q_start[b] + r // G`` masks keys at positions greater than its
+  own — that single rule covers both the history pages and the in-chunk
+  lower-triangular block, because the chunk's own KV rows are scattered into
+  the pool *before* the kernel runs.
+
+This container is CPU-only: validated against ``ref.py`` in interpret mode
+(tests/test_prefill_attention.py); on TPU silicon
+``ops.paged_prefill_attention`` dispatches here for ``attn_impl="pallas"``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(pt_ref, qs_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *,
+                          scale: float, page_size: int, group: int,
+                          chunk: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)          # logical page (innermost, sequential)
+    start = pi * page_size
+    qs = qs_ref[b]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Skip pages wholly beyond the chunk's last query position.
+    @pl.when(start <= qs + chunk - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (C*G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = q.shape[0]
+        q_pos = qs + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 0) // group
+        kv_pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 1)
+        s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)[:, None]
+
+
+def flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start, *,
+                      interpret: bool = False):
+    """q: (B,C,H,hd); k/v_pages: (KV,P,ps,hd); page_table: (B,npages) int32;
+    q_start: (B,) int32 -> (B,C,H,hd)."""
+    b, c, h, hd = q.shape
+    nkv, _, page_size, _ = k_pages.shape
+    g = h // nkv
+    npages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    # Clamp table entries so skipped pages still DMA a valid physical page.
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, k_pages.shape[1] - 1)
+    qr = q.reshape(b, c, nkv, g, hd).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, nkv, c * g, hd)
+
+    grid = (b, nkv, npages)
+    kernel = functools.partial(_flash_prefill_kernel, scale=scale,
+                               page_size=page_size, group=g, chunk=c)
+
+    def page_index(bi, kv, pi, pt_ref, qs_ref):
+        return (kv, pt_ref[bi, pi], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c * g, hd),
+                         lambda bi, kv, pi, pt, qs: (bi, kv, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, hd), page_index),
+            pl.BlockSpec((1, 1, page_size, hd), page_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c * g, hd),
+                               lambda bi, kv, pi, pt, qs: (bi, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c * g,), jnp.float32),      # running max m
+            pltpu.VMEM((c * g,), jnp.float32),      # running denom l
+            pltpu.VMEM((c * g, hd), jnp.float32),   # accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, c * g, hd), jnp.float32),
+        interpret=interpret,
+    )(pt, q_start.astype(jnp.int32), qr, k_pages, v_pages)
+
+    out = out.reshape(b, nkv, c, g, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, c, h, hd).astype(q.dtype)

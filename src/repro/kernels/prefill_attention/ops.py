@@ -1,0 +1,31 @@
+"""jit'd public wrappers for the paged chunked-prefill kernel.
+
+``flash_prefill`` is the raw kernel entry point (interpret-capable for CPU
+validation). ``paged_prefill_attention`` is what the model prefill path
+calls: it dispatches to the Pallas kernel on TPU silicon
+(``attn_impl="pallas"``) and to the fused-gather jnp reference everywhere
+else, mirroring ``kernels/decode_attention.paged_decode_attention``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_prefill_fwd
+from .ref import paged_prefill_reference
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flash_prefill(q, k_pages, v_pages, page_table, q_start, *,
+                  interpret: bool = False):
+    return flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start,
+                             interpret=interpret)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_table, q_start, *,
+                            impl: str = "pallas"):
+    """Paged chunked-prefill GQA attention with backend dispatch."""
+    if impl == "pallas" and jax.default_backend() == "tpu":
+        return flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start)
+    return paged_prefill_reference(q, k_pages, v_pages, page_table, q_start)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for paged chunked-prefill GQA attention.
+
+A prefill *chunk* is ``C`` consecutive prompt tokens whose KV rows have
+already been scattered into the block-paged pool (the same pool the decode
+kernel reads). Each chunk query at global position ``q_start[b] + i`` attends
+every pooled KV row at a position ``<= `` its own — history pages written by
+earlier chunks (or by a shared prefix) plus the causal lower triangle of its
+own in-chunk block. The oracle gathers the logical KV stream dense and runs
+masked fp32 attention — the semantics the Pallas kernel must reproduce.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import gather_pages
+
+MASK_VALUE = -1e30
+
+
+def paged_prefill_reference(q, k_pages, v_pages, page_table, q_start):
+    """Chunked-prefill GQA attention over a paged KV cache.
+
+    q: (B, C, H, hd) — RoPE'd queries for one chunk of C prompt tokens.
+    k_pages/v_pages: (KV, P, page_size, hd) — the shared physical pool, with
+        this chunk's own KV rows already written.
+    page_table: (B, npages) int32 — per-request logical->physical page map.
+    q_start: (B,) int32 — global position of ``q[:, 0]`` per request.
+    Returns (B, C, H, hd). Rows past a request's real prompt length produce
+    garbage (their keys were routed to the sink page); callers discard them.
+    """
+    b, c, h, hd = q.shape
+    nkv = k_pages.shape[0]
+    g = h // nkv
+    k = gather_pages(k_pages, page_table)            # (B, T, KV, hd)
+    v = gather_pages(v_pages, page_table)
+    t = k.shape[1]
+    qg = q.reshape(b, c, nkv, g, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = q_start[:, None] + jnp.arange(c)[None, :]              # (B, C)
+    mask = jnp.arange(t)[None, None, :] <= q_pos[:, :, None]       # (B, C, T)
+    s = jnp.where(mask[:, None, None, :, :], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, c, h, hd).astype(q.dtype)

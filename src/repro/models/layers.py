@@ -300,6 +300,45 @@ def paged_attention_block(cfg, p, x, *, k_pages, v_pages, page_table, pos):
     return x + y, (k_pages, v_pages)
 
 
+def paged_prefill_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
+                                  q_start, kv_len):
+    """Pre-norm attention residual block for one paged-prefill chunk.
+
+    x: (B,C,d) chunk activations (C consecutive prompt tokens starting at
+    global position ``q_start[b]``); k_pages/v_pages: (KV,P,ps,hd) physical
+    pool slices for this layer; page_table: (B,npages) int32; kv_len: (B,)
+    the request's true prompt length — chunk positions >= kv_len are padding
+    and their KV writes are routed to the reserved sink page 0, so a partial
+    tail chunk can never clobber live pages (its own, or pages aliased from a
+    shared prefix).
+
+    The chunk's KV rows are scattered into the pool *first*; the kernel's
+    positional causal mask (key pos <= query pos) then covers both history
+    pages and the in-chunk lower triangle. Returns (y, (k_pages', v_pages')).
+    """
+    from repro.kernels.prefill_attention import paged_prefill_attention
+    dt = cfg.cdtype
+    b, c, _ = x.shape
+    ps = k_pages.shape[2]
+    positions = q_start[:, None] + jnp.arange(c)[None, :]        # (B, C)
+    q, k, v = _qkv_proj(cfg, p, x, positions)
+
+    bidx = jnp.arange(b)[:, None]
+    valid = positions < kv_len[:, None]                          # (B, C)
+    page = jnp.where(valid, page_table[bidx, positions // ps], 0)
+    off = positions % ps
+    # (B,C,KV,hd) -> (KV,B,C,hd) rows written at [kv, page_bc, off_bc].
+    k_pages = k_pages.at[:, page, off].set(
+        k.transpose(2, 0, 1, 3).astype(k_pages.dtype))
+    v_pages = v_pages.at[:, page, off].set(
+        v.transpose(2, 0, 1, 3).astype(v_pages.dtype))
+
+    o = paged_prefill_attention(q, k_pages, v_pages, page_table, q_start,
+                                impl=cfg.attn_impl)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(dt), p["wo"].astype(dt))
+    return x + y, (k_pages, v_pages)
+
+
 def _scatter_cache(cache, k, v, pos):
     """Write one new (k,v) row per batch element at ``pos``."""
     k_cache, v_cache = cache

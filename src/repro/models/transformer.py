@@ -201,6 +201,46 @@ class TransformerFamily:
         k, v = kv
         return logits, {"k": k, "v": v}
 
+    # -- paged chunked prefill (continuous-batching admission) -----------------------
+    def prefill_paged(self, cfg, params, batch, pool):
+        """One chunked-prefill step: C prompt tokens written straight into
+        pool pages, attended against the already-written context.
+
+        batch: tokens (B,C), q_start (B,) global position of tokens[:,0],
+        kv_len (B,) true prompt length (positions >= kv_len are pad and write
+        to the sink page), page_table (B,npages) int32, logit_idx (B,)
+        in-chunk index to read logits at (the engine points it at
+        ``prompt_len-1`` for the chunk that contains it; clamped otherwise).
+        pool: {"k": (L,KV,P,ps,hd), "v": ...} — the whole physical pool.
+
+        Unlike ``prefill_ragged`` there is no dense per-request cache to
+        re-layout afterwards: KV lands in its final pages chunk by chunk, so
+        admission cost is O(chunk) per step and O(new tokens) per request.
+        """
+        tokens, q_start = batch["tokens"], batch["q_start"]
+        kv_len, page_table = batch["kv_len"], batch["page_table"]
+        x = L.embed_tokens(cfg, params, tokens)
+
+        def body(carry, xs):
+            h = carry
+            layer_params, kp, vp = xs
+            h, (kp, vp) = L.paged_prefill_attention_block(
+                cfg, layer_params["attn"], h, k_pages=kp, v_pages=vp,
+                page_table=page_table, q_start=q_start, kv_len=kv_len)
+            if cfg.num_experts:
+                h, _ = moe_block(cfg, layer_params["ffn"], h)
+            else:
+                h = L.mlp_block(cfg, layer_params["ffn"], h)
+            return h, (kp, vp)
+
+        x, (k, v) = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        idx = jnp.clip(batch["logit_idx"].astype(jnp.int32), 0,
+                       x.shape[1] - 1)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B,1,d)
+        logits = L.logits_fn(cfg, params, last)[:, 0]
+        return logits, {"k": k, "v": v}
+
     # -- paged decode (continuous-batching serve path) -------------------------------
     def decode_paged(self, cfg, params, batch, pool):
         """One decode step over the shared paged KV pool.

@@ -1,3 +1,5 @@
 from .engine import ContinuousBatchingEngine, ServeEngine, ServeResult
+from .paging import PageAllocator, PrefixCache
 
-__all__ = ["ServeEngine", "ContinuousBatchingEngine", "ServeResult"]
+__all__ = ["ServeEngine", "ContinuousBatchingEngine", "ServeResult",
+           "PageAllocator", "PrefixCache"]

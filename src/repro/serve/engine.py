@@ -2,36 +2,49 @@
 
 Cloud Kotta's provisioning argument, applied to token decode. The paper keeps
 utilization high under bursty multi-user load by (a) pooling capacity that
-static per-user provisioning would strand, and (b) admitting work the moment
-capacity frees up (its elastic worker pools / spot market). This engine is
-the serving analogue, with the KV cache playing the role of the provisioned
-resource:
+static per-user provisioning would strand, (b) admitting work the moment
+capacity frees up (its elastic worker pools / spot market), and (c) keeping
+ONE copy of a hot shared dataset that many jobs read (its tiered storage).
+This engine is the serving analogue, with the KV cache playing the role of
+the provisioned resource:
 
 - **Slots are worker nodes.** ``max_decode_slots`` fixed batch lanes decode
   in lockstep at hardware speed; a request occupies a slot only while live,
   exactly like a Kotta job occupies a pool node.
 - **Pages are the storage tier.** The physical KV pool is one shared array of
   ``page_size``-row pages; each request addresses its logical KV stream
-  through a per-slot page-table row. A static-batch engine provisions a dense
-  ``max_len`` cache per request up front (the "for peak demand" sizing the
-  paper's Table III costs out); paging provisions per *actual* demand and
-  returns capacity on completion with zero copies or compaction.
+  through a per-slot page-table row. Paging provisions per *actual* demand
+  and returns capacity on completion with zero copies or compaction.
 - **The queue is the job queue.** Between decode chunks the engine retires
-  finished sequences (evicting them frees their pages immediately) and admits
-  waiting prompts into the freed slots/pages — continuous batching, the
-  scheduling move that gives Kotta its up-to-16x cost reduction over static
-  provisioning.
+  finished sequences and admits waiting prompts into the freed slots/pages —
+  continuous batching, the scheduling move that gives Kotta its up-to-16x
+  cost reduction over static provisioning.
+- **Admission is O(new tokens), not O(prompt length).** Prompts are prefilled
+  in fixed ``prefill_chunk``-token steps whose KV rows are scattered straight
+  into pool pages (``prefill_paged``): no dense ragged cache, no
+  re-layout/transpose into pages afterwards, and one jit signature per batch
+  bucket instead of one per prompt-length pad bucket.
+- **Prompt prefixes are shared copy-on-write.** A page-granular radix index
+  (:mod:`repro.serve.paging`) maps token chunks to the pool pages already
+  holding their KV. Admission aliases every fully-matched page into the new
+  request's page-table row (refcount++), copy-on-writes the one partially
+  matched boundary page, and prefills only the unmatched suffix — the
+  paper's shared-dataset tiering, for caches. Retirement decrefs instead of
+  freeing, and a retired request's pages stay hittable until actually
+  reallocated.
 - **No host round-trips on the hot path.** The decode loop is a
-  ``lax.fori_loop`` over on-device steps with the pool donated to each chunk;
-  tokens accumulate on device and cross to the host once per chunk, not once
-  per token (the seed engine's ``np.asarray`` per step).
+  ``lax.fori_loop`` of exactly ``decode_chunk`` on-device steps (a static
+  bound: one compile, ever) with the pool donated to each chunk; tokens
+  accumulate on device and cross to the host once per chunk.
 
 Physical page 0 is reserved as a write sink: idle slots keep ``pos=0`` and an
-all-zero page-table row, so their (masked, discarded) decode writes can never
-corrupt pages belonging to live requests.
+all-zero page-table row, and prefill pads route their KV writes there, so
+masked writes can never corrupt pages belonging to live requests.
 
 ``ServeEngine`` (static batch, dense cache) is kept as the fallback path for
-recurrent-state families and as the benchmark baseline.
+recurrent-state families and as the benchmark baseline;
+``prefill_mode="dense"`` keeps the PR-1 bucketed dense-prefill admission
+path alive as an in-engine baseline/oracle.
 """
 from __future__ import annotations
 
@@ -47,7 +60,10 @@ from jax import lax
 
 from repro.models import get_family
 from repro.train.train_step import (build_decode_step, build_paged_decode_step,
+                                    build_paged_prefill_step,
                                     build_prefill_step)
+
+from .paging import PageAllocator, PrefixCache
 
 
 @dataclass
@@ -118,14 +134,34 @@ class _Live:
     tokens: list[int] = field(default_factory=list)
 
 
+def _next_pow2(n: int) -> int:
+    """Bucket size for wave-shaped device calls: a handful of jit
+    signatures (1, 2, 4, ...) instead of one per wave width."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+@dataclass
+class _Admit:
+    """A request accepted into the current admission wave."""
+    slot: int
+    rid: int
+    prompt: list[int]
+    pages: list[int]
+    start: int                  # first position to prefill (= prefix match)
+
+
 class ContinuousBatchingEngine:
     """Continuous-batching decode over a shared paged KV pool (module doc)."""
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  max_slots: int | None = None, num_pages: int | None = None,
-                 decode_chunk: int = 16):
+                 decode_chunk: int = 16, prefill_chunk: int | None = None,
+                 prefill_mode: str = "paged",
+                 enable_prefix_cache: bool | None = None):
         if cfg.encoder_only:
             raise ValueError("encoder-only models cannot decode")
+        if prefill_mode not in ("paged", "dense"):
+            raise ValueError(f"prefill_mode {prefill_mode!r}")
         step = build_paged_decode_step(cfg)   # raises for recurrent families
         self.cfg = cfg
         self.params = params
@@ -133,14 +169,30 @@ class ContinuousBatchingEngine:
         self.page_size = cfg.page_size
         self.max_slots = max_slots or cfg.max_decode_slots
         self.pages_per_seq = math.ceil(max_len / self.page_size)
-        # +1: physical page 0 is the reserved idle-slot write sink.
+        # +1: physical page 0 is the reserved idle-slot/pad write sink.
         self.num_pages = (num_pages or self.max_slots * self.pages_per_seq) + 1
         self.decode_chunk = decode_chunk
+        self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
+        self.prefill_mode = prefill_mode
 
         shape = self.family.paged_pool_shape(cfg, self.num_pages)
         self.pool = {"k": jnp.zeros(shape, cfg.cdtype),
                      "v": jnp.zeros(shape, cfg.cdtype)}
-        self._free_pages = list(range(self.num_pages - 1, 0, -1))
+
+        self.alloc = PageAllocator(self.num_pages)
+        # Prefix sharing needs paged prefill: the dense path re-writes whole
+        # pad-rounded pages and would clobber aliased prefix pages. An
+        # explicit request for both is a contradiction, not a default.
+        if enable_prefix_cache and prefill_mode == "dense":
+            raise ValueError("enable_prefix_cache=True requires "
+                             "prefill_mode='paged' (dense prefill re-writes "
+                             "whole pages and cannot alias shared prefixes)")
+        if enable_prefix_cache is None:
+            enable_prefix_cache = cfg.enable_prefix_cache
+        self.prefix_cache = PrefixCache(self.page_size) \
+            if (enable_prefix_cache and prefill_mode == "paged") else None
+        if self.prefix_cache is not None:
+            self.alloc.on_alloc = self.prefix_cache.evict
 
         s = self.max_slots
         self._page_table = np.zeros((s, self.pages_per_seq), np.int32)
@@ -148,31 +200,78 @@ class ContinuousBatchingEngine:
         self._cur = np.zeros(s, np.int32)
         self._active = np.zeros(s, bool)
         self._live: dict[int, _Live] = {}
+        self.stats: dict[str, float] = {}
+        self._reset_stats()
 
-        self._prefill = jax.jit(
+        # -- jitted steps ----------------------------------------------------
+        self._prefill_ragged = jax.jit(
             lambda p, b: self.family.prefill_ragged(cfg, p, b))
 
-        def decode_chunk_fn(params, cur, pos, page_table, active, pool, steps):
+        self._n_prefill_traces = 0
+        pstep = build_paged_prefill_step(cfg)
+
+        def prefill_chunk_fn(params, batch, pool):
+            self._n_prefill_traces += 1
+            return pstep(params, batch, pool)
+
+        self._prefill_chunked = jax.jit(prefill_chunk_fn, donate_argnums=(2,))
+
+        self._n_decode_traces = 0
+
+        def decode_chunk_fn(params, cur, pos, page_table, active, budget,
+                            pool):
+            self._n_decode_traces += 1
             out = jnp.zeros((s, self.decode_chunk), jnp.int32)
 
             def body(i, carry):
                 cur, pos, pool, out = carry
                 out = out.at[:, i].set(cur)
+                # A slot whose token budget is spent mid-chunk must stop
+                # writing KV: its pos sits at prompt_len + max_new, and for a
+                # row that fills its whole page table the clamped gather
+                # would redirect that write INTO the request's last real
+                # page, corrupting prompt rows the prefix cache may already
+                # share. Masking the row to the all-zero sink makes the
+                # overshoot steps harmless.
+                live = active & (i < budget)
+                pt = jnp.where(live[:, None], page_table, 0)
                 batch = {"tokens": cur[:, None], "pos": pos,
-                         "page_table": page_table}
+                         "page_table": pt}
                 nxt, _, pool = step(params, batch, pool)
-                cur = jnp.where(active, nxt, cur)
-                pos = jnp.where(active, pos + 1, pos)
+                cur = jnp.where(live, nxt, cur)
+                pos = jnp.where(live, pos + 1, pos)
                 return cur, pos, pool, out
 
-            return lax.fori_loop(0, steps, body, (cur, pos, pool, out))
+            # Static trip count: ragged remaining-token counts can never mint
+            # new jit signatures; spent slots idle against the sink page.
+            return lax.fori_loop(0, self.decode_chunk, body,
+                                 (cur, pos, pool, out))
 
         # Donating the pool lets XLA scatter new KV rows in place instead of
         # copying the whole pool every chunk.
-        self._chunk = jax.jit(decode_chunk_fn, donate_argnums=(5,))
+        self._chunk = jax.jit(decode_chunk_fn, donate_argnums=(6,))
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def cow_copy(pool_k, pool_v, src, dst):
+            """src/dst: (n,) int32 — one dispatch copies a whole wave's
+            boundary pages; pad pairs are (0, 0), a sink-to-sink no-op."""
+            return (pool_k.at[:, :, dst].set(pool_k[:, :, src]),
+                    pool_v.at[:, :, dst].set(pool_v[:, :, src]))
+
+        self._cow = cow_copy
         self._writer_cache = {}
 
-    # -- page writer (prompt KV -> pool), one compile per (pad, group) -------
+    # -- stats ---------------------------------------------------------------
+    def _reset_stats(self):
+        self.stats = {"admitted": 0, "prefill_tokens": 0, "cached_tokens": 0,
+                      "cow_copies": 0, "admit_seconds": 0.0}
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        tot = self.stats["cached_tokens"] + self.stats["prefill_tokens"]
+        return self.stats["cached_tokens"] / tot if tot else 0.0
+
+    # -- legacy dense page writer (prompt KV -> pool), per (pad, group) ------
     def _write_pages(self, k, v, pages):
         """k/v: (L, G, S_pad, KV, hd) prompt cache; pages: (G * npp,) int32."""
         key = (k.shape[1], k.shape[2])
@@ -198,78 +297,211 @@ class ContinuousBatchingEngine:
     def _admit_wave(self, pending: list, max_new: int) -> int:
         """Admit queued requests FCFS while slots and pages last.
 
-        Admitted prompts are prefilled *batched by pad bucket* — one prefill
-        dispatch, one page write and one host sync per bucket instead of per
-        request (admission would otherwise dominate bursty arrivals).
+        Each accepted request first consults the prefix cache: fully matched
+        pages are aliased into its page-table row (refcount++), a partially
+        matched boundary page is copy-on-written, and only the remaining
+        suffix is prefilled — chunk by chunk, batched across the wave.
         """
+        t0 = time.perf_counter()
         ps = self.page_size
-        wave = []                      # (slot, rid, prompt, pages)
+        wave: list[_Admit] = []
+        cow_pairs: list[tuple[int, int]] = []   # (src, dst), copied below
         while pending:
             rid, prompt = pending[-1]
-            t = len(prompt)
-            need = math.ceil((t + max_new) / ps)   # validated in generate()
+            plen = len(prompt)
             free_slots = [i for i in range(self.max_slots)
                           if not self._active[i]]
-            if not free_slots or len(self._free_pages) < need:
+            if not free_slots:
+                break
+            need_total = math.ceil((plen + max_new) / ps)  # checked upstream
+            if self.prefix_cache is not None:
+                chain, raw = self.prefix_cache.lookup(prompt)
+                # Always recompute at least the last prompt token: its logits
+                # seed decode, and capping also keeps a fully-cached prompt
+                # from needing zero prefill steps.
+                match = min(raw, plen - 1)
+            else:
+                chain, match = [], 0
+            n_alias, cow_m = divmod(match, ps)
+            cow_src = chain[n_alias] if cow_m else None
+            n_fresh = need_total - n_alias
+            # Pin every matched page (incl. the copy-on-write source) BEFORE
+            # allocating: a cache hit on a retired request's page finds it in
+            # the free list, and an unpinned hit could be reallocated as one
+            # of our own fresh pages, clobbering the prefix it still holds.
+            shared = chain[:n_alias]
+            for p in shared:
+                self.alloc.share(p)
+            if cow_src is not None:
+                self.alloc.share(cow_src)
+            if self.alloc.available() < n_fresh:
+                for p in shared:                # not enough pages: wave ends
+                    self.alloc.release(p)
+                if cow_src is not None:
+                    self.alloc.release(cow_src)
                 break
             slot = free_slots[0]
-            pages = [self._free_pages.pop() for _ in range(need)]
+            fresh = [self.alloc.alloc() for _ in range(n_fresh)]
+            pages = shared + fresh
+            if cow_src is not None:
+                # Boundary page: first cow_m rows of the matched page are this
+                # prompt's KV; copy them into our private page and append.
+                # The copy is deferred and batched — the pin on cow_src holds
+                # until it lands.
+                cow_pairs.append((cow_src, fresh[0]))
+                self.stats["cow_copies"] += 1
             self._active[slot] = True          # reserve within this wave
-            wave.append((slot, rid, list(prompt), pages))
+            row = np.zeros(self.pages_per_seq, np.int32)
+            row[:len(pages)] = pages
+            self._page_table[slot] = row
+            self.stats["cached_tokens"] += match
+            self.stats["prefill_tokens"] += plen - match
+            wave.append(_Admit(slot, rid, list(prompt), pages, match))
             pending.pop()
 
-        by_pad: dict[int, list] = {}
-        for item in wave:
-            s_pad = math.ceil(len(item[2]) / ps) * ps
-            by_pad.setdefault(s_pad, []).append(item)
+        if cow_pairs:
+            # One device dispatch for the whole wave's boundary-page copies,
+            # padded to a pow2 bucket (pad pairs write sink -> sink).
+            n = _next_pow2(len(cow_pairs))
+            src = np.zeros(n, np.int32)
+            dst = np.zeros(n, np.int32)
+            for i, (s_, d_) in enumerate(cow_pairs):
+                src[i], dst[i] = s_, d_
+            self.pool["k"], self.pool["v"] = self._cow(
+                self.pool["k"], self.pool["v"], jnp.asarray(src),
+                jnp.asarray(dst))
+            for s_, _ in cow_pairs:
+                self.alloc.release(s_)          # pin no longer needed
+        if wave:
+            if self.prefill_mode == "dense":
+                self._prefill_dense(wave)
+            else:
+                self._prefill_paged_wave(wave)
+            for a in wave:
+                if self.prefix_cache is not None:
+                    self.prefix_cache.register(a.prompt, a.pages)
+                self._live[a.slot] = _Live(a.rid, len(a.prompt), max_new,
+                                           a.pages)
+            self.stats["admitted"] += len(wave)
+        self.stats["admit_seconds"] += time.perf_counter() - t0
+        return len(wave)
+
+    # -- paged chunked prefill (default admission path) ----------------------
+    def _prefill_paged_wave(self, wave: list[_Admit]) -> None:
+        """Prefill every wave member's suffix in fixed-width chunk steps.
+
+        The batch is padded to a power-of-two bucket so the jitted step sees
+        a handful of (bucket, chunk) signatures total — never one per prompt
+        length. Pad rows carry ``kv_len=0`` so all their KV writes land in
+        the sink page.
+        """
+        ps, c = self.page_size, self.prefill_chunk
+        gp = _next_pow2(len(wave))
+        page_tables = np.zeros((gp, self.pages_per_seq), np.int32)
+        for i, a in enumerate(wave):
+            page_tables[i] = self._page_table[a.slot]
+        pt_dev = jnp.asarray(page_tables)
+        nsteps = max(math.ceil((len(a.prompt) - a.start) / c) for a in wave)
+
+        step_toks = []
+        for j in range(nsteps):
+            toks = np.zeros((gp, c), np.int32)
+            qs = np.zeros(gp, np.int32)
+            kl = np.zeros(gp, np.int32)
+            li = np.zeros(gp, np.int32)
+            for i, a in enumerate(wave):
+                s0 = a.start + j * c
+                qs[i] = s0
+                kl[i] = len(a.prompt)
+                li[i] = len(a.prompt) - 1 - s0        # clamped in the step
+                seg = a.prompt[s0:s0 + c]
+                if seg:
+                    toks[i, :len(seg)] = seg
+            batch = {"tokens": jnp.asarray(toks), "q_start": jnp.asarray(qs),
+                     "kv_len": jnp.asarray(kl), "page_table": pt_dev,
+                     "logit_idx": jnp.asarray(li)}
+            nxt, _, self.pool = self._prefill_chunked(self.params, batch,
+                                                      self.pool)
+            step_toks.append(nxt)
+
+        # The first sampled token of request i comes from the chunk holding
+        # position plen-1; sync each needed step array once.
+        host: dict[int, np.ndarray] = {}
+        for i, a in enumerate(wave):
+            j = (len(a.prompt) - 1 - a.start) // c
+            if j not in host:
+                host[j] = np.asarray(step_toks[j])
+            self._cur[a.slot] = host[j][i]
+            self._pos[a.slot] = len(a.prompt)
+
+    # -- dense ragged prefill (PR-1 baseline, kept as in-engine oracle) ------
+    def _prefill_dense(self, wave: list[_Admit]) -> None:
+        """Batched-by-pad-bucket dense prefill + page re-layout (legacy)."""
+        ps = self.page_size
+        by_pad: dict[int, list[_Admit]] = {}
+        for a in wave:
+            s_pad = math.ceil(len(a.prompt) / ps) * ps
+            by_pad.setdefault(s_pad, []).append(a)
 
         for s_pad, items in by_pad.items():
             g = len(items)
             npp = s_pad // ps
             toks = np.zeros((g, s_pad), np.int32)
             lens = np.zeros(g, np.int32)
-            for i, (_, _, prompt, _) in enumerate(items):
-                toks[i, :len(prompt)] = prompt
-                lens[i] = len(prompt)
+            for i, a in enumerate(items):
+                toks[i, :len(a.prompt)] = a.prompt
+                lens[i] = len(a.prompt)
             batch = {"tokens": jnp.asarray(toks),
                      "length": jnp.asarray(lens)}
-            logits, cache = self._prefill(self.params, batch)
+            logits, cache = self._prefill_ragged(self.params, batch)
             prompt_pages = np.concatenate(
-                [np.asarray(pages[:npp], np.int32)
-                 for _, _, _, pages in items])
+                [np.asarray(a.pages[:npp], np.int32) for a in items])
             self._write_pages(cache["k"], cache["v"], prompt_pages)
             first = np.array(jnp.argmax(logits, axis=-1), np.int32)  # 1 sync
-            for i, (slot, rid, prompt, pages) in enumerate(items):
-                t = len(prompt)
-                row = np.zeros(self.pages_per_seq, np.int32)
-                row[:len(pages)] = pages
-                self._page_table[slot] = row
-                self._pos[slot] = t
-                self._cur[slot] = first[i]
-                self._live[slot] = _Live(rid, t, max_new, pages)
-        return len(wave)
+            for i, a in enumerate(items):
+                self._pos[a.slot] = len(a.prompt)
+                self._cur[a.slot] = first[i]
 
     def _retire(self, slot: int) -> _Live:
         live = self._live.pop(slot)
-        self._free_pages.extend(reversed(live.pages))
+        for p in live.pages:
+            self.alloc.release(p)       # refcount--: aliased pages survive
         self._active[slot] = False
         self._page_table[slot] = 0          # all-zero row -> sink page 0
         self._pos[slot] = 0
         self._cur[slot] = 0
         return live
 
+    # -- invariants (exercised by tests) -------------------------------------
+    def _debug_check_refcounts(self) -> None:
+        """Every physical page's refcount == page-table rows referencing it."""
+        counts = np.zeros(self.num_pages, np.int64)
+        for live in self._live.values():
+            for p in live.pages:
+                counts[p] += 1
+        if not np.array_equal(counts[1:], self.alloc.refs[1:]):
+            bad = np.nonzero(counts[1:] != self.alloc.refs[1:])[0] + 1
+            raise AssertionError(
+                f"refcount drift on pages {bad.tolist()}: "
+                f"rows={counts[bad].tolist()} refs={self.alloc.refs[bad].tolist()}")
+
     # -- the serving loop ----------------------------------------------------
     def generate(self, prompts: list[list[int]], max_new: int = 16,
                  on_chunk=None) -> ServeResult:
         """Greedy-decode ``max_new`` tokens for every prompt, FCFS admission.
 
-        ``on_chunk(steps, seconds)`` (optional) observes each decode chunk —
-        every active slot emits ``steps`` tokens in ``seconds``, so the
-        benchmark derives inter-token latency as ``seconds / steps``.
+        ``on_chunk(steps, seconds)`` (optional) observes each decode chunk.
+        ``steps`` is the chunk's *device* trip count — always
+        ``decode_chunk`` — so ``seconds / steps`` is the inter-token
+        latency. It is NOT a count of usable tokens: a slot whose
+        ``max_new`` budget ends mid-chunk idles (masked against the sink
+        page) for the remaining steps, so sum emitted tokens from the
+        returned ``ServeResult``, never from ``steps``.
         """
         if not prompts:
             return ServeResult(np.zeros((0, max_new), np.int32), [])
         max_len = self.pages_per_seq * self.page_size
+        pool_cap = self.num_pages - 1
         for rid, p in enumerate(prompts):     # validate before reserving
             if not p:
                 raise ValueError(f"request {rid}: empty prompt (nothing to "
@@ -277,6 +509,13 @@ class ContinuousBatchingEngine:
             if len(p) + max_new > max_len:
                 raise ValueError(f"request {rid}: {len(p)}+{max_new} tokens "
                                  f"exceed max_len {max_len}")
+            need = math.ceil((len(p) + max_new) / self.page_size)
+            if need > pool_cap:
+                raise ValueError(
+                    f"request {rid}: needs {need} pages for "
+                    f"{len(p)}+{max_new} tokens but the pool only holds "
+                    f"{pool_cap}; raise num_pages or shorten the request")
+        self._reset_stats()
         pending = list(enumerate(prompts))[::-1]        # FCFS from the end
         done: dict[int, list[int]] = {}
         self._admit_wave(pending, max_new)
@@ -285,22 +524,23 @@ class ContinuousBatchingEngine:
                                "than the pool holds free")
 
         while self._live:
-            remaining = min(l.max_new - l.emitted for l in self._live.values())
-            steps = min(self.decode_chunk, remaining)
+            budget = np.zeros(self.max_slots, np.int32)
+            for slot, live in self._live.items():
+                budget[slot] = live.max_new - live.emitted
             t0 = time.perf_counter()
             cur, pos, self.pool, out = self._chunk(
                 self.params, jnp.asarray(self._cur), jnp.asarray(self._pos),
                 jnp.asarray(self._page_table), jnp.asarray(self._active),
-                self.pool, steps)
-            out_host = np.asarray(out[:, :steps])       # one sync per chunk
+                jnp.asarray(budget), self.pool)
+            out_host = np.asarray(out)                  # one sync per chunk
             if on_chunk is not None:
-                on_chunk(steps, time.perf_counter() - t0)
+                on_chunk(self.decode_chunk, time.perf_counter() - t0)
             self._cur = np.array(cur)      # np.array: writable host copies
             self._pos = np.array(pos)
             for slot in list(self._live):
                 live = self._live[slot]
                 live.tokens.extend(out_host[slot].tolist())
-                live.emitted += steps
+                live.emitted += self.decode_chunk
                 if live.emitted >= live.max_new:
                     done[live.rid] = live.tokens[:live.max_new]
                     self._retire(slot)

@@ -1,0 +1,170 @@
+"""Refcounted page allocation and page-granular prefix caching.
+
+The serving analogue of Cloud Kotta's tiered storage: the paper keeps ONE
+copy of a hot shared dataset that many jobs read, instead of one copy per
+job. Here the "dataset" is the KV cache of a common prompt prefix (system
+prompt, few-shot header) and the "jobs" are decode requests:
+
+- ``PageAllocator`` tracks a reference count per physical pool page. A page
+  is *free* when no page-table row references it — but its contents stay
+  valid until the page is actually reallocated, so a free page can be
+  revived by a later cache hit (the storage-tier move: demoted, not
+  destroyed).
+- ``PrefixCache`` is a radix index over page-size token chunks: full pages
+  are keyed ``(parent_page, page_tokens)`` so lookup walks the prompt one
+  page at a time; a final sub-page remainder is kept as a *partial* entry
+  under its parent, which is what lets admission copy-on-write the one
+  boundary page instead of re-prefilling it.
+
+The allocator's ``on_alloc`` hook evicts a page's index entries the moment
+the page is repurposed, and recursively scrubs the subtree it anchored:
+physical page ids are the radix parents, so entries must never outlive the
+page contents they describe.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PageAllocator:
+    """Refcounted free-list over physical pages 1..num_pages-1 (0 = sink)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.refs = np.zeros(num_pages, np.int64)
+        self._free = list(range(num_pages - 1, 0, -1))      # LIFO: 1 on top
+        self._free_set = set(self._free)
+        self.on_alloc = None            # callback(page) on reallocation
+
+    def available(self) -> int:
+        return len(self._free_set)
+
+    def alloc(self) -> int:
+        """Pop a free page; its old cached identity (if any) is evicted."""
+        while self._free:
+            p = self._free.pop()
+            if p not in self._free_set:
+                continue                 # stale entry: page was revived
+            self._free_set.discard(p)
+            if self.on_alloc is not None:
+                self.on_alloc(p)
+            self.refs[p] = 1
+            return p
+        raise RuntimeError("page pool exhausted")
+
+    def share(self, p: int) -> None:
+        """Add a reference; revives a free-but-still-valid cached page."""
+        if self.refs[p] == 0:
+            self._free_set.discard(p)    # its list entry goes stale
+        self.refs[p] += 1
+
+    def release(self, p: int) -> None:
+        self.refs[p] -= 1
+        assert self.refs[p] >= 0, f"page {p} over-released"
+        if self.refs[p] == 0 and p not in self._free_set:
+            self._free.append(p)
+            self._free_set.add(p)
+
+
+class PrefixCache:
+    """Radix index from prompt-token chunks to the pool pages holding them.
+
+    Holds NO page references itself: a cached page may have refcount 0 (all
+    requests using it retired) and sit in the free list; it stays hittable
+    until the allocator hands it out again, at which point ``evict`` removes
+    it (and the subtree keyed under it) from the index.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._full = {}      # (parent_page|-1, tokens) -> page
+        self._partial = {}   # parent_page|-1 -> list[(tokens, page)]
+        self._owned = {}     # page -> ("full", key) | ("partial", parent, toks)
+        self._kids = {}      # parent_page -> list of full keys under it
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(self, prompt) -> tuple[list[int], int]:
+        """Longest cached prefix of ``prompt``.
+
+        Returns (chain, match_len): ``chain`` holds the full pages covering
+        ``match_len // page_size`` pages plus, if ``match_len`` ends
+        mid-page, the page holding that partial tail (the copy-on-write
+        source).
+        """
+        ps = self.page_size
+        chain: list[int] = []
+        parent, i = -1, 0
+        while (i + 1) * ps <= len(prompt):
+            page = self._full.get((parent, tuple(prompt[i * ps:(i + 1) * ps])))
+            if page is None:
+                break
+            chain.append(page)
+            parent = page
+            i += 1
+        match = i * ps
+        best_toks, best_page = (), -1
+        for toks, page in self._partial.get(parent, ()):
+            if len(toks) > len(best_toks) and \
+                    tuple(prompt[match:match + len(toks)]) == toks:
+                best_toks, best_page = toks, page
+        if best_page >= 0:
+            chain.append(best_page)
+            match += len(best_toks)
+        return chain, match
+
+    # -- registration --------------------------------------------------------
+    def register(self, prompt, pages) -> None:
+        """Record a freshly prefilled prompt's pages.
+
+        Existing entries win (their pages are what later lookups alias); our
+        private duplicate simply stays out of the index. ``pages`` is the
+        request's page list: ``pages[i]`` holds rows [i*ps, (i+1)*ps).
+        """
+        ps = self.page_size
+        parent = -1
+        n_full = len(prompt) // ps
+        for i in range(n_full):
+            key = (parent, tuple(prompt[i * ps:(i + 1) * ps]))
+            page = self._full.get(key)
+            if page is None:
+                page = pages[i]
+                self._full[key] = page
+                self._owned[page] = ("full", key)
+                self._kids.setdefault(parent, []).append(key)
+            parent = page
+        rem = tuple(prompt[n_full * ps:])
+        if rem and n_full < len(pages):
+            lst = self._partial.setdefault(parent, [])
+            if all(toks != rem for toks, _ in lst):
+                lst.append((rem, pages[n_full]))
+                self._owned[pages[n_full]] = ("partial", parent, rem)
+
+    # -- eviction ------------------------------------------------------------
+    def evict(self, page: int) -> None:
+        """Drop ``page``'s entries: its physical contents are being reused."""
+        owned = self._owned.pop(page, None)
+        if owned is not None:
+            if owned[0] == "full":
+                self._full.pop(owned[1], None)
+            else:
+                _, parent, toks = owned
+                lst = self._partial.get(parent)
+                if lst is not None:
+                    lst[:] = [e for e in lst if e[0] != toks]
+        # Entries keyed under this page id would silently re-anchor to the
+        # page's NEW contents — scrub the whole subtree.
+        self._scrub(page)
+
+    def _scrub(self, page: int) -> None:
+        for key in self._kids.pop(page, ()):
+            child = self._full.pop(key, None)
+            if child is not None and self._owned.get(child) == ("full", key):
+                del self._owned[child]
+                self._scrub(child)
+        for toks, child in self._partial.pop(page, ()):
+            if self._owned.get(child) == ("partial", page, toks):
+                del self._owned[child]
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._full) + sum(len(v) for v in self._partial.values())

@@ -105,6 +105,29 @@ def build_paged_decode_step(cfg) -> Callable:
     return paged_decode_step
 
 
+def build_paged_prefill_step(cfg) -> Callable:
+    """Chunked-prefill step over the shared paged KV pool.
+
+    One call prefills a fixed-width chunk of C prompt tokens per request,
+    scattering KV directly into pool pages (no dense intermediate cache).
+    The serve engine jits it with the pool donated and loops it over a
+    wave's suffix chunks; the fixed (B, C) shape means one compile per batch
+    bucket instead of one per prompt-length pad bucket.
+    """
+    family = get_family(cfg)
+    if not hasattr(family, "prefill_paged"):
+        raise ValueError(f"{cfg.name}: family {family.name!r} has no paged "
+                         "prefill path (recurrent-state families keep their "
+                         "per-slot states dense)")
+
+    def paged_prefill_step(params, batch, pool):
+        logits, pool = family.prefill_paged(cfg, params, batch, pool)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, pool
+
+    return paged_prefill_step
+
+
 def build_encode_step(cfg) -> Callable:
     """Encoder-only serve step (HuBERT): frames -> per-frame logits."""
     family = get_family(cfg)

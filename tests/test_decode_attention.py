@@ -148,7 +148,7 @@ def test_engine_validates_before_reserving():
     with pytest.raises(ValueError, match="exceed max_len"):
         eng.generate([[1, 2, 3], list(range(40))], max_new=4)
     assert not eng._active.any()
-    assert len(eng._free_pages) == eng.num_pages - 1
+    assert eng.alloc.available() == eng.num_pages - 1
     out = eng.generate(_prompts(cfg.vocab_size, [4, 6], seed=4), max_new=4)
     assert out.tokens.shape == (2, 4)
 

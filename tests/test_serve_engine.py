@@ -1,0 +1,294 @@
+"""Serve-engine lifecycle: paged chunked prefill vs the dense-prefill oracle,
+copy-on-write prefix sharing, refcount invariants, page reuse across
+retire/readmit, exhaustion mid-wave, up-front capacity validation, and the
+one-compile guarantees for the decode/prefill hot paths."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import (ContinuousBatchingEngine, PageAllocator, PrefixCache,
+                         ServeEngine)
+
+
+def _make(arch="yi-6b", **kw):
+    cfg = get_reduced_config(arch).replace(dtype="float32", page_size=8, **kw)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, size=n).tolist() for n in lens]
+
+
+@pytest.fixture(scope="module")
+def model():
+    return _make()
+
+
+@pytest.fixture(scope="module")
+def gold_engine(model):
+    cfg, params = model
+    return ServeEngine(cfg, params, max_len=64)
+
+
+def _gold(gold_engine, prompts, max_new):
+    """Per-request static-engine decode: the padding-free oracle."""
+    return np.concatenate(
+        [gold_engine.generate([p], max_new=max_new).tokens for p in prompts])
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked prefill vs oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_matches_oracle_mixed_lengths(model, gold_engine):
+    """Chunked paged admission must emit the same tokens as the dense path,
+    including prompts that straddle chunk and page boundaries."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [3, 7, 12, 5, 17, 8], seed=1)
+    gold = _gold(gold_engine, prompts, 8)
+    for chunk in (4, 8, 32):
+        eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=6,
+                                       prefill_chunk=chunk)
+        out = eng.generate(prompts, max_new=8)
+        np.testing.assert_array_equal(gold, out.tokens)
+
+
+def test_paged_prefill_matches_dense_mode(model):
+    """The in-engine dense baseline and the paged path agree token-for-token."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [4, 9, 14, 6], seed=2)
+    dense = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=4,
+                                     prefill_mode="dense")
+    paged = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=4,
+                                     prefill_chunk=8)
+    np.testing.assert_array_equal(dense.generate(prompts, max_new=6).tokens,
+                                  paged.generate(prompts, max_new=6).tokens)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_across_waves(model, gold_engine):
+    """Requests admitted after a shared prefix is cached alias its pages and
+    still decode the exact oracle tokens."""
+    cfg, params = model
+    rng = np.random.RandomState(3)
+    shared = rng.randint(0, cfg.vocab_size, size=16).tolist()
+    prompts = [shared + rng.randint(0, cfg.vocab_size, size=4).tolist()
+               for _ in range(4)]
+    gold = _gold(gold_engine, prompts, 6)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8)
+    out = eng.generate(prompts, max_new=6)      # 2 slots: 2 admission waves
+    np.testing.assert_array_equal(gold, out.tokens)
+    assert eng.stats["cached_tokens"] > 0       # later waves hit the prefix
+    eng._debug_check_refcounts()
+
+    # Warm-cache readmission: nearly all prompt tokens served from cache.
+    out2 = eng.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(gold, out2.tokens)
+    assert eng.prefix_hit_rate > 0.5
+    eng._debug_check_refcounts()
+
+
+def test_copy_on_write_boundary_page(model, gold_engine):
+    """A prefix match ending mid-page copies the boundary page instead of
+    appending into the (still referenced) donor page."""
+    cfg, params = model
+    rng = np.random.RandomState(4)
+    donor = rng.randint(0, cfg.vocab_size, size=12).tolist()   # partial page
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8)
+    eng.generate([donor], max_new=4)            # caches 1 full + 1 partial page
+    follow = [donor + rng.randint(0, cfg.vocab_size, size=5).tolist()
+              for _ in range(2)]
+    gold = _gold(gold_engine, follow, 6)
+    out = eng.generate(follow, max_new=6)
+    np.testing.assert_array_equal(gold, out.tokens)
+    assert eng.stats["cow_copies"] >= 1
+    assert eng.stats["cached_tokens"] >= 2 * len(donor)
+    eng._debug_check_refcounts()
+    # Donor pages untouched: replaying the donor still matches its oracle.
+    gold_d = _gold(gold_engine, [donor], 4)
+    np.testing.assert_array_equal(gold_d, eng.generate([donor], max_new=4).tokens)
+
+
+def test_budget_overshoot_cannot_corrupt_shared_prefix(model, gold_engine):
+    """A spent slot decoding out its chunk must not clobber cached pages.
+
+    prompt 61 + max_new 3 fills the page-table row exactly (max_len 64,
+    page_size 8); decode_chunk 16 leaves 13 overshoot steps whose pos runs
+    past max_len. Unmasked, the clamped page-table gather would redirect
+    those KV writes into the request's LAST REAL page — corrupting prompt
+    rows the prefix cache has already published, so a follow-up sharing the
+    prefix would copy-on-write garbage."""
+    cfg, params = model
+    rng = np.random.RandomState(12)
+    donor = rng.randint(0, cfg.vocab_size, size=61).tolist()
+
+    def boundary_page(decode_chunk):
+        eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                       prefill_chunk=8,
+                                       decode_chunk=decode_chunk)
+        gold_d = _gold(gold_engine, [donor], 3)
+        np.testing.assert_array_equal(gold_d,
+                                      eng.generate([donor], max_new=3).tokens)
+        page = eng.prefix_cache.lookup(donor)[0][-1]    # partial-tail page
+        return eng, np.asarray(eng.pool["k"])[:, :, page]
+
+    # decode_chunk=1 cannot overshoot (budget 3, 3 chunks): its page bytes
+    # are the uncorrupted reference for the 13-step-overshoot engine.
+    _, ref_rows = boundary_page(1)
+    eng, rows = boundary_page(16)
+    np.testing.assert_array_equal(ref_rows, rows)
+
+    follow = [donor + rng.randint(0, cfg.vocab_size, size=1).tolist()]
+    gold_f = _gold(gold_engine, follow, 2)
+    out = eng.generate(follow, max_new=2)
+    assert eng.stats["cached_tokens"] >= len(donor)     # prefix was shared
+    assert eng.stats["cow_copies"] >= 1                 # boundary page COW'd
+    np.testing.assert_array_equal(gold_f, out.tokens)
+
+
+def test_refcounts_track_rows_mid_flight(model):
+    """The refcount invariant holds at every decode chunk, with sharing on."""
+    cfg, params = model
+    rng = np.random.RandomState(5)
+    shared = rng.randint(0, cfg.vocab_size, size=8).tolist()
+    prompts = [shared + rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (2, 5, 9, 3, 7)]
+    eng = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=4)
+    eng.generate(prompts, max_new=8,
+                 on_chunk=lambda s, t: eng._debug_check_refcounts())
+    eng._debug_check_refcounts()
+    assert eng.alloc.available() == eng.num_pages - 1   # all pages returned
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: reuse, exhaustion, validation
+# ---------------------------------------------------------------------------
+
+def test_retire_then_readmit_reuses_pages(model, gold_engine):
+    """Back-to-back generates recycle the same physical pool correctly."""
+    cfg, params = model
+    a = _prompts(cfg.vocab_size, [6, 11, 4], seed=6)
+    b = _prompts(cfg.vocab_size, [9, 5, 13], seed=7)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=48, max_slots=3,
+                                   prefill_chunk=8)
+    for prompts in (a, b, a):                   # a's pages were reused by b
+        gold = _gold(gold_engine, prompts, 6)
+        np.testing.assert_array_equal(gold,
+                                      eng.generate(prompts, max_new=6).tokens)
+        eng._debug_check_refcounts()
+        assert eng.alloc.available() == eng.num_pages - 1
+
+
+def test_admission_when_pages_exhaust_mid_wave(model, gold_engine):
+    """A pool that only fits one request at a time forces per-wave admission
+    yet completes every request with oracle tokens."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [9, 12, 10], seed=8)
+    gold = _gold(gold_engine, prompts, 6)
+    # 3 pages: one request (ceil((12+6)/8)=3) exhausts the pool by itself.
+    eng = ContinuousBatchingEngine(cfg, params, max_len=24, max_slots=3,
+                                   num_pages=3, prefill_chunk=8,
+                                   decode_chunk=2, enable_prefix_cache=False)
+    out = eng.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(gold, out.tokens)
+    assert eng.alloc.available() == eng.num_pages - 1
+
+
+def test_pool_capacity_validated_up_front(model):
+    """A request that can never fit fails fast, before reserving anything."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   num_pages=2)
+    with pytest.raises(ValueError, match="pool only holds"):
+        eng.generate([[1, 2, 3], list(range(20))], max_new=8)
+    assert not eng._active.any()
+    assert eng.alloc.available() == eng.num_pages - 1
+    out = eng.generate(_prompts(cfg.vocab_size, [4], seed=9), max_new=4)
+    assert out.tokens.shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# Compile-count guarantees
+# ---------------------------------------------------------------------------
+
+def test_decode_chunk_compiles_once(model):
+    """Ragged tail lengths (max_new % decode_chunk) never retrace decode."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   decode_chunk=8, prefill_chunk=8)
+    prompts = _prompts(cfg.vocab_size, [5, 9], seed=10)
+    for max_new in (8, 11, 3, 13):              # tails 8, 3, 3, 5
+        eng.generate(prompts, max_new=max_new)
+    assert eng._n_decode_traces == 1
+
+
+def test_prefill_chunk_compiles_per_bucket_not_per_length(model):
+    """Prompt lengths share one jit signature per pow2 wave bucket."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=4,
+                                   prefill_chunk=8, enable_prefix_cache=False)
+    for lens in ([3], [7], [12], [17], [23]):   # 5 lengths, bucket g=1
+        eng.generate(_prompts(cfg.vocab_size, lens, seed=11), max_new=2)
+    assert eng._n_prefill_traces == 1
+    eng.generate(_prompts(cfg.vocab_size, [4, 9, 14], seed=12), max_new=2)
+    assert eng._n_prefill_traces == 2           # one more for bucket g=4
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator / PrefixCache units
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_share_revives_free_page():
+    al = PageAllocator(5)                       # pages 1..4
+    p = al.alloc()
+    al.release(p)
+    assert al.available() == 4
+    al.share(p)                                 # cache hit on a retired page
+    assert al.available() == 3
+    got = {al.alloc() for _ in range(3)}        # stale free-list entry skipped
+    assert p not in got
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.alloc()
+    al.release(p)
+    assert al.alloc() == p
+
+
+def test_prefix_cache_lookup_register_evict():
+    pc = PrefixCache(4)
+    prompt = list(range(10))                    # 2 full pages + 2-token tail
+    pc.register(prompt, [7, 8, 9])
+    chain, match = pc.lookup(prompt + [99])
+    assert (chain, match) == ([7, 8, 9], 10)
+    chain, match = pc.lookup(prompt[:6])        # only page 7 fully matches
+    assert (chain, match) == ([7], 4)
+    # Diverging second page: only the first page hits.
+    other = prompt[:4] + [55, 56, 57, 58]
+    assert pc.lookup(other) == ([7], 4)
+    # Evicting the root page must take the whole chain (and partial) with it:
+    # entries keyed under page 7 would re-anchor to its future contents.
+    pc.evict(7)
+    assert pc.lookup(prompt) == ([], 0)
+    assert len(pc) == 0
+
+
+def test_prefix_cache_existing_entries_win():
+    pc = PrefixCache(4)
+    pc.register(list(range(8)), [3, 4])
+    pc.register(list(range(8)), [5, 6])         # same-wave private duplicate
+    chain, _ = pc.lookup(list(range(8)))
+    assert chain == [3, 4]
+    pc.evict(5)                                 # duplicate pages never indexed
+    assert pc.lookup(list(range(8)))[0] == [3, 4]
