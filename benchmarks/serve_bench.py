@@ -15,10 +15,19 @@ plus its shared-dataset tiering:
 3. ``shared_prefix``: batch 8 requests sharing a hot system prompt — the
    paged engine aliases the cached prefix pages copy-on-write and prefills
    only each request's unique tail, so admission cost is O(new tokens).
+4. ``spec_decode``: a repetitive/structured workload (small-vocab templated
+   output, the prompt self-seeded with the model's own greedy prefix, more
+   requests than slots) decoded with and without self-speculative decoding —
+   the spec engine drafts ``spec_tokens`` candidates per step by n-gram
+   lookup over the slot's own history and verifies them all in one
+   multi-query paged pass, emitting several tokens per engine step. Reports
+   decode-phase tokens/s and the mean accepted draft length.
 
 Rows feed the ``name,us_per_call,derived`` CSV that ``benchmarks/run.py``
 prints, and the full results land in ``BENCH_serve.json`` (tokens/s, TTFT,
-prefix hit rate) so the perf trajectory is tracked across PRs.
+prefix hit rate, accepted draft length) so the perf trajectory is tracked
+across PRs. ``--smoke`` runs a single-batch-point subset on the tiny config
+for CI (perf-path breakage, not perf numbers).
 """
 from __future__ import annotations
 
@@ -38,7 +47,22 @@ ARCH = "yi-6b"
 PROMPT_LENS = (5, 12, 24, 40)       # cycled per request (mixed, ragged)
 MAX_NEW = 32
 BATCHES = (1, 8, 32)
-DECODE_CHUNK = 16
+DECODE_CHUNK = None                 # None -> the engine occupancy heuristic
+
+SPEC_BATCH = 8                      # spec-decode scenario: decode slots
+SPEC_REQUESTS = 16                  # > slots: retired slots backfill
+SPEC_VOCAB = 4                      # templated-output regime: tiny alphabet
+                                    # keeps the random-init model's greedy
+                                    # trajectory in short stable cycles, so
+                                    # the accept rate is reproducible across
+                                    # hosts/thread counts
+SPEC_PATTERN = 6                    # repeating period of the prompt
+SPEC_PROMPT_REPS = 4
+SPEC_SEED = 48                      # model's own tokens prepended to context
+SPEC_MAX_NEW = 128                  # long decode: acceptance dominates
+SPEC_K = 8                          # draft window for the scenario (the high
+                                    # accept rate supports a longer window
+                                    # than the general-purpose default)
 
 PREFIX_LEN = 96                     # shared system prompt (12 pages of 8)
 TAIL_LEN = 8                        # per-request unique suffix
@@ -63,24 +87,27 @@ def _prompts(batch: int, vocab: int):
             .tolist() for i in range(batch)]
 
 
-def _bench_static(cfg, params, prompts, max_len):
+def _bench_static(cfg, params, prompts, max_len, max_new):
     eng = ServeEngine(cfg, params, max_len=max_len)
     eng.generate(prompts, max_new=4)                  # warm the jit caches
     t0 = time.perf_counter()
-    out = eng.generate(prompts, max_new=MAX_NEW)
+    out = eng.generate(prompts, max_new=max_new)
     dt = time.perf_counter() - t0
     n_tok = out.tokens.size
     # One device sync per generate: every token lands in the same burst, so
     # the per-token latency distribution is degenerate (p50 == p95 == mean).
-    return n_tok / dt, dt / MAX_NEW * 1e3
+    return n_tok / dt, dt / max_new * 1e3
 
 
-def _bench_continuous(cfg, params, prompts, max_len):
+def _bench_continuous(cfg, params, prompts, max_len, max_new):
     # One engine for warmup + measurement: the decode-chunk/prefill jits are
     # per-engine closures, so a fresh engine would re-pay compilation.
     # Prefix cache off: these rows track decode batching; re-running the same
     # prompts with the cache hot would measure admission aliasing instead
-    # (the shared_prefix rows cover that).
+    # (the shared_prefix rows cover that). decode_chunk=None exercises the
+    # occupancy heuristic; at low batch it picks a chunk >= max_new, so the
+    # whole decode is one chunk and p50 == p95 there (tail latency is only
+    # meaningful in the high-occupancy rows, where chunks are short).
     eng = ContinuousBatchingEngine(
         cfg, params, max_len=max_len,
         max_slots=min(len(prompts), cfg.max_decode_slots * 4),
@@ -88,7 +115,7 @@ def _bench_continuous(cfg, params, prompts, max_len):
 
     def run(chunk_times):
         t0 = time.perf_counter()
-        out = eng.generate(prompts, max_new=MAX_NEW,
+        out = eng.generate(prompts, max_new=max_new,
                            on_chunk=lambda steps, s: chunk_times.append(
                                (steps, s)))
         return out, time.perf_counter() - t0
@@ -106,19 +133,21 @@ def _bench_continuous(cfg, params, prompts, max_len):
             float(np.percentile(lat, 95)) * 1e3)
 
 
-def _bench_decode(cfg, params, verbose, results):
+def _bench_decode(cfg, params, verbose, results, batches=BATCHES,
+                  max_new=MAX_NEW):
     rows = []
     if verbose:
         print("\n== serve: static batch vs continuous batching "
               f"({ARCH} reduced, mixed prompts {PROMPT_LENS}, "
-              f"max_new={MAX_NEW}) ==")
+              f"max_new={max_new}) ==")
         print(f"{'batch':>6}{'static tok/s':>14}{'cont tok/s':>12}"
               f"{'speedup':>9}{'p50 ms/tok':>12}{'p95 ms/tok':>12}")
-    max_len = max(PROMPT_LENS) + MAX_NEW + 8
-    for b in BATCHES:
+    max_len = max(PROMPT_LENS) + max_new + 8
+    for b in batches:
         prompts = _prompts(b, cfg.vocab_size)
-        s_tps, s_lat = _bench_static(cfg, params, prompts, max_len)
-        c_tps, p50, p95 = _bench_continuous(cfg, params, prompts, max_len)
+        s_tps, s_lat = _bench_static(cfg, params, prompts, max_len, max_new)
+        c_tps, p50, p95 = _bench_continuous(cfg, params, prompts, max_len,
+                                            max_new)
         speed = c_tps / s_tps
         if verbose:
             print(f"{b:>6}{s_tps:>14.0f}{c_tps:>12.0f}{speed:>8.2f}x"
@@ -132,6 +161,92 @@ def _bench_decode(cfg, params, verbose, results):
             "batch": b, "static_tok_s": s_tps, "continuous_tok_s": c_tps,
             "speedup": speed, "p50_ms": p50, "p95_ms": p95})
     return rows
+
+
+def _bench_spec_decode(cfg, params, verbose, results, requests=SPEC_REQUESTS,
+                       slots=SPEC_BATCH, max_new=SPEC_MAX_NEW,
+                       seed_len=SPEC_SEED):
+    """Repetitive/structured workload: speculative vs plain continuous
+    decode. The regime prompt-lookup drafting targets is templated output
+    over a small effective vocabulary (boilerplate JSON, logs, code), so
+    the scenario uses a ``SPEC_VOCAB``-token variant of the model and each
+    prompt carries a short repeating pattern plus the model's OWN first
+    ``seed_len`` greedy tokens (generated once up front): the
+    continuation's structure is already in context and the drafter proposes
+    it verbatim. Greedy decode is deterministic, so self-seeding leaves the
+    measured continuation identical between engines. More requests than
+    slots keeps continuous batching backfilling: slots whose drafts verify
+    fast retire early and take queued work instead of idling in lockstep.
+
+    Reported tokens/s is the DECODE phase (``admit_seconds`` excluded):
+    admission cost is identical for both engines and is tracked by the
+    ttft/shared-prefix rows; total-time throughput is recorded alongside.
+    """
+    from repro.models import get_family
+    from repro.models.params import init_params
+    scfg = cfg.replace(vocab_size=SPEC_VOCAB)
+    sparams = init_params(get_family(scfg).layout(scfg), jax.random.PRNGKey(0),
+                          scfg.param_dtype)
+    rng = np.random.RandomState(7)
+    pattern = rng.randint(0, SPEC_VOCAB, size=SPEC_PATTERN).tolist()
+    heads = [pattern * SPEC_PROMPT_REPS
+             + rng.randint(0, SPEC_VOCAB, size=1 + i % 3).tolist()
+             for i in range(requests)]
+    max_len = max(len(p) for p in heads) + seed_len + max_new + 8
+
+    def engine(spec):
+        return ContinuousBatchingEngine(
+            scfg, sparams, max_len=max_len, max_slots=slots,
+            enable_prefix_cache=False, enable_spec_decode=spec,
+            spec_tokens=SPEC_K)
+
+    base_eng = engine(False)
+    seed = base_eng.generate(heads, max_new=seed_len).tokens  # also warms jit
+    prompts = [h + seed[i].tolist() for i, h in enumerate(heads)]
+
+    def bench(eng):
+        eng.generate(prompts, max_new=4)              # warm the jit caches
+        best, admit, out = np.inf, 0.0, None
+        for _ in range(3):                            # loaded-host variance
+            t0 = time.perf_counter()
+            out = eng.generate(prompts, max_new=max_new)
+            dt = time.perf_counter() - t0
+            if dt < best:
+                best, admit = dt, eng.stats["admit_seconds"]
+        n = out.tokens.size
+        return out, n / (best - admit), n / best, eng
+
+    base_out, base_tps, base_total, _ = bench(base_eng)
+    spec_out, spec_tps, spec_total, eng = bench(engine(True))
+    assert np.array_equal(base_out.tokens, spec_out.tokens), \
+        "speculative decode diverged from the greedy path"
+    speed = spec_tps / base_tps
+    acc = eng.mean_accepted_len
+    steps_per_tok = eng.stats["spec_steps"] / max(eng.stats["spec_emitted"],
+                                                  1)
+    if verbose:
+        print(f"\n== serve: speculative decode, repetitive workload "
+              f"({requests} reqs / {slots} slots, vocab {SPEC_VOCAB}, "
+              f"pattern {SPEC_PATTERN}x{SPEC_PROMPT_REPS} + {seed_len} "
+              f"self-seeded, max_new={max_new}, K={SPEC_K}) ==")
+        print(f"plain {base_tps:.0f} decode tok/s   spec {spec_tps:.0f} "
+              f"decode tok/s   speedup {speed:.2f}x   mean accepted "
+              f"{acc:.2f}/{SPEC_K}   steps/token "
+              f"{steps_per_tok:.2f}")
+    results["spec_decode"] = {
+        "requests": requests, "slots": slots, "vocab": SPEC_VOCAB,
+        "max_new": max_new, "seed_len": seed_len,
+        "spec_tokens": SPEC_K,
+        "base_decode_tok_s": base_tps, "spec_decode_tok_s": spec_tps,
+        "decode_speedup": speed,
+        "base_total_tok_s": base_total, "spec_total_tok_s": spec_total,
+        "total_speedup": spec_total / base_total,
+        "mean_accepted_len": acc, "steps_per_token": steps_per_tok}
+    return [(f"serve.spec.base.b{slots}", 1e6 / base_tps,
+             f"tok_s={base_tps:.0f}"),
+            (f"serve.spec.on.b{slots}", 1e6 / spec_tps,
+             f"tok_s={spec_tps:.0f};speedup={speed:.2f}x;"
+             f"accepted={acc:.2f}")]
 
 
 def _admit_engines(cfg, params, max_len, max_slots):
@@ -221,12 +336,25 @@ def _bench_shared_prefix(cfg, params, verbose, results):
              f"admit_ms={p_ms:.2f};speedup={speed:.2f}x;hit_rate={hit:.2f}")]
 
 
-def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH):
+def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
+        smoke: bool = False):
     cfg, params = _build()
     results: dict = {"arch": ARCH, "max_new": MAX_NEW, "decode": []}
-    rows = _bench_decode(cfg, params, verbose, results)
-    rows += _bench_ttft_long(cfg, params, verbose, results)
-    rows += _bench_shared_prefix(cfg, params, verbose, results)
+    if smoke:
+        # CI gate: one batch point through every serve hot path (static,
+        # continuous, speculative) on the tiny config — catches perf-path
+        # breakage, not perf numbers.
+        results["smoke"] = True
+        results["max_new"] = 8          # what the smoke decode rows measure
+        rows = _bench_decode(cfg, params, verbose, results, batches=(4,),
+                             max_new=8)
+        rows += _bench_spec_decode(cfg, params, verbose, results, requests=4,
+                                   slots=4, max_new=16, seed_len=24)
+    else:
+        rows = _bench_decode(cfg, params, verbose, results)
+        rows += _bench_ttft_long(cfg, params, verbose, results)
+        rows += _bench_shared_prefix(cfg, params, verbose, results)
+        rows += _bench_spec_decode(cfg, params, verbose, results)
     if json_path is not None:
         Path(json_path).write_text(json.dumps(results, indent=2) + "\n")
         if verbose:
@@ -235,4 +363,14 @@ def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 batch point, tiny shapes (CI perf-path gate)")
+    ap.add_argument("--json", default=None,
+                    help="results path (default: BENCH_serve.json, or "
+                         "BENCH_serve.smoke.json with --smoke)")
+    args = ap.parse_args()
+    path = args.json or (JSON_PATH.with_suffix(".smoke.json") if args.smoke
+                         else JSON_PATH)
+    run(smoke=args.smoke, json_path=path)

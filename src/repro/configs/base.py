@@ -64,6 +64,31 @@ class ModelConfig:
     max_decode_slots: int = 8        # concurrent requests the serve engine admits
     prefill_chunk: int = 32          # query tokens per paged-prefill step
     enable_prefix_cache: bool = True # share prompt-prefix pages copy-on-write
+    # Self-speculative decode: each engine step drafts spec_tokens candidates
+    # per slot by n-gram lookup over the slot's own token history and scores
+    # all spec_tokens+1 positions in one paged multi-query verify pass.
+    # Greedy outputs are token-identical to the non-speculative path; the win
+    # is fewer engine steps per token on repetitive/structured output.
+    enable_spec_decode: bool = False
+    spec_tokens: int = 4             # drafted tokens per verify step (K)
+    # Batch-adaptive decode tuning (the BENCH_serve batch-32 droop):
+    # split-KV fills cores that idle when the decode batch is narrow, so the
+    # split count is chosen as ~decode_split_budget / slot_width, where
+    # slot_width is the dispatch's static batch dimension (max_slots — NOT
+    # the live request count, which would retrace per occupancy level),
+    # clamped to a divisor of the page-table width; the decode chunk length
+    # targets ~decode_chunk_tokens tokens per on-device chunk dispatch,
+    # clamped to
+    # [decode_chunk_min, decode_chunk_max] — wide batches amortize the host
+    # sync across slots and take shorter chunks, which also re-admits queued
+    # requests sooner (lower p95). Under spec decode a step emits up to
+    # spec_tokens+1 tokens, so the engine divides both the token target and
+    # decode_chunk_min by that window (floor 2): chunks are sized in emitted
+    # tokens, not steps.
+    decode_split_budget: int = 32    # target batch * num_splits product
+    decode_chunk_tokens: int = 256   # target slots * decode_chunk product
+    decode_chunk_min: int = 8
+    decode_chunk_max: int = 32
 
     # --- modality frontend stub (audio / vlm) ---------------------------------
     frontend: str = ""               # "" | "frame" | "patch"

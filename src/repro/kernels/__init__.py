@@ -14,9 +14,12 @@ from .mamba_scan import mamba_chunk_scan, ssd_reference
 from .prefill_attention import (flash_prefill, paged_prefill_attention,
                                 paged_prefill_reference)
 from .rmsnorm import rmsnorm, rmsnorm_reference
+from .verify_attention import (flash_verify, paged_verify_attention,
+                               paged_verify_reference)
 
 __all__ = ["flash_attention", "attention_reference", "mamba_chunk_scan",
            "ssd_reference", "rmsnorm", "rmsnorm_reference", "flash_decode",
            "paged_decode_attention", "paged_decode_reference",
            "flash_prefill", "paged_prefill_attention",
-           "paged_prefill_reference"]
+           "paged_prefill_reference", "flash_verify",
+           "paged_verify_attention", "paged_verify_reference"]

@@ -23,8 +23,20 @@ def flash_decode(q, k_pages, v_pages, page_table, lengths, *,
                             num_splits=num_splits, interpret=interpret)
 
 
-def default_num_splits(npages: int, target: int = 4) -> int:
-    """Largest split count <= target that divides the page-table width."""
+def default_num_splits(npages: int, target: int = 4, *, batch: int = 0,
+                       split_budget: int = 0) -> int:
+    """Largest split count <= target that divides the page-table width.
+
+    When ``batch`` and ``split_budget`` are given, the target adapts to
+    occupancy: split-KV exists to fill cores that idle when few slots are
+    active, but at high occupancy the (B, KV) grid axes already cover the
+    chip and extra splits only add partial-combine overhead (the batch-32
+    droop in BENCH_serve.json). Holding ``batch * splits`` near the budget
+    gives split counts of 32/8/1 at batch 1/4/32 for the default budget —
+    see ``ModelConfig.decode_split_budget``.
+    """
+    if split_budget and batch:
+        target = max(1, split_budget // batch)
     for s in range(min(target, npages), 0, -1):
         if npages % s == 0:
             return s
@@ -32,10 +44,12 @@ def default_num_splits(npages: int, target: int = 4) -> int:
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
-                           impl: str = "pallas"):
+                           impl: str = "pallas", split_budget: int = 32):
     """Paged GQA decode attention with backend dispatch (see module doc)."""
     if impl == "pallas" and jax.default_backend() == "tpu":
-        splits = default_num_splits(page_table.shape[1])
+        splits = default_num_splits(page_table.shape[1],
+                                    batch=page_table.shape[0],
+                                    split_budget=split_budget)
         return flash_decode_fwd(q, k_pages, v_pages, page_table, lengths,
                                 num_splits=splits)
     return paged_decode_reference(q, k_pages, v_pages, page_table, lengths)

@@ -1,0 +1,4 @@
+from .ops import flash_verify, paged_verify_attention
+from .ref import paged_verify_reference
+
+__all__ = ["flash_verify", "paged_verify_attention", "paged_verify_reference"]

@@ -1,0 +1,160 @@
+"""Split-KV paged multi-query (speculative-verify) GQA Pallas TPU kernel.
+
+``kernels/decode_attention`` streams pool pages for ONE query row per KV
+head; speculative decode needs the same dataflow for the T = K+1 rows of a
+draft window so all candidates are verified in a single pass over the cache.
+This kernel is the T>1 generalization of the flash-decode kernel — it keeps
+the FlashDecoding split-KV dataflow (long caches still use the full chip)
+and adds the prefill kernel's positional causal mask inside the window:
+
+- Grid = (B, KV, splits, pages_per_split). The page axis is innermost
+  (sequential on TPU), so the online-softmax accumulators for one split live
+  in VMEM scratch across its pages. Each split emits an *unnormalized*
+  partial (acc, m, l); the cheap associative combine over splits happens in
+  jnp outside the kernel.
+- The query block is the whole (T*G, hd) window per KV head. Query row r
+  (draft offset r // G) sits at global position ``pos[b] + r // G`` and
+  masks keys at positions greater than its own — one rule covers both the
+  verified history pages and the in-window lower triangle, because the
+  window's own KV rows are scattered into the pool *before* the kernel runs
+  (exactly as in ``kernels/prefill_attention``).
+- Page indirection is resolved by the BlockSpec index map reading the
+  scalar-prefetched page table; pages entirely past the window's last
+  position (``pos + T``) are skipped with ``pl.when`` (their DMA target is a
+  clamped valid page, so no OOB traffic).
+- T=1 reproduces the decode kernel exactly (lengths = pos + 1).
+
+This container is CPU-only: validated against ``ref.py`` in interpret mode
+(tests/test_verify_attention.py); on TPU silicon
+``ops.paged_verify_attention`` dispatches here for ``attn_impl="pallas"``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_verify_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, page_size: int, pages_per_split: int,
+                         group: int, window: int):
+    b = pl.program_id(0)
+    sp = pl.program_id(2)          # split index
+    pi = pl.program_id(3)          # page-within-split (innermost, sequential)
+    page_global = sp * pages_per_split + pi
+    start = page_global * page_size
+    pos = pos_ref[b]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Skip pages entirely past the window's last query position.
+    @pl.when(start <= pos + window - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (T*G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = q.shape[0]
+        q_pos = pos + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 0) // group
+        kv_pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 1)
+        s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == pages_per_split - 1)
+    def _emit_partial():
+        # Unnormalized: the split combine normalizes once, globally.
+        o_ref[0, 0, 0] = acc_scr[...]
+        m_ref[0, 0, 0] = m_scr[...]
+        l_ref[0, 0, 0] = l_scr[...]
+
+
+def flash_verify_fwd(q, k_pages, v_pages, page_table, pos, *,
+                     num_splits: int = 1, interpret: bool = False):
+    """q: (B,T,H,hd); k/v_pages: (KV,P,ps,hd); page_table: (B,npages) int32;
+    pos: (B,) int32 global position of q[:,0] -> (B,T,H,hd)."""
+    b, t, h, hd = q.shape
+    nkv, _, page_size, _ = k_pages.shape
+    g = h // nkv
+    npages = page_table.shape[1]
+    if npages % num_splits:
+        raise ValueError(f"npages {npages} % num_splits {num_splits}")
+    pps = npages // num_splits
+    scale = 1.0 / math.sqrt(hd)
+
+    # Clamp table entries so skipped pages still DMA a valid physical page.
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, k_pages.shape[1] - 1)
+    qr = q.reshape(b, t, nkv, g, hd).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, nkv, t * g, hd)
+
+    grid = (b, nkv, num_splits, pps)
+    kernel = functools.partial(_flash_verify_kernel, scale=scale,
+                               page_size=page_size, pages_per_split=pps,
+                               group=g, window=t)
+
+    def page_index(bi, kv, sp, pi, pt_ref, pos_ref):
+        return (kv, pt_ref[bi, sp * pps + pi], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, t * g, hd),
+                         lambda bi, kv, sp, pi, pt, ps_: (bi, kv, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, hd), page_index),
+            pl.BlockSpec((1, 1, page_size, hd), page_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, t * g, hd),
+                         lambda bi, kv, sp, pi, pt, ps_: (bi, kv, sp, 0, 0)),
+            pl.BlockSpec((1, 1, 1, t * g),
+                         lambda bi, kv, sp, pi, pt, ps_: (bi, kv, sp, 0)),
+            pl.BlockSpec((1, 1, 1, t * g),
+                         lambda bi, kv, sp, pi, pt, ps_: (bi, kv, sp, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t * g,), jnp.float32),      # running max m
+            pltpu.VMEM((t * g,), jnp.float32),      # running denom l
+            pltpu.VMEM((t * g, hd), jnp.float32),   # unnormalized accumulator
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nkv, num_splits, t * g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nkv, num_splits, t * g), jnp.float32),
+            jax.ShapeDtypeStruct((b, nkv, num_splits, t * g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pt, pos.astype(jnp.int32), qr, k_pages, v_pages)
+
+    # Associative split combine (FlashDecoding reduction), fp32.
+    m_star = jnp.max(m_part, axis=2, keepdims=True)          # (B,KV,1,T*G)
+    w = jnp.exp(m_part - m_star)                             # (B,KV,S,T*G)
+    l_tot = jnp.sum(w * l_part, axis=2)                      # (B,KV,T*G)
+    acc = jnp.sum(w[..., None] * o_part, axis=2)             # (B,KV,T*G,hd)
+    out = acc / jnp.maximum(l_tot, 1e-20)[..., None]
+    out = out.reshape(b, nkv, t, g, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, t, h, hd).astype(q.dtype)

@@ -1,0 +1,37 @@
+"""jit'd public wrappers for the paged speculative-verify kernel.
+
+``flash_verify`` is the raw kernel entry point (interpret-capable for CPU
+validation). ``paged_verify_attention`` is what the model verify path calls:
+it dispatches to the Pallas kernel on TPU silicon (``attn_impl="pallas"``)
+and to the fused-gather jnp reference everywhere else, mirroring
+``kernels/decode_attention.paged_decode_attention``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.ops import default_num_splits
+
+from .kernel import flash_verify_fwd
+from .ref import paged_verify_reference
+
+
+@partial(jax.jit, static_argnames=("num_splits", "interpret"))
+def flash_verify(q, k_pages, v_pages, page_table, pos, *,
+                 num_splits: int = 1, interpret: bool = False):
+    return flash_verify_fwd(q, k_pages, v_pages, page_table, pos,
+                            num_splits=num_splits, interpret=interpret)
+
+
+def paged_verify_attention(q, k_pages, v_pages, page_table, pos, *,
+                           impl: str = "pallas", split_budget: int = 32):
+    """Paged multi-query verify GQA attention with backend dispatch."""
+    if impl == "pallas" and jax.default_backend() == "tpu":
+        splits = default_num_splits(page_table.shape[1],
+                                    batch=page_table.shape[0],
+                                    split_budget=split_budget)
+        return flash_verify_fwd(q, k_pages, v_pages, page_table, pos,
+                                num_splits=splits)
+    return paged_verify_reference(q, k_pages, v_pages, page_table, pos)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for paged multi-query (speculative-verify) GQA attention.
+
+A verify step scores T = K+1 candidate tokens per decode slot in one forward
+pass: the already-verified current token plus K drafted tokens, occupying
+global positions ``pos[b] .. pos[b] + T - 1``. Their KV rows have already
+been scattered into the block-paged pool (the same pool the decode and
+prefill kernels read), so query i of request b attends every pooled KV row
+at a position ``<= pos[b] + i`` — the whole verified history plus the causal
+lower triangle of the draft window itself. The oracle gathers the logical
+KV stream dense and runs masked fp32 attention — the semantics the Pallas
+kernel must reproduce.
+
+T=1 degenerates to single-token decode attention with ``lengths = pos + 1``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import gather_pages
+
+MASK_VALUE = -1e30
+
+
+def paged_verify_reference(q, k_pages, v_pages, page_table, pos):
+    """Multi-query GQA attention over a paged KV cache (speculative verify).
+
+    q: (B, T, H, hd) — RoPE'd queries for the draft window.
+    k_pages/v_pages: (KV, P, page_size, hd) — the shared physical pool, with
+        the draft window's own KV rows already written.
+    page_table: (B, npages) int32 — per-request logical->physical page map.
+    pos: (B,) int32 — global position of ``q[:, 0]`` per request (the cache
+        holds [0, pos) verified rows plus the freshly written draft rows).
+    Returns (B, T, H, hd). Rows whose KV writes were routed to the sink page
+    (past a slot's budget) produce garbage; callers discard them.
+    """
+    b, t, h, hd = q.shape
+    nkv = k_pages.shape[0]
+    g = h // nkv
+    k = gather_pages(k_pages, page_table)            # (B, S, KV, hd)
+    v = gather_pages(v_pages, page_table)
+    s_len = k.shape[1]
+    qg = q.reshape(b, t, nkv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = pos[:, None] + jnp.arange(t)[None, :]                  # (B, T)
+    mask = jnp.arange(s_len)[None, None, :] <= q_pos[:, :, None]   # (B, T, S)
+    s = jnp.where(mask[:, None, None, :, :], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)

@@ -25,6 +25,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--spec", action="store_true",
+                    help="self-speculative decode (n-gram drafts verified "
+                         "in one multi-query paged pass; greedy outputs "
+                         "are unchanged)")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -38,7 +42,10 @@ def main() -> None:
         engine_kind = ("continuous" if hasattr(fam, "decode_paged")
                        else "static")
     if engine_kind == "continuous":
-        engine = ContinuousBatchingEngine(cfg, params, max_len=args.max_len)
+        engine = ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
+                                          enable_spec_decode=args.spec)
+    elif args.spec:
+        raise SystemExit("--spec requires the continuous engine")
     else:
         engine = ServeEngine(cfg, params, max_len=args.max_len)
     rng = jax.random.PRNGKey(1)

@@ -295,8 +295,55 @@ def paged_attention_block(cfg, p, x, *, k_pages, v_pages, page_table, pos):
         v[:, 0].transpose(1, 0, 2).astype(v_pages.dtype))
 
     o = paged_decode_attention(q[:, 0], k_pages, v_pages, page_table,
-                               pos + 1, impl=cfg.attn_impl)
+                               pos + 1, impl=cfg.attn_impl,
+                               split_budget=cfg.decode_split_budget)
     y = jnp.einsum("bshk,hkd->bsd", o[:, None].astype(dt), p["wo"].astype(dt))
+    return x + y, (k_pages, v_pages)
+
+
+def paged_verify_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
+                                 pos, write_limit):
+    """Pre-norm attention residual block for one speculative-verify window.
+
+    x: (B,T,d) activations of the draft window — the already-verified
+    current token followed by T-1 drafted candidates, occupying global
+    positions ``pos[b] .. pos[b] + T - 1``; k_pages/v_pages: (KV,P,ps,hd)
+    physical pool slices for this layer; page_table: (B,npages) int32;
+    write_limit: (B,) positions >= write_limit have their KV writes routed
+    to the reserved sink page 0 — the engine points it at the slot's token
+    budget (prompt_len + max_new), so a draft window running past the
+    budget (or a rejected tail re-drafted next step) can never clobber live
+    pages through the clamped page-table gather, its own or pages aliased
+    from a shared prefix.
+
+    The window's KV rows are scattered into the pool *first*; the kernel's
+    positional causal mask (key pos <= query pos) then covers both verified
+    history and the in-window lower triangle. Rows written for drafts that
+    verification later rejects are simply overwritten by the next verify
+    step, which restarts at the first rejected position.
+    Returns (y, (k_pages', v_pages')).
+    """
+    from repro.kernels.verify_attention import paged_verify_attention
+    dt = cfg.cdtype
+    b, t, _ = x.shape
+    ps = k_pages.shape[2]
+    positions = pos[:, None] + jnp.arange(t)[None, :]            # (B, T)
+    q, k, v = _qkv_proj(cfg, p, x, positions)
+
+    bidx = jnp.arange(b)[:, None]
+    valid = positions < write_limit[:, None]                     # (B, T)
+    page = jnp.where(valid, page_table[bidx, positions // ps], 0)
+    off = positions % ps
+    # (B,T,KV,hd) -> (KV,B,T,hd) rows written at [kv, page_bt, off_bt].
+    k_pages = k_pages.at[:, page, off].set(
+        k.transpose(2, 0, 1, 3).astype(k_pages.dtype))
+    v_pages = v_pages.at[:, page, off].set(
+        v.transpose(2, 0, 1, 3).astype(v_pages.dtype))
+
+    o = paged_verify_attention(q, k_pages, v_pages, page_table, pos,
+                               impl=cfg.attn_impl,
+                               split_budget=cfg.decode_split_budget)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(dt), p["wo"].astype(dt))
     return x + y, (k_pages, v_pages)
 
 

@@ -271,6 +271,41 @@ class TransformerFamily:
         logits = L.logits_fn(cfg, params, x)[:, 0]
         return logits, {"k": k, "v": v}
 
+    # -- paged speculative verify (multi-token decode) -------------------------------
+    def decode_verify(self, cfg, params, batch, pool):
+        """Score a T-token draft window per slot in one pass (spec decode).
+
+        batch: tokens (B,T) — the verified current token followed by T-1
+        drafts; pos (B,) global position of tokens[:,0]; page_table
+        (B,npages) int32; write_limit (B,) — KV writes at positions >=
+        write_limit are routed to the sink page (budget overshoot / idle
+        slots). Returns logits over ALL T positions, (B,T,V): logits[:,i]
+        conditions on the window prefix tokens[:, :i+1] plus the verified
+        history, which is exactly what acceptance needs. T=1 is the plain
+        decode step.
+        """
+        tokens, pos = batch["tokens"], batch["pos"]
+        page_table = batch["page_table"]
+        write_limit = batch["write_limit"]
+        x = L.embed_tokens(cfg, params, tokens)
+
+        def body(carry, xs):
+            h = carry
+            layer_params, kp, vp = xs
+            h, (kp, vp) = L.paged_verify_attention_block(
+                cfg, layer_params["attn"], h, k_pages=kp, v_pages=vp,
+                page_table=page_table, pos=pos, write_limit=write_limit)
+            if cfg.num_experts:
+                h, _ = moe_block(cfg, layer_params["ffn"], h)
+            else:
+                h = L.mlp_block(cfg, layer_params["ffn"], h)
+            return h, (kp, vp)
+
+        x, (k, v) = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.logits_fn(cfg, params, x)
+        return logits, {"k": k, "v": v}
+
     def paged_pool_shape(self, cfg, num_pages: int):
         """Physical pool array shape for ``num_pages`` shared cache pages."""
         return (cfg.num_layers, cfg.num_kv_heads, num_pages, cfg.page_size,

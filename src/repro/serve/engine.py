@@ -36,6 +36,17 @@ the provisioned resource:
   ``lax.fori_loop`` of exactly ``decode_chunk`` on-device steps (a static
   bound: one compile, ever) with the pool donated to each chunk; tokens
   accumulate on device and cross to the host once per chunk.
+- **Speculative multi-token decode** (``enable_spec_decode``): each on-device
+  step drafts ``spec_tokens`` candidates per slot by bigram prompt-lookup
+  over the slot's own token history (kept on device in the chunk carry),
+  scores all drafts plus the current token in ONE multi-query paged verify
+  pass (:mod:`repro.kernels.verify_attention`), and emits the verified
+  prefix — up to ``spec_tokens + 1`` tokens per step for the cost of one
+  cache sweep. Greedy outputs are token-identical to the non-speculative
+  path; rejected draft tails roll back by construction (the next step
+  re-writes their KV rows) and writes past a slot's token budget are routed
+  to the sink page so shared/refcounted pages are never corrupted. The trip
+  count stays static: still one compile, ever.
 
 Physical page 0 is reserved as a write sink: idle slots keep ``pos=0`` and an
 all-zero page-table row, and prefill pads route their KV writes there, so
@@ -61,6 +72,7 @@ from jax import lax
 from repro.models import get_family
 from repro.train.train_step import (build_decode_step, build_paged_decode_step,
                                     build_paged_prefill_step,
+                                    build_paged_verify_step,
                                     build_prefill_step)
 
 from .paging import PageAllocator, PrefixCache
@@ -148,6 +160,7 @@ class _Admit:
     prompt: list[int]
     pages: list[int]
     start: int                  # first position to prefill (= prefix match)
+    group: int = 1              # intra-wave prefill stage (same-wave dedup)
 
 
 class ContinuousBatchingEngine:
@@ -155,9 +168,12 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg, params, *, max_len: int = 512,
                  max_slots: int | None = None, num_pages: int | None = None,
-                 decode_chunk: int = 16, prefill_chunk: int | None = None,
+                 decode_chunk: int | None = None,
+                 prefill_chunk: int | None = None,
                  prefill_mode: str = "paged",
-                 enable_prefix_cache: bool | None = None):
+                 enable_prefix_cache: bool | None = None,
+                 enable_spec_decode: bool | None = None,
+                 spec_tokens: int | None = None):
         if cfg.encoder_only:
             raise ValueError("encoder-only models cannot decode")
         if prefill_mode not in ("paged", "dense"):
@@ -171,6 +187,27 @@ class ContinuousBatchingEngine:
         self.pages_per_seq = math.ceil(max_len / self.page_size)
         # +1: physical page 0 is the reserved idle-slot/pad write sink.
         self.num_pages = (num_pages or self.max_slots * self.pages_per_seq) + 1
+        if enable_spec_decode is None:
+            enable_spec_decode = cfg.enable_spec_decode
+        self.spec_tokens = cfg.spec_tokens if spec_tokens is None \
+            else spec_tokens
+        self.spec_decode = bool(enable_spec_decode and self.spec_tokens > 0)
+        if decode_chunk is None:
+            # Occupancy heuristic (BENCH_serve batch-32 droop): hold
+            # slots * chunk * expected-tokens-per-step ≈ decode_chunk_tokens
+            # per dispatch — narrow batches take long chunks to amortize the
+            # host sync, wide batches take short chunks so freed slots
+            # re-admit waiters sooner (p95 TTFT), the sync already being
+            # amortized across slots. A speculative step emits 1..K+1 tokens,
+            # so spec chunks are shortened by the FULL window: an oversized
+            # chunk sails past every slot's budget and burns dead masked
+            # steps (each costing a whole verify pass), while an undersized
+            # chunk merely adds a cheap host sync.
+            per_step = 1 + self.spec_tokens if self.spec_decode else 1
+            decode_chunk = min(cfg.decode_chunk_max,
+                               max(2, cfg.decode_chunk_min // per_step,
+                                   cfg.decode_chunk_tokens
+                                   // (self.max_slots * per_step)))
         self.decode_chunk = decode_chunk
         self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
         self.prefill_mode = prefill_mode
@@ -199,6 +236,14 @@ class ContinuousBatchingEngine:
         self._pos = np.zeros(s, np.int32)
         self._cur = np.zeros(s, np.int32)
         self._active = np.zeros(s, bool)
+        # Per-slot KV write limit (prompt_len + max_new): spec-decode draft
+        # windows running past it are routed to the sink page.
+        self._limit = np.zeros(s, np.int32)
+        # Per-slot token history (prompt + verified output) for on-device
+        # n-gram drafting; lives in the decode-chunk carry while decoding.
+        self.hist_len = self.pages_per_seq * self.page_size
+        self._hist = jnp.zeros((s, self.hist_len), jnp.int32) \
+            if self.spec_decode else None
         self._live: dict[int, _Live] = {}
         self.stats: dict[str, float] = {}
         self._reset_stats()
@@ -251,6 +296,95 @@ class ContinuousBatchingEngine:
         # copying the whole pool every chunk.
         self._chunk = jax.jit(decode_chunk_fn, donate_argnums=(6,))
 
+        if self.spec_decode:
+            vstep = build_paged_verify_step(cfg)
+            k_spec = self.spec_tokens
+            t_spec = k_spec + 1
+            hlen = self.hist_len
+
+            def spec_chunk_fn(params, cur, pos, hist, page_table, active,
+                              budget, limit, pool):
+                """Speculative decode chunk: ``decode_chunk`` verify steps.
+
+                Each step drafts K tokens per live slot by bigram lookup
+                over the slot's own history, verifies all K+1 window
+                positions in one pass, emits the accepted prefix plus the
+                model's correction, and advances pos by the emitted count.
+                Trip count is static; per-slot emission is data-dependent
+                and reported via ``n_out``.
+                """
+                self._n_decode_traces += 1
+                out = jnp.zeros((s, self.decode_chunk * t_spec), jnp.int32)
+                n_out = jnp.zeros(s, jnp.int32)
+                n_it = jnp.zeros(s, jnp.int32)
+                bidx = jnp.arange(s)
+
+                def body(i, carry):
+                    cur, pos, hist, n_out, n_it, pool, out = carry
+                    live = active & (n_out < budget)
+                    # The verified current token enters the history first:
+                    # hist[:pos+1] is now the exact token stream.
+                    hist = hist.at[bidx, pos].set(cur)
+                    # -- bigram prompt-lookup drafting (device-side) ------
+                    # Latest earlier occurrence of the trailing bigram
+                    # (hist[pos-1], cur); the K tokens that followed it are
+                    # the draft. A bad (or absent) match only lowers the
+                    # accept rate — verification restores exactness.
+                    prev = hist[bidx, pos - 1]
+                    hit = (hist[:, :-1] == prev[:, None]) & \
+                          (hist[:, 1:] == cur[:, None])
+                    j = jnp.arange(hlen - 1)
+                    # window ends at j+1; only strictly-earlier ends count
+                    cand = jnp.where(hit & ((j + 1)[None, :] < pos[:, None]),
+                                     j, -1)
+                    best = cand.max(axis=1)
+                    src = jnp.where(best >= 0, best + 2, pos + 1)
+                    # A recent match reaches past the known history (e.g. a
+                    # period-1 token run matches at pos-2): extrapolate it
+                    # periodically by wrapping indices beyond pos back by
+                    # the match distance. With no match this degenerates to
+                    # period 1 at pos — i.e. draft "repeat cur", which
+                    # catches run onsets for free.
+                    period = jnp.maximum(pos - (src - 1), 1)
+                    q_idx = src[:, None] + jnp.arange(k_spec)[None, :]
+                    over = jnp.maximum(q_idx - pos[:, None], 0)
+                    wrap = (over + period[:, None] - 1) // period[:, None]
+                    didx = q_idx - wrap * period[:, None]
+                    drafts = hist[bidx[:, None], jnp.clip(didx, 0, hlen - 1)]
+                    window = jnp.concatenate([cur[:, None], drafts], axis=1)
+                    # Accepted drafts become history; the rejected tail sits
+                    # past the next pos and is re-written before any read.
+                    hidx = pos[:, None] + 1 + jnp.arange(k_spec)[None, :]
+                    hist = hist.at[bidx[:, None], hidx].set(drafts,
+                                                            mode="drop")
+                    # -- one multi-query verify pass over the paged pool --
+                    pt = jnp.where(live[:, None], page_table, 0)
+                    wl = jnp.where(live, limit, 0)
+                    batch = {"tokens": window, "pos": pos, "page_table": pt,
+                             "write_limit": wl}
+                    nxt, _, pool = vstep(params, batch, pool)      # (S, T)
+                    # -- acceptance: longest draft prefix the model agrees
+                    # with; nxt[:, a] is the correction after it ----------
+                    match = (drafts == nxt[:, :k_spec]).astype(jnp.int32)
+                    a = jnp.cumprod(match, axis=1).sum(axis=1)     # (S,)
+                    # -- emit cur + accepted drafts; the tail beyond 1+a is
+                    # overwritten by the next step's emission -------------
+                    base = jnp.where(live, n_out, out.shape[1])
+                    oidx = base[:, None] + jnp.arange(t_spec)[None, :]
+                    out = out.at[bidx[:, None], oidx].set(window, mode="drop")
+                    n_out = n_out + jnp.where(live, 1 + a, 0)
+                    n_it = n_it + live.astype(jnp.int32)
+                    cur = jnp.where(live, nxt[bidx, a], cur)
+                    pos = jnp.where(live, pos + 1 + a, pos)
+                    return cur, pos, hist, n_out, n_it, pool, out
+
+                # Static trip count, exactly like the plain decode chunk:
+                # one compile ever, however the accept rate fluctuates.
+                return lax.fori_loop(0, self.decode_chunk, body,
+                                     (cur, pos, hist, n_out, n_it, pool, out))
+
+            self._chunk_spec = jax.jit(spec_chunk_fn, donate_argnums=(8,))
+
         @partial(jax.jit, donate_argnums=(0, 1))
         def cow_copy(pool_k, pool_v, src, dst):
             """src/dst: (n,) int32 — one dispatch copies a whole wave's
@@ -264,12 +398,23 @@ class ContinuousBatchingEngine:
     # -- stats ---------------------------------------------------------------
     def _reset_stats(self):
         self.stats = {"admitted": 0, "prefill_tokens": 0, "cached_tokens": 0,
-                      "cow_copies": 0, "admit_seconds": 0.0}
+                      "cow_copies": 0, "admit_seconds": 0.0,
+                      "spec_steps": 0, "spec_emitted": 0}
 
     @property
     def prefix_hit_rate(self) -> float:
         tot = self.stats["cached_tokens"] + self.stats["prefill_tokens"]
         return self.stats["cached_tokens"] / tot if tot else 0.0
+
+    @property
+    def mean_accepted_len(self) -> float:
+        """Mean drafted tokens accepted per verify step (0 <= . <= K).
+
+        Every verify step emits 1 + accepted tokens, so this is
+        (emitted - steps) / steps over the last ``generate`` call.
+        """
+        steps = self.stats["spec_steps"]
+        return (self.stats["spec_emitted"] - steps) / steps if steps else 0.0
 
     # -- legacy dense page writer (prompt KV -> pool), per (pad, group) ------
     def _write_pages(self, k, v, pages):
@@ -301,11 +446,22 @@ class ContinuousBatchingEngine:
         pages are aliased into its page-table row (refcount++), a partially
         matched boundary page is copy-on-written, and only the remaining
         suffix is prefilled — chunk by chunk, batched across the wave.
+
+        **Same-wave dedup:** a request's pages are registered in the radix
+        index the moment it is accepted, so a later request in the SAME
+        wave (e.g. an identical prompt) aliases them instead of prefilling
+        privately. Content for those pages only exists after the donor's
+        prefill runs, so the wave is prefilled in dependency *groups*: a
+        request that aliases an in-wave donor lands in a later group than
+        the donor, each group is one batched prefill, and a group's
+        copy-on-write boundary copies are dispatched after its donors'
+        group has prefilled but before its own prefill reads them.
         """
         t0 = time.perf_counter()
         ps = self.page_size
         wave: list[_Admit] = []
-        cow_pairs: list[tuple[int, int]] = []   # (src, dst), copied below
+        cow_pairs: dict[int, list[tuple[int, int]]] = {}   # group -> pairs
+        page_group: dict[int, int] = {}    # page -> group whose prefill fills it
         while pending:
             rid, prompt = pending[-1]
             plen = len(prompt)
@@ -343,48 +499,73 @@ class ContinuousBatchingEngine:
             slot = free_slots[0]
             fresh = [self.alloc.alloc() for _ in range(n_fresh)]
             pages = shared + fresh
+            # Aliasing an in-wave donor sequences us after its prefill.
+            deps = shared if cow_src is None else shared + [cow_src]
+            group = 1 + max((page_group.get(p, 0) for p in deps), default=0)
             if cow_src is not None:
                 # Boundary page: first cow_m rows of the matched page are this
                 # prompt's KV; copy them into our private page and append.
-                # The copy is deferred and batched — the pin on cow_src holds
-                # until it lands.
-                cow_pairs.append((cow_src, fresh[0]))
+                # The copy is deferred to our group's dispatch — the pin on
+                # cow_src holds until it lands.
+                cow_pairs.setdefault(group, []).append((cow_src, fresh[0]))
                 self.stats["cow_copies"] += 1
+            for p in fresh:
+                page_group[p] = group
             self._active[slot] = True          # reserve within this wave
             row = np.zeros(self.pages_per_seq, np.int32)
             row[:len(pages)] = pages
             self._page_table[slot] = row
             self.stats["cached_tokens"] += match
             self.stats["prefill_tokens"] += plen - match
-            wave.append(_Admit(slot, rid, list(prompt), pages, match))
+            wave.append(_Admit(slot, rid, list(prompt), pages, match, group))
+            if self.prefix_cache is not None:
+                # Publish now so the rest of this wave can alias; the grouped
+                # prefill below guarantees the content lands first.
+                self.prefix_cache.register(prompt, pages)
             pending.pop()
 
-        if cow_pairs:
-            # One device dispatch for the whole wave's boundary-page copies,
-            # padded to a pow2 bucket (pad pairs write sink -> sink).
-            n = _next_pow2(len(cow_pairs))
-            src = np.zeros(n, np.int32)
-            dst = np.zeros(n, np.int32)
-            for i, (s_, d_) in enumerate(cow_pairs):
-                src[i], dst[i] = s_, d_
-            self.pool["k"], self.pool["v"] = self._cow(
-                self.pool["k"], self.pool["v"], jnp.asarray(src),
-                jnp.asarray(dst))
-            for s_, _ in cow_pairs:
-                self.alloc.release(s_)          # pin no longer needed
         if wave:
-            if self.prefill_mode == "dense":
-                self._prefill_dense(wave)
-            else:
-                self._prefill_paged_wave(wave)
+            for g in sorted({a.group for a in wave}):
+                self._dispatch_cows(cow_pairs.get(g, ()))
+                members = [a for a in wave if a.group == g]
+                if self.prefill_mode == "dense":
+                    self._prefill_dense(members)
+                else:
+                    self._prefill_paged_wave(members)
             for a in wave:
-                if self.prefix_cache is not None:
-                    self.prefix_cache.register(a.prompt, a.pages)
                 self._live[a.slot] = _Live(a.rid, len(a.prompt), max_new,
                                            a.pages)
+            if self.spec_decode:
+                self._load_histories(wave, max_new)
             self.stats["admitted"] += len(wave)
         self.stats["admit_seconds"] += time.perf_counter() - t0
         return len(wave)
+
+    def _dispatch_cows(self, cow_pairs) -> None:
+        """One device dispatch copies a prefill group's boundary pages,
+        padded to a pow2 bucket (pad pairs write sink -> sink)."""
+        if not cow_pairs:
+            return
+        n = _next_pow2(len(cow_pairs))
+        src = np.zeros(n, np.int32)
+        dst = np.zeros(n, np.int32)
+        for i, (s_, d_) in enumerate(cow_pairs):
+            src[i], dst[i] = s_, d_
+        self.pool["k"], self.pool["v"] = self._cow(
+            self.pool["k"], self.pool["v"], jnp.asarray(src),
+            jnp.asarray(dst))
+        for s_, _ in cow_pairs:
+            self.alloc.release(s_)              # pin no longer needed
+
+    def _load_histories(self, wave: list[_Admit], max_new: int) -> None:
+        """Seed the on-device drafting history + write limit for new slots."""
+        rows = np.zeros((len(wave), self.hist_len), np.int32)
+        slots = np.zeros(len(wave), np.int32)
+        for i, a in enumerate(wave):
+            rows[i, :len(a.prompt)] = a.prompt
+            slots[i] = a.slot
+            self._limit[a.slot] = len(a.prompt) + max_new
+        self._hist = self._hist.at[jnp.asarray(slots)].set(jnp.asarray(rows))
 
     # -- paged chunked prefill (default admission path) ----------------------
     def _prefill_paged_wave(self, wave: list[_Admit]) -> None:
@@ -470,6 +651,7 @@ class ContinuousBatchingEngine:
         self._page_table[slot] = 0          # all-zero row -> sink page 0
         self._pos[slot] = 0
         self._cur[slot] = 0
+        self._limit[slot] = 0               # spec writes masked until re-seeded
         return live
 
     # -- invariants (exercised by tests) -------------------------------------
@@ -496,7 +678,9 @@ class ContinuousBatchingEngine:
         latency. It is NOT a count of usable tokens: a slot whose
         ``max_new`` budget ends mid-chunk idles (masked against the sink
         page) for the remaining steps, so sum emitted tokens from the
-        returned ``ServeResult``, never from ``steps``.
+        returned ``ServeResult``, never from ``steps``. Under speculative
+        decode one step emits 1..spec_tokens+1 tokens per slot, so
+        ``seconds / steps`` is per-VERIFY-step latency there.
         """
         if not prompts:
             return ServeResult(np.zeros((0, max_new), np.int32), [])
@@ -528,10 +712,22 @@ class ContinuousBatchingEngine:
             for slot, live in self._live.items():
                 budget[slot] = live.max_new - live.emitted
             t0 = time.perf_counter()
-            cur, pos, self.pool, out = self._chunk(
-                self.params, jnp.asarray(self._cur), jnp.asarray(self._pos),
-                jnp.asarray(self._page_table), jnp.asarray(self._active),
-                jnp.asarray(budget), self.pool)
+            if self.spec_decode:
+                cur, pos, self._hist, n_out, n_it, self.pool, out = \
+                    self._chunk_spec(
+                        self.params, jnp.asarray(self._cur),
+                        jnp.asarray(self._pos), self._hist,
+                        jnp.asarray(self._page_table),
+                        jnp.asarray(self._active), jnp.asarray(budget),
+                        jnp.asarray(self._limit), self.pool)
+                n_out_host = np.asarray(n_out)
+                self.stats["spec_steps"] += int(np.asarray(n_it).sum())
+            else:
+                cur, pos, self.pool, out = self._chunk(
+                    self.params, jnp.asarray(self._cur),
+                    jnp.asarray(self._pos), jnp.asarray(self._page_table),
+                    jnp.asarray(self._active), jnp.asarray(budget), self.pool)
+                n_out_host = None          # every live slot emits the chunk
             out_host = np.asarray(out)                  # one sync per chunk
             if on_chunk is not None:
                 on_chunk(self.decode_chunk, time.perf_counter() - t0)
@@ -539,8 +735,16 @@ class ContinuousBatchingEngine:
             self._pos = np.array(pos)
             for slot in list(self._live):
                 live = self._live[slot]
-                live.tokens.extend(out_host[slot].tolist())
-                live.emitted += self.decode_chunk
+                ntok = self.decode_chunk if n_out_host is None \
+                    else int(n_out_host[slot])
+                if n_out_host is not None:
+                    # Count only delivered tokens: the final verify step can
+                    # overshoot the budget and its truncated tail must not
+                    # inflate mean_accepted_len.
+                    self.stats["spec_emitted"] += min(
+                        ntok, live.max_new - live.emitted)
+                live.tokens.extend(out_host[slot, :ntok].tolist())
+                live.emitted += ntok
                 if live.emitted >= live.max_new:
                     done[live.rid] = live.tokens[:live.max_new]
                     self._retire(slot)

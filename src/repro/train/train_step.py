@@ -128,6 +128,32 @@ def build_paged_prefill_step(cfg) -> Callable:
     return paged_prefill_step
 
 
+def build_paged_verify_step(cfg) -> Callable:
+    """Speculative-verify step over the shared paged KV pool.
+
+    One call scores a T-token draft window per slot (the verified current
+    token + T-1 drafts) through the multi-query paged verify path and
+    returns the greedy next token for EVERY window position, (B, T): column
+    i is the model's token following window prefix [:, :i+1] — comparing it
+    against the drafts gives the accepted length, and entry [b, a] is the
+    corrected token that replaces the first rejected draft. The serve
+    engine jits this inside its on-device decode chunk with the pool
+    donated.
+    """
+    family = get_family(cfg)
+    if not hasattr(family, "decode_verify"):
+        raise ValueError(f"{cfg.name}: family {family.name!r} has no paged "
+                         "verify path (recurrent-state families keep their "
+                         "per-slot states dense)")
+
+    def paged_verify_step(params, batch, pool):
+        logits, pool = family.decode_verify(cfg, params, batch, pool)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, pool
+
+    return paged_verify_step
+
+
 def build_encode_step(cfg) -> Callable:
     """Encoder-only serve step (HuBERT): frames -> per-frame logits."""
     family = get_family(cfg)

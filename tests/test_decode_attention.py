@@ -73,6 +73,17 @@ def test_flash_decode_ragged_lengths():
                                rtol=1e-3, atol=1e-3)
 
 
+def test_default_num_splits_occupancy_adaptive():
+    """Split-KV fills idle cores at low occupancy; at high occupancy the
+    batch axis already covers the chip (batch * splits ~ budget)."""
+    from repro.kernels.decode_attention.ops import default_num_splits
+    assert default_num_splits(8, batch=1, split_budget=32) == 8
+    assert default_num_splits(8, batch=8, split_budget=32) == 4
+    assert default_num_splits(8, batch=32, split_budget=32) == 1
+    assert default_num_splits(6, batch=4, split_budget=32) == 6  # divisor rule
+    assert default_num_splits(8) == 4           # legacy default unchanged
+
+
 # ---------------------------------------------------------------------------
 # Engine-level equivalence
 # ---------------------------------------------------------------------------

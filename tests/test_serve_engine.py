@@ -1,7 +1,8 @@
 """Serve-engine lifecycle: paged chunked prefill vs the dense-prefill oracle,
-copy-on-write prefix sharing, refcount invariants, page reuse across
-retire/readmit, exhaustion mid-wave, up-front capacity validation, and the
-one-compile guarantees for the decode/prefill hot paths."""
+copy-on-write prefix sharing, same-wave prefix dedup, refcount invariants,
+page reuse across retire/readmit, eviction-on-realloc, exhaustion mid-wave,
+up-front capacity validation, speculative decode token-identity, and the
+one-compile guarantees for the decode/verify/prefill hot paths."""
 import jax
 import numpy as np
 import pytest
@@ -171,6 +172,224 @@ def test_refcounts_track_rows_mid_flight(model):
                  on_chunk=lambda s, t: eng._debug_check_refcounts())
     eng._debug_check_refcounts()
     assert eng.alloc.available() == eng.num_pages - 1   # all pages returned
+
+
+# ---------------------------------------------------------------------------
+# Same-wave prefix dedup
+# ---------------------------------------------------------------------------
+
+def test_same_wave_identical_prompts_dedup(model, gold_engine):
+    """Two identical prompts admitted in ONE wave: the second aliases the
+    first's pages (grouped sequenced prefill) instead of prefilling
+    privately, and both decode the exact oracle tokens."""
+    cfg, params = model
+    rng = np.random.RandomState(20)
+    prompt = rng.randint(0, cfg.vocab_size, size=20).tolist()
+    prompts = [prompt, prompt]
+    gold = _gold(gold_engine, prompts, 6)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8)
+    out = eng.generate(prompts, max_new=6)      # ONE admission wave
+    np.testing.assert_array_equal(gold, out.tokens)
+    # match is capped at plen-1 = 19: 2 full pages aliased + boundary COW'd
+    assert eng.stats["cached_tokens"] >= 16
+    assert eng.stats["cow_copies"] >= 1
+    eng._debug_check_refcounts()
+    assert eng.alloc.available() == eng.num_pages - 1
+
+
+def test_same_wave_dedup_chained_groups(model, gold_engine):
+    """A aliases nothing, B aliases A's pages, C aliases pages B prefills:
+    three dependency groups sequenced inside one admission wave."""
+    cfg, params = model
+    rng = np.random.RandomState(21)
+    a = rng.randint(0, cfg.vocab_size, size=16).tolist()     # 2 full pages
+    b = a + rng.randint(0, cfg.vocab_size, size=8).tolist()  # +1 full page
+    c = b + rng.randint(0, cfg.vocab_size, size=5).tolist()
+    prompts = [a, b, c]
+    gold = _gold(gold_engine, prompts, 6)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=3,
+                                   prefill_chunk=8)
+    out = eng.generate(prompts, max_new=6)      # ONE admission wave
+    np.testing.assert_array_equal(gold, out.tokens)
+    # B hits A's 2 pages (16 tokens, match capped at 15); C hits A's 2 pages
+    # plus the page B's prefill fills (24 tokens, capped at 23).
+    assert eng.stats["cached_tokens"] >= 15 + 23
+    eng._debug_check_refcounts()
+
+
+# ---------------------------------------------------------------------------
+# Eviction on reallocation
+# ---------------------------------------------------------------------------
+
+def test_allocator_realloc_evicts_cache_entries():
+    """The on_alloc hook scrubs a page's radix entries the moment the page
+    is handed out again."""
+    al = PageAllocator(4)                       # pages 1..3
+    pc = PrefixCache(2)
+    al.on_alloc = pc.evict
+    p1, p2 = al.alloc(), al.alloc()
+    pc.register([1, 2, 3, 4], [p1, p2])
+    al.release(p1)
+    al.release(p2)
+    assert pc.lookup([1, 2, 3, 4])[1] == 4      # retired but still hittable
+    got = {al.alloc(), al.alloc()}              # reallocation scrubs entries
+    assert got == {p1, p2}
+    assert pc.lookup([1, 2, 3, 4]) == ([], 0)
+
+
+def test_realloc_rejects_stale_prefix_hit(model, gold_engine):
+    """A radix hit on a retired page that has since been REALLOCATED must be
+    rejected (not aliased): the readmitted donor prefills from scratch and
+    still emits oracle tokens."""
+    cfg, params = model
+    rng = np.random.RandomState(22)
+    donor = rng.randint(0, cfg.vocab_size, size=16).tolist()   # 2 full pages
+    flush = rng.randint(0, cfg.vocab_size, size=24).tolist()
+    # 4-page pool: donor needs 3 (16+8 tokens), flush needs all 4.
+    eng = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=1,
+                                   num_pages=4, prefill_chunk=8,
+                                   decode_chunk=4)
+    gold_d = _gold(gold_engine, [donor], 8)
+    np.testing.assert_array_equal(gold_d,
+                                  eng.generate([donor], max_new=8).tokens)
+    assert eng.prefix_cache.lookup(donor)[1] == 16   # retired, still cached
+    eng.generate([flush], max_new=8)            # reallocates every pool page
+    assert eng.prefix_cache.lookup(donor) == ([], 0)
+    out = eng.generate([donor], max_new=8)      # no stale alias: full prefill
+    assert eng.stats["cached_tokens"] == 0
+    np.testing.assert_array_equal(gold_d, out.tokens)
+    eng._debug_check_refcounts()
+
+
+def test_cow_boundary_refcounts_consistent(model, gold_engine):
+    """Three followers COW the same boundary page in one wave: refcounts hold
+    at every decode chunk, the pins drain, and tokens match the oracle."""
+    cfg, params = model
+    rng = np.random.RandomState(23)
+    donor = rng.randint(0, cfg.vocab_size, size=12).tolist()   # partial page
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=3,
+                                   prefill_chunk=8, decode_chunk=4)
+    eng.generate([donor], max_new=4)            # caches 1 full + 1 partial
+    followers = [donor + rng.randint(0, cfg.vocab_size, size=3).tolist()
+                 for _ in range(3)]
+    gold = _gold(gold_engine, followers, 6)
+    out = eng.generate(followers, max_new=6,
+                       on_chunk=lambda s, t: eng._debug_check_refcounts())
+    np.testing.assert_array_equal(gold, out.tokens)
+    assert eng.stats["cow_copies"] == 3         # each COWs its private copy
+    eng._debug_check_refcounts()
+    assert eng.alloc.available() == eng.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Speculative multi-token decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_tokens", [1, 4])
+def test_spec_decode_token_identical(model, gold_engine, spec_tokens):
+    """Greedy speculative decode emits EXACTLY the non-speculative tokens,
+    across ragged prompts, queued admission and page-boundary crossings."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [3, 7, 12, 5, 17], seed=24)
+    gold = _gold(gold_engine, prompts, 12)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=4,
+                                   enable_spec_decode=True,
+                                   spec_tokens=spec_tokens)
+    out = eng.generate(prompts, max_new=12)     # 2 slots: queued waves
+    np.testing.assert_array_equal(gold, out.tokens)
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["spec_emitted"] >= eng.stats["spec_steps"]
+    assert 0.0 <= eng.mean_accepted_len <= spec_tokens
+    eng._debug_check_refcounts()
+
+
+def test_spec_decode_with_prefix_sharing(model, gold_engine):
+    """Spec decode composes with COW prefix sharing: a follower aliasing the
+    donor's pages (incl. the partial page spec decode wrote into) still
+    decodes oracle tokens — rejected draft tails never corrupt shared
+    pages."""
+    cfg, params = model
+    rng = np.random.RandomState(25)
+    donor = rng.randint(0, cfg.vocab_size, size=12).tolist()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=4,
+                                   enable_spec_decode=True, spec_tokens=4)
+    gold_d = _gold(gold_engine, [donor], 6)
+    np.testing.assert_array_equal(gold_d,
+                                  eng.generate([donor], max_new=6).tokens)
+    follow = [donor + rng.randint(0, cfg.vocab_size, size=2).tolist()
+              for _ in range(2)]
+    gold_f = _gold(gold_engine, follow, 8)
+    out = eng.generate(follow, max_new=8)
+    np.testing.assert_array_equal(gold_f, out.tokens)
+    assert eng.stats["cached_tokens"] >= 2 * 8   # full prefix pages aliased
+    eng._debug_check_refcounts()
+
+
+def test_spec_decode_budget_overshoot_masked(model, gold_engine):
+    """Draft windows running past a slot's token budget route their KV to
+    the sink page: the boundary page a later request will COW keeps exactly
+    the bytes a no-overshoot engine produces.
+
+    prompt 61 + max_new 3 fills the page-table row exactly (max_len 64):
+    every verify window past pos 63 would otherwise spill through the
+    clamped page-table gather into the request's last real page."""
+    cfg, params = model
+    rng = np.random.RandomState(26)
+    donor = rng.randint(0, cfg.vocab_size, size=61).tolist()
+    gold_d = _gold(gold_engine, [donor], 3)
+
+    ref_eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                       prefill_chunk=8, decode_chunk=1)
+    np.testing.assert_array_equal(
+        gold_d, ref_eng.generate([donor], max_new=3).tokens)
+    page_ref = ref_eng.prefix_cache.lookup(donor)[0][-1]
+    ref_rows = np.asarray(ref_eng.pool["k"])[:, :, page_ref]
+
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=8,
+                                   enable_spec_decode=True, spec_tokens=4)
+    np.testing.assert_array_equal(gold_d,
+                                  eng.generate([donor], max_new=3).tokens)
+    page = eng.prefix_cache.lookup(donor)[0][-1]
+    rows = np.asarray(eng.pool["k"])[:, :, page]
+    # allclose, not array_equal: the verify step batches T positions through
+    # one projection GEMM, which may round differently from the 1-token step.
+    np.testing.assert_allclose(ref_rows, rows, rtol=1e-5, atol=1e-6)
+
+    follow = [donor + rng.randint(0, cfg.vocab_size, size=1).tolist()]
+    gold_f = _gold(gold_engine, follow, 2)
+    out = eng.generate(follow, max_new=2)
+    assert eng.stats["cached_tokens"] >= len(donor)     # prefix was shared
+    assert eng.stats["cow_copies"] >= 1                 # boundary page COW'd
+    np.testing.assert_array_equal(gold_f, out.tokens)
+
+
+def test_spec_decode_chunk_compiles_once(model):
+    """Data-dependent accept lengths never retrace the spec decode chunk:
+    the fori_loop trip count stays static."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   decode_chunk=8, prefill_chunk=8,
+                                   enable_spec_decode=True, spec_tokens=4)
+    prompts = _prompts(cfg.vocab_size, [5, 9], seed=27)
+    for max_new in (8, 11, 3, 13):              # ragged budgets + tails
+        eng.generate(prompts, max_new=max_new)
+    assert eng._n_decode_traces == 1
+
+
+def test_decode_chunk_occupancy_heuristic(model):
+    """decode_chunk=None picks chunk = clamp(tokens_target/slots): long
+    chunks for narrow batches, short chunks at high occupancy."""
+    cfg, params = model
+    narrow = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=1)
+    wide = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=32)
+    assert narrow.decode_chunk == cfg.decode_chunk_max
+    assert wide.decode_chunk == max(cfg.decode_chunk_min,
+                                    cfg.decode_chunk_tokens // 32)
+    assert wide.decode_chunk < narrow.decode_chunk
 
 
 # ---------------------------------------------------------------------------

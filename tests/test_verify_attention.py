@@ -1,0 +1,116 @@
+"""Paged multi-query (speculative-verify) kernel vs oracle (interpret mode),
+the oracle vs dense causal attention on the gathered cache, and the T=1
+degeneration to single-token decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_verify, paged_decode_reference,
+                           paged_verify_reference)
+from repro.kernels.decode_attention.ref import gather_pages
+from repro.models.layers import dense_attention
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-3, atol=1e-3)
+
+
+def _case(key, b, t, h, kv, hd, ps, npages, num_pool_pages, dtype):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, t, h, hd), dtype)
+    kp = jax.random.normal(ks[1], (kv, num_pool_pages, ps, hd), dtype)
+    vp = jax.random.normal(ks[2], (kv, num_pool_pages, ps, hd), dtype)
+    # each request gets distinct physical pages, shuffled (paging is real)
+    perm = jax.random.permutation(ks[3], num_pool_pages)[:b * npages]
+    pt = perm.reshape(b, npages).astype(jnp.int32)
+    pos = jax.random.randint(ks[4], (b,), 0, npages * ps - t + 1)
+    return q, kp, vp, pt, pos.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("b,h,kv,hd", [
+    (2, 4, 4, 32),     # MHA
+    (3, 8, 2, 32),     # GQA group=4
+    (2, 4, 1, 64),     # MQA
+    (1, 6, 3, 16),     # odd head group
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_verify_sweep(b, h, kv, hd, dtype):
+    t, ps, npages = 5, 8, 4
+    q, kp, vp, pt, pos = _case(
+        jax.random.PRNGKey(0), b, t, h, kv, hd, ps, npages, 32, dtype)
+    out = flash_verify(q, kp, vp, pt, pos, num_splits=2, interpret=True)
+    ref = paged_verify_reference(q, kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_flash_verify_split_kv(num_splits):
+    """Split-KV partial combine is exact for any split factor."""
+    q, kp, vp, pt, pos = _case(
+        jax.random.PRNGKey(1), 2, 3, 8, 2, 32, 8, 4, 16, jnp.float32)
+    out = flash_verify(q, kp, vp, pt, pos, num_splits=num_splits,
+                       interpret=True)
+    ref = paged_verify_reference(q, kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("t", [1, 2, 5])
+def test_flash_verify_window_sizes(t):
+    """Draft-window sweep, including the degenerate decode-like T=1."""
+    q, kp, vp, pt, pos = _case(
+        jax.random.PRNGKey(2), 2, t, 4, 2, 32, 8, 4, 16, jnp.float32)
+    out = flash_verify(q, kp, vp, pt, pos, num_splits=2, interpret=True)
+    ref = paged_verify_reference(q, kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_verify_window_positions():
+    """pos=0 (no history) through windows ending at the pool's last row."""
+    b, t, h, kv, hd, ps, npages = 3, 4, 4, 2, 16, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    kp = jax.random.normal(ks[1], (kv, b * npages, ps, hd))
+    vp = jax.random.normal(ks[2], (kv, b * npages, ps, hd))
+    pt = jnp.arange(b * npages, dtype=jnp.int32).reshape(b, npages)
+    pos = jnp.array([0, 13, npages * ps - t], jnp.int32)
+    out = flash_verify(q, kp, vp, pt, pos, num_splits=2, interpret=True)
+    ref = paged_verify_reference(q, kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_verify_reference_degenerates_to_decode():
+    """T=1 verify == single-token decode attention with lengths = pos + 1."""
+    q, kp, vp, pt, pos = _case(
+        jax.random.PRNGKey(4), 3, 1, 8, 2, 32, 8, 4, 24, jnp.float32)
+    ver = paged_verify_reference(q, kp, vp, pt, pos)
+    dec = paged_decode_reference(q[:, 0], kp, vp, pt, pos + 1)
+    np.testing.assert_allclose(np.asarray(ver[:, 0]), np.asarray(dec),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_verify_reference_matches_dense_causal():
+    """The paged oracle equals dense causal attention on the gathered KV."""
+    b, t, h, kv, hd, ps, npages = 2, 5, 4, 2, 16, 4, 6
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    kp = jax.random.normal(ks[1], (kv, 24, ps, hd))
+    vp = jax.random.normal(ks[2], (kv, 24, ps, hd))
+    perm = jax.random.permutation(ks[3], 24)[:b * npages]
+    pt = perm.reshape(b, npages).astype(jnp.int32)
+    pos = jnp.array([0, 9], jnp.int32)
+    ref = paged_verify_reference(q, kp, vp, pt, pos)
+    kd, vd = gather_pages(kp, pt), gather_pages(vp, pt)
+    s_len = kd.shape[1]
+    for i in range(b):
+        gold = dense_attention(q[i:i + 1], kd[i:i + 1], vd[i:i + 1],
+                               causal=True,
+                               q_positions=pos[i] + jnp.arange(t),
+                               kv_positions=jnp.arange(s_len))
+        np.testing.assert_allclose(np.asarray(ref[i]), np.asarray(gold[0]),
+                                   rtol=1e-4, atol=1e-4)
