@@ -1,0 +1,294 @@
+"""Benchmark: the Kotta serving gateway — elastic spot replicas vs a static
+on-demand fleet on a bursty multi-tenant trace.
+
+The serving analogue of the paper's Table VII-C (elastic vs static
+provisioning: makespan / cost / wait) plus its §VI isolation guarantees:
+
+1. ``trace``: three tenants submit two bursts of generation requests with
+   deadlines (interactive jobs in priority class 0, batch in class 1).
+   The **elastic** gateway starts with zero replicas, scales spot replicas
+   against queue depth (``core/elastic.Provisioner`` + ``core/market``),
+   suffers one forced mid-decode spot revocation (whose requests are
+   re-enqueued and completed — none lost), and drains back to zero after
+   the idle timeout. The **static** baseline pre-provisions the same peak
+   replica count on-demand and keeps it up for the whole makespan — the
+   classic stranded-capacity strawman. Both run the same virtual-clock
+   :class:`~repro.serve.admission.ServiceModel`, so $ cost, deadline-hit
+   rate and tokens/sim-second are deterministic and comparable.
+2. ``isolation``: identical prompts across tenants produce ZERO prefix-
+   cache hits (tenant-scoped namespaces) while a repeat within the tenant
+   aliases its cached pages; the audit log holds every allow/deny.
+
+Results land in ``BENCH_gateway.json`` alongside the CSV rows that
+``benchmarks/run.py`` prints. ``--smoke`` runs a one-burst subset for CI
+(control-plane breakage, not numbers).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core.elastic import ProvisioningModel, ScalingPolicy
+from repro.core.market import SpotMarket
+from repro.core.security import PolicyEngine, provision_tenant
+from repro.core.clock import VirtualClock
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import (ContinuousBatchingEngine, JobState,
+                         KottaServeGateway, ServiceModel)
+
+ARCH = "yi-6b"
+TENANTS = ("alice", "bob", "carol")
+MAX_LEN = 64
+SLOTS = 4                       # decode slots per replica
+MAX_REPLICAS = 3
+PREFIX_LEN = 16                 # per-tenant hot system prompt (2 pages)
+BURST_JOBS = 9                  # per burst, round-robin across tenants
+BURST_GAP_S = 600.0             # lull between bursts (idle cost shows here)
+MAX_NEW = 16
+IDLE_TIMEOUT_S = 120.0
+PROVISION_DELAY_S = 60.0
+SERVICE = ServiceModel(prefill_tok_per_s=2048.0, decode_step_s=0.05)
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_gateway.json"
+
+
+def _build():
+    cfg = get_reduced_config(ARCH).replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _factory(cfg, params):
+    return lambda: ContinuousBatchingEngine(
+        cfg, params, max_len=MAX_LEN, max_slots=SLOTS, prefill_chunk=8,
+        decode_chunk=4)
+
+
+def _security():
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = {t: provision_tenant(sec, t, f"pw-{t}", data_zones=("public",))
+              for t in TENANTS}
+    return sec, tokens
+
+
+def _trace(cfg, bursts: int, jobs_per_burst: int):
+    """(arrival_s, tenant, prompt, max_new, deadline_s, priority) rows.
+
+    Each tenant's prompts share that tenant's hot prefix, so same-tenant
+    admissions alias cached pages (less fresh prefill -> more deadline
+    headroom) while cross-tenant prompts never do.
+    """
+    rng = np.random.RandomState(42)
+    prefixes = {t: rng.randint(0, cfg.vocab_size, size=PREFIX_LEN).tolist()
+                for t in TENANTS}
+    rows = []
+    for b in range(bursts):
+        t0 = b * BURST_GAP_S
+        for i in range(jobs_per_burst):
+            tenant = TENANTS[i % len(TENANTS)]
+            tail = rng.randint(0, cfg.vocab_size, size=4 + i % 5).tolist()
+            interactive = i % 3 == 0
+            rows.append((t0 + i * 2.0, tenant,
+                         prefixes[tenant] + tail, MAX_NEW,
+                         240.0 if interactive else 3600.0,
+                         0 if interactive else 1))
+    return rows
+
+
+def _run_trace(gw, tokens, trace, revoke_once: bool):
+    """Submit arrivals on the virtual clock, optionally force one spot
+    revocation mid-decode during the second half, then drain."""
+    revoked = False
+    rids = []
+    rounds = 0
+    max_rounds = 20_000
+
+    def tick():
+        nonlocal rounds
+        rounds += 1
+        if rounds > max_rounds:                 # fail crisply, not hang CI
+            raise RuntimeError(f"trace did not drain in {max_rounds} "
+                               f"rounds ({gw.outstanding()} outstanding)")
+        gw.step()
+
+    half = trace[len(trace) // 2][0]
+    for arrival, tenant, prompt, max_new, deadline_s, prio in trace:
+        while gw.clock.now() < arrival:
+            tick()
+            if (revoke_once and not revoked and gw.clock.now() >= half
+                    and gw.replicas()
+                    and any(l.emitted > 0
+                            for l in gw.replicas()[0].engine._live.values())):
+                gw.revoke_replica(gw.replicas()[0].id)
+                revoked = True
+        rids.append(gw.submit(tokens[tenant], prompt, max_new=max_new,
+                              deadline_s=deadline_s, priority=prio,
+                              data_zone="public"))
+    while gw.outstanding():
+        tick()
+        if (revoke_once and not revoked and gw.replicas()
+                and any(l.emitted > 0
+                        for l in gw.replicas()[0].engine._live.values())):
+            gw.revoke_replica(gw.replicas()[0].id)
+            revoked = True
+    # Let the elastic pool idle out so its termination cost is in the bill.
+    for _ in range(int(IDLE_TIMEOUT_S / gw.idle_tick_s) + 2):
+        gw.step()
+    return rids, revoked
+
+
+def _bench_trace(cfg, params, verbose, results, bursts=2,
+                 jobs_per_burst=BURST_JOBS):
+    trace = _trace(cfg, bursts, jobs_per_burst)
+    out = {}
+    wall = {}
+    for mode in ("elastic", "static"):
+        sec, tokens = _security()
+        if mode == "elastic":
+            gw = KottaServeGateway(
+                _factory(cfg, params), sec,
+                scaling=ScalingPolicy.limited(
+                    MAX_REPLICAS, market="spot", bid_fraction=0.5,
+                    idle_timeout_s=IDLE_TIMEOUT_S),
+                market=SpotMarket(seed=0),
+                provisioning=ProvisioningModel(
+                    base_delay_s=PROVISION_DELAY_S, jitter_s=0.0,
+                    volatility_prob=0.0),
+                service_model=SERVICE, idle_tick_s=5.0)
+        else:
+            gw = KottaServeGateway(
+                _factory(cfg, params), sec,
+                scaling=ScalingPolicy.none(MAX_REPLICAS,
+                                           market="on_demand"),
+                service_model=SERVICE, idle_tick_s=5.0)
+        t0 = time.perf_counter()
+        rids, revoked = _run_trace(gw, tokens, trace,
+                                   revoke_once=(mode == "elastic"))
+        wall[mode] = time.perf_counter() - t0
+        m = gw.metrics()
+        m["revoked_mid_decode"] = revoked
+        m["all_completed_or_shed"] = all(
+            gw.jobs[r].status in (JobState.DONE, JobState.SHED)
+            for r in rids)
+        out[mode] = m
+
+    ratio = out["static"]["cost_usd"] / max(out["elastic"]["cost_usd"],
+                                            1e-12)
+    results["trace"] = {
+        "jobs": len(trace), "tenants": len(TENANTS),
+        "elastic": out["elastic"], "static": out["static"],
+        "cost_ratio_static_over_elastic": ratio}
+    if verbose:
+        print(f"\n== gateway: bursty multi-tenant trace ({len(trace)} jobs, "
+              f"{len(TENANTS)} tenants, {MAX_REPLICAS} max replicas) ==")
+        print(f"{'mode':<9}{'$cost':>9}{'$/1k tok':>10}{'hit%':>7}"
+              f"{'sla%':>7}{'shed':>6}{'revoked':>9}{'requeued':>9}"
+              f"{'peak':>6}")
+        for mode in ("elastic", "static"):
+            m = out[mode]
+            print(f"{mode:<9}{m['cost_usd']:>9.4f}"
+                  f"{m['usd_per_1k_tokens']:>10.4f}"
+                  f"{100 * m['deadline_hit_rate']:>6.1f}%"
+                  f"{100 * m['sla_rate']:>6.1f}%{m['shed']:>6}"
+                  f"{m['revocations']:>9}{m['requeues']:>9}"
+                  f"{m['peak_replicas']:>6}")
+        print(f"headline: static-OD / elastic-spot cost = {ratio:.1f}x "
+              f"(paper: 'up to 16x'); revocation mid-decode lost "
+              f"{0 if out['elastic']['all_completed_or_shed'] else '!'}"
+              f" requests")
+    rows = []
+    for mode in ("elastic", "static"):
+        m = out[mode]
+        rows.append((f"gateway.{mode}", wall[mode] * 1e6 / len(trace),
+                     f"cost_usd={m['cost_usd']:.4f};"
+                     f"hit_rate={m['deadline_hit_rate']:.2f};"
+                     f"sla={m['sla_rate']:.2f};"
+                     f"tok_sim_s={m['tok_per_sim_s']:.1f}"))
+    rows.append(("gateway.cost_ratio", 0.0, f"static_over_elastic="
+                 f"{ratio:.2f}x"))
+    return rows
+
+
+def _bench_isolation(cfg, params, verbose, results):
+    """Tenant-scoped prefix cache: same prompt, zero cross-tenant hits."""
+    sec, tokens = _security()
+    gw = KottaServeGateway(
+        _factory(cfg, params), sec,
+        scaling=ScalingPolicy.none(1, market="on_demand"),
+        service_model=SERVICE)
+    eng = gw.replicas()[0].engine
+    prompt = np.random.RandomState(7).randint(
+        0, cfg.vocab_size, size=24).tolist()
+
+    gw.submit(tokens["alice"], prompt, max_new=4, data_zone="public")
+    gw.drain()
+    cold = eng.stats["cached_tokens"]
+
+    gw.submit(tokens["alice"], prompt, max_new=4, data_zone="public")
+    gw.drain()
+    same = eng.stats["cached_tokens"] - cold
+
+    before = eng.stats["cached_tokens"]
+    gw.submit(tokens["bob"], prompt, max_new=4, data_zone="public")
+    gw.drain()
+    cross = eng.stats["cached_tokens"] - before
+
+    audit_allow = len(sec.audit.records(decision="allow"))
+    audit_deny = len(sec.audit.records(decision="deny"))
+    results["isolation"] = {
+        "prompt_len": len(prompt), "same_tenant_cached_tokens": int(same),
+        "cross_tenant_cached_tokens": int(cross),
+        "audit_allows": audit_allow, "audit_denies": audit_deny}
+    if verbose:
+        print(f"\n== gateway: tenant prefix-cache isolation "
+              f"({len(prompt)}-token prompt) ==")
+        print(f"same-tenant repeat: {same} cached tokens   cross-tenant: "
+              f"{cross} cached tokens   audit: {audit_allow} allows / "
+              f"{audit_deny} denies")
+    assert cross == 0, "cross-tenant prefix hit: isolation broken"
+    return [("gateway.isolation", 0.0,
+             f"same_tenant_hits={same};cross_tenant_hits={cross}")]
+
+
+def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
+        smoke: bool = False):
+    cfg, params = _build()
+    results: dict = {"arch": ARCH, "slots_per_replica": SLOTS,
+                     "max_replicas": MAX_REPLICAS, "smoke": smoke}
+    if smoke:
+        rows = _bench_trace(cfg, params, verbose, results, bursts=1,
+                            jobs_per_burst=6)
+    else:
+        rows = _bench_trace(cfg, params, verbose, results)
+    rows += _bench_isolation(cfg, params, verbose, results)
+    if json_path is not None:
+        Path(json_path).write_text(json.dumps(results, indent=2) + "\n")
+        if verbose:
+            print(f"\nwrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one-burst subset, tiny shapes (CI control-plane "
+                         "gate)")
+    ap.add_argument("--json", default=None,
+                    help="results path (default: BENCH_gateway.json, or "
+                         "BENCH_gateway.smoke.json with --smoke)")
+    args = ap.parse_args()
+    path = args.json or (JSON_PATH.with_suffix(".smoke.json") if args.smoke
+                         else JSON_PATH)
+    run(smoke=args.smoke, json_path=path)

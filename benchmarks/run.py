@@ -3,8 +3,9 @@
 Prints a ``name,us_per_call,derived`` CSV summary after the human-readable
 tables. Usage: ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``.
 The serve benchmark additionally writes ``BENCH_serve.json`` (tokens/s,
-TTFT, prefix hit rate) so the perf trajectory is machine-readable across
-PRs.
+TTFT, prefix hit rate) and the gateway benchmark ``BENCH_gateway.json``
+(elastic vs static cost, deadline-hit rate, tenant isolation) so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -13,8 +14,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from benchmarks import (cost_aware, elastic_scaling, roofline, serve_bench,
-                        storage_cost, throughput, train_microbench)
+from benchmarks import (cost_aware, elastic_scaling, gateway_bench, roofline,
+                        serve_bench, storage_cost, throughput,
+                        train_microbench)
 
 BENCHES = {
     "storage_cost": storage_cost.run,        # paper Table III
@@ -24,6 +26,7 @@ BENCHES = {
     "roofline": roofline.run,                # assignment §Roofline
     "train_microbench": train_microbench.run,
     "serve": serve_bench.run,                # continuous batching vs static
+    "gateway": gateway_bench.run,            # elastic multi-tenant serving
 }
 
 

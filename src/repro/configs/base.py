@@ -71,6 +71,11 @@ class ModelConfig:
     # is fewer engine steps per token on repetitive/structured output.
     enable_spec_decode: bool = False
     spec_tokens: int = 4             # drafted tokens per verify step (K)
+    # Draft-key order: 2 = trailing bigram (hist[pos-1], cur); 3 = trailing
+    # trigram, falling back to the bigram match when the trigram has no
+    # earlier occurrence (sharper drafts on structured output, same greedy
+    # tokens either way — verification restores exactness).
+    spec_ngram: int = 2
     # Batch-adaptive decode tuning (the BENCH_serve batch-32 droop):
     # split-KV fills cores that idle when the decode batch is narrow, so the
     # split count is chosen as ~decode_split_budget / slot_width, where

@@ -389,3 +389,43 @@ def make_dataset_role(engine: PolicyEngine, dataset: str,
                 trusted_assumers={"task-executor"})
     engine.register_role(role)
     return role
+
+
+def make_serving_role(engine: PolicyEngine, tenant: str,
+                      models: Iterable[str] = ("serve",),
+                      data_zones: Iterable[str] = ()) -> Role:
+    """Per-tenant serving-gateway role: ``kotta-serve-<tenant>``.
+
+    Grants ``serve:Generate`` on the named model resources and ``data:Get``
+    on the tenant's data zones (the prompt-context datasets the gateway
+    checks at submit). Principals without this role are denied at the
+    gateway — default-deny, with the deny audit-logged — and the gateway
+    additionally namespaces the KV prefix cache by (tenant principal,
+    data-zone), so authorization and cache isolation share one boundary.
+    """
+    policies = [allow(["serve:Generate"], [f"model/{m}" for m in models])]
+    zones = tuple(data_zones)
+    if zones:
+        policies.append(allow(["data:Get"],
+                              [f"dataset/{z}/*" for z in zones]))
+    role = Role(f"kotta-serve-{tenant}", policies=policies)
+    engine.register_role(role)
+    return role
+
+
+def provision_tenant(engine: PolicyEngine, tenant: str, secret: str,
+                     models: Iterable[str] = ("serve",),
+                     data_zones: Iterable[str] = ()) -> SessionToken:
+    """Register a serving tenant end to end and return a live session.
+
+    One call covers the identity + role + binding + login dance the
+    gateway's launcher, benchmark and tests all need: the principal is
+    registered with ``secret``, granted a fresh ``kotta-serve-<tenant>``
+    role (see :func:`make_serving_role`), and logged in.
+    """
+    principal = Principal(tenant)
+    engine.authenticator.register_identity(principal, secret)
+    role = make_serving_role(engine, tenant, models=models,
+                             data_zones=data_zones)
+    engine.bind(principal, role.name)
+    return engine.login(tenant, secret)

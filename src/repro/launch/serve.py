@@ -6,6 +6,27 @@
 shared paged KV cache with continuous batching; ``--engine static`` uses the
 legacy padded-batch engine (and is the only choice for recurrent-state
 families, whose per-slot states are dense).
+
+Gateway mode
+------------
+``--gateway`` routes every request through the :class:`KottaServeGateway`
+instead of calling the engine directly — each prompt becomes a secured,
+scheduled Kotta job:
+
+- ``--tenants N`` registers N tenant principals (``tenant0..``), each with
+  its own ``kotta-serve-*`` role; requests round-robin across them and the
+  KV prefix cache is namespaced per (tenant, data-zone), so identical
+  prompts from different tenants never share cached pages. Every
+  authorize/deny lands in the audit log (a summary is printed).
+- ``--deadline-s S`` gives each request a deadline; admission is
+  earliest-deadline-first within priority class, and requests that cannot
+  meet their deadline at current occupancy are shed with a typed rejection
+  (reported, not hung).
+- ``--replicas R`` sizes a static on-demand replica fleet (elastic spot
+  autoscaling is exercised in ``benchmarks/gateway_bench.py``).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --gateway \\
+        --tenants 2 --deadline-s 120 --batch 6
 """
 import argparse
 
@@ -15,6 +36,49 @@ from repro.configs import ARCH_NAMES, get_reduced_config
 from repro.models import get_family
 from repro.models.params import init_params
 from repro.serve import ContinuousBatchingEngine, ServeEngine
+
+
+def _demo_prompts(cfg, batch: int) -> list[list[int]]:
+    rng = jax.random.PRNGKey(1)
+    return [[int(t) for t in jax.random.randint(
+        jax.random.fold_in(rng, i), (3 + i % 4,), 0, cfg.vocab_size)]
+        for i in range(batch)]
+
+
+def _run_gateway(cfg, params, args) -> None:
+    from repro.core.elastic import ScalingPolicy
+    from repro.core.security import PolicyEngine, provision_tenant
+    from repro.core.clock import VirtualClock
+    from repro.serve import JobState, KottaServeGateway
+
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = [provision_tenant(sec, f"tenant{i}", f"pw-tenant{i}",
+                               data_zones=("public",))
+              for i in range(args.tenants)]
+
+    gw = KottaServeGateway(
+        lambda: ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
+                                         enable_spec_decode=args.spec),
+        sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"))
+    prompts = _demo_prompts(cfg, args.batch)
+    rids = [gw.submit(tokens[i % len(tokens)], p, max_new=args.max_new,
+                      deadline_s=args.deadline_s, data_zone="public")
+            for i, p in enumerate(prompts)]
+    gw.drain()
+    print(f"engine: gateway ({args.replicas} static replica(s), "
+          f"{args.tenants} tenant(s))")
+    for i, (p, rid) in enumerate(zip(prompts, rids)):
+        job = gw.jobs[rid]
+        if job.status is JobState.DONE:
+            print(f"[{job.tenant}] {p} -> {job.tokens}")
+        else:
+            print(f"[{job.tenant}] {p} -> SHED ({job.error.reason}: "
+                  f"{job.error})")
+    m = gw.metrics()
+    audit = sec.audit
+    print(f"deadline hit rate {m['deadline_hit_rate']:.2f}   shed "
+          f"{m['shed']}   audit: {len(audit.records(decision='allow'))} "
+          f"allows / {len(audit.records(decision='deny'))} denies")
 
 
 def main() -> None:
@@ -29,6 +93,17 @@ def main() -> None:
                     help="self-speculative decode (n-gram drafts verified "
                          "in one multi-query paged pass; greedy outputs "
                          "are unchanged)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the KottaServeGateway: per-tenant "
+                         "authorization + audit, tenant-scoped prefix "
+                         "cache, deadline/cost-aware admission")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="gateway: tenant principals to register")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="gateway: per-request deadline (EDF admission; "
+                         "infeasible requests are shed, typed)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="gateway: static on-demand replica count")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -37,6 +112,14 @@ def main() -> None:
     fam = get_family(cfg)
     params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
+    if args.gateway:
+        if not hasattr(fam, "decode_paged"):
+            raise SystemExit("--gateway requires a paged-decode family")
+        if args.tenants < 1 or args.replicas < 1:
+            raise SystemExit("--gateway needs --tenants >= 1 and "
+                             "--replicas >= 1")
+        _run_gateway(cfg, params, args)
+        return
     engine_kind = args.engine
     if engine_kind == "auto":
         engine_kind = ("continuous" if hasattr(fam, "decode_paged")
@@ -48,10 +131,7 @@ def main() -> None:
         raise SystemExit("--spec requires the continuous engine")
     else:
         engine = ServeEngine(cfg, params, max_len=args.max_len)
-    rng = jax.random.PRNGKey(1)
-    prompts = [[int(t) for t in jax.random.randint(
-        jax.random.fold_in(rng, i), (3 + i % 4,), 0, cfg.vocab_size)]
-        for i in range(args.batch)]
+    prompts = _demo_prompts(cfg, args.batch)
     out = engine.generate(prompts, max_new=args.max_new)
     print(f"engine: {engine_kind}")
     for p, toks in zip(prompts, out.tokens.tolist()):

@@ -1,5 +1,13 @@
-from .engine import ContinuousBatchingEngine, ServeEngine, ServeResult
+from .admission import (AdmissionError, AdmissionPolicy, CostBudgetExceeded,
+                        DeadlineCostPolicy, DeadlineInfeasible, FCFSPolicy,
+                        JobState, ServeJob, ServiceModel)
+from .engine import (ContinuousBatchingEngine, EngineRequest, ServeEngine,
+                     ServeResult)
+from .gateway import KottaServeGateway
 from .paging import PageAllocator, PrefixCache
 
-__all__ = ["ServeEngine", "ContinuousBatchingEngine", "ServeResult",
-           "PageAllocator", "PrefixCache"]
+__all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
+           "ServeResult", "PageAllocator", "PrefixCache",
+           "KottaServeGateway", "ServeJob", "JobState", "ServiceModel",
+           "AdmissionPolicy", "FCFSPolicy", "DeadlineCostPolicy",
+           "AdmissionError", "DeadlineInfeasible", "CostBudgetExceeded"]

@@ -1,0 +1,195 @@
+"""Deadline/cost-aware admission for the Kotta serving gateway.
+
+Cloud Kotta's control plane never runs work "because it arrived": every task
+goes through a queue whose consumers are provisioned against explicit cost
+and urgency signals (dev vs prod queues, §IV-D; elastic provisioning against
+queue depth, §IV-C; the Table VII-C cost/makespan trade). This module is the
+serving-side analogue for generation requests:
+
+- An :class:`AdmissionPolicy` keeps the gateway's pending queue **ordered**
+  — :class:`DeadlineCostPolicy` runs earliest-deadline-first *within* a
+  priority class (interactive before batch, the companion paper's
+  interactive-analytics requirement), FCFS breaking ties.
+- The same policy **sheds** requests that cannot meet their deadline at
+  current occupancy: a slot-horizon feasibility walk (who frees a decode
+  slot when, with the queue ahead of you) estimates each request's finish
+  time, and an infeasible request surfaces a **typed rejection**
+  (:class:`DeadlineInfeasible`) instead of hanging in the queue.
+- Requests carrying a ``cost_budget`` are priced with the instance rates in
+  :mod:`repro.core.cost` before they occupy capacity; a request whose
+  estimated serving cost exceeds its budget is rejected with
+  :class:`CostBudgetExceeded`.
+
+Requests that a replica already accepted and then lost to spot revocation
+are re-enqueued with ``requeued=True`` and are exempt from shedding —
+Kotta's queue-watcher semantics: accepted work is completed, whatever the
+market does (§IV-D resubmission).
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class AdmissionError(Exception):
+    """Typed admission rejection — shed requests fail fast, never hang."""
+
+    reason = "rejected"
+
+
+class DeadlineInfeasible(AdmissionError):
+    """At current occupancy the request cannot finish by its deadline."""
+
+    reason = "deadline_infeasible"
+
+
+class CostBudgetExceeded(AdmissionError):
+    """Estimated serving cost exceeds the request's cost budget."""
+
+    reason = "cost_budget_exceeded"
+
+
+class JobState(str, enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    SHED = "shed"
+
+
+@dataclass
+class ServeJob:
+    """A generation request as a first-class Kotta job.
+
+    ``deadline`` and timestamps are absolute gateway-clock seconds;
+    ``priority`` is the class (lower = more urgent; 0 = interactive) and EDF
+    runs *within* a class. ``namespace`` is the tenant-scoped prefix-cache
+    key (tenant principal, data zone). ``requeued`` marks a job that lost
+    its replica to spot revocation: it skips shed checks on readmission.
+    """
+
+    rid: int
+    tenant: str
+    prompt: list[int]
+    max_new: int
+    submitted_at: float
+    deadline: Optional[float] = None
+    priority: int = 1
+    cost_budget: Optional[float] = None
+    namespace: object = None
+    status: JobState = JobState.QUEUED
+    tokens: Optional[list[int]] = None
+    finished_at: Optional[float] = None
+    error: Optional[AdmissionError] = None
+    requeued: bool = False
+    replica: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ServiceModel:
+    """Simulated replica service rates (virtual-clock seconds).
+
+    The gateway runs on a :class:`repro.core.clock.VirtualClock`: decode
+    wall time is modelled, not measured, so cost/deadline accounting is
+    deterministic across hosts (the same move as the Table VII-C DES).
+    Prefill is charged per *fresh* token — prompt tokens served from the
+    tenant's prefix cache are free, so cache locality shows up in deadline
+    headroom exactly like Kotta's data-local placement shows up in job
+    turnaround.
+    """
+
+    prefill_tok_per_s: float = 4096.0
+    decode_step_s: float = 0.05      # one lockstep token row across slots
+
+    def prefill_s(self, n_tokens: int) -> float:
+        return n_tokens / self.prefill_tok_per_s
+
+    def service_s(self, prompt_len: int, max_new: int) -> float:
+        return self.prefill_s(prompt_len) + max_new * self.decode_step_s
+
+
+class AdmissionPolicy:
+    """FCFS baseline: submit order, no shedding (the pre-gateway engine)."""
+
+    name = "fcfs"
+
+    def order(self, jobs: list[ServeJob], now: float) -> list[ServeJob]:
+        return sorted(jobs, key=lambda j: (j.submitted_at, j.rid))
+
+    def plan(self, jobs: list[ServeJob], slot_free_s: list[float],
+             now: float, price_per_slot_hour: float,
+             ) -> tuple[list[ServeJob], list[tuple[ServeJob,
+                                                   AdmissionError]]]:
+        """Return (keep_ordered, shed) — FCFS keeps everything."""
+        return self.order(jobs, now), []
+
+
+FCFSPolicy = AdmissionPolicy
+
+
+@dataclass
+class DeadlineCostPolicy(AdmissionPolicy):
+    """EDF within priority class + slot-horizon shedding + budget pricing.
+
+    ``slot_free_s`` is the gateway's capacity horizon: one entry per decode
+    slot across live and provisioning replicas, holding the absolute time
+    that slot next frees (now, for an idle slot; the replica's ready time,
+    for a provisioning one). The plan walks the ordered queue assigning
+    each job the earliest slot — exactly the EDF feasibility test — and
+    sheds jobs whose estimated finish overruns their deadline. Shedding is
+    re-evaluated every round, so a job that was feasible when queued is
+    still shed the moment a burst ahead of it makes the deadline hopeless
+    (and capacity is spent on requests that can still win).
+    """
+
+    model: ServiceModel = field(default_factory=ServiceModel)
+    name = "edf_cost"
+
+    def order(self, jobs: list[ServeJob], now: float) -> list[ServeJob]:
+        return sorted(jobs, key=lambda j: (
+            j.priority,
+            j.deadline if j.deadline is not None else math.inf,
+            j.submitted_at, j.rid))
+
+    def plan(self, jobs, slot_free_s, now, price_per_slot_hour):
+        ordered = self.order(jobs, now)
+        keep: list[ServeJob] = []
+        shed: list[tuple[ServeJob, AdmissionError]] = []
+        horizon = list(slot_free_s)
+        heapq.heapify(horizon)
+        for job in ordered:
+            svc = self.model.service_s(len(job.prompt), job.max_new)
+            if not job.requeued and job.cost_budget is not None:
+                est_cost = svc / 3600.0 * price_per_slot_hour
+                if est_cost > job.cost_budget:
+                    shed.append((job, CostBudgetExceeded(
+                        f"job {job.rid}: estimated ${est_cost:.4f} over "
+                        f"budget ${job.cost_budget:.4f} "
+                        f"({svc:.1f}s at ${price_per_slot_hour:.3f}/slot-h)"
+                    )))
+                    continue
+            if horizon:
+                slot_t = heapq.heappop(horizon)
+                start = max(slot_t, now)
+            else:
+                # No capacity exists yet (all replicas still provisioning
+                # and none announced): be optimistic — the provisioner
+                # launches against queue depth — but still shed a job whose
+                # deadline is hopeless even with an instant start.
+                slot_t, start = None, now
+            finish = start + svc
+            if (not job.requeued and job.deadline is not None
+                    and finish > job.deadline):
+                shed.append((job, DeadlineInfeasible(
+                    f"job {job.rid}: estimated finish t={finish:.1f}s "
+                    f"misses deadline t={job.deadline:.1f}s at current "
+                    f"occupancy")))
+                if slot_t is not None:      # slot not consumed: hand it back
+                    heapq.heappush(horizon, slot_t)
+                continue
+            keep.append(job)
+            if slot_t is not None:
+                heapq.heappush(horizon, finish)
+        return keep, shed

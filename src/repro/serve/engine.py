@@ -52,6 +52,14 @@ Physical page 0 is reserved as a write sink: idle slots keep ``pos=0`` and an
 all-zero page-table row, and prefill pads route their KV writes there, so
 masked writes can never corrupt pages belonging to live requests.
 
+Beyond the one-shot ``generate`` loop the engine exposes a **stepped API**
+(``enqueue`` / ``admit`` / ``decode_step`` / ``abort``) so an external
+control plane can drive it request-by-request: the Kotta serving gateway
+(:mod:`repro.serve.gateway`) keeps the queue deadline/cost-ordered, scopes
+each request's prefix-cache ``namespace`` by (tenant, data-zone), and
+re-enqueues a revoked spot replica's requests through ``abort`` — turning
+every generation request into a first-class secured, scheduled Kotta job.
+
 ``ServeEngine`` (static batch, dense cache) is kept as the fallback path for
 recurrent-state families and as the benchmark baseline;
 ``prefill_mode="dense"`` keeps the PR-1 bucketed dense-prefill admission
@@ -61,6 +69,7 @@ from __future__ import annotations
 
 import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -136,11 +145,26 @@ class ServeEngine:
 # ---------------------------------------------------------------------------
 
 @dataclass
+class EngineRequest:
+    """One generation request as the engine's queue sees it.
+
+    ``rid`` is an opaque caller-chosen id (``generate`` uses the prompt
+    index; the gateway uses its job ids). ``max_new`` is per-request — the
+    stepped API admits requests with heterogeneous budgets in one wave.
+    ``namespace`` scopes the prefix cache: pages registered under one
+    namespace are invisible to lookups from another (the gateway keys it by
+    (tenant, data-zone), so cross-tenant prompts can never alias KV pages).
+    """
+    rid: object
+    prompt: list[int]
+    max_new: int
+    namespace: object = None
+
+
+@dataclass
 class _Live:
     """A request occupying a slot."""
-    rid: int
-    prompt_len: int
-    max_new: int
+    req: EngineRequest
     pages: list[int]
     emitted: int = 0
     tokens: list[int] = field(default_factory=list)
@@ -156,8 +180,7 @@ def _next_pow2(n: int) -> int:
 class _Admit:
     """A request accepted into the current admission wave."""
     slot: int
-    rid: int
-    prompt: list[int]
+    req: EngineRequest
     pages: list[int]
     start: int                  # first position to prefill (= prefix match)
     group: int = 1              # intra-wave prefill stage (same-wave dedup)
@@ -173,7 +196,8 @@ class ContinuousBatchingEngine:
                  prefill_mode: str = "paged",
                  enable_prefix_cache: bool | None = None,
                  enable_spec_decode: bool | None = None,
-                 spec_tokens: int | None = None):
+                 spec_tokens: int | None = None,
+                 spec_ngram: int | None = None):
         if cfg.encoder_only:
             raise ValueError("encoder-only models cannot decode")
         if prefill_mode not in ("paged", "dense"):
@@ -183,7 +207,10 @@ class ContinuousBatchingEngine:
         self.params = params
         self.family = get_family(cfg)
         self.page_size = cfg.page_size
-        self.max_slots = max_slots or cfg.max_decode_slots
+        self.max_slots = cfg.max_decode_slots if max_slots is None \
+            else max_slots
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
         self.pages_per_seq = math.ceil(max_len / self.page_size)
         # +1: physical page 0 is the reserved idle-slot/pad write sink.
         self.num_pages = (num_pages or self.max_slots * self.pages_per_seq) + 1
@@ -191,7 +218,36 @@ class ContinuousBatchingEngine:
             enable_spec_decode = cfg.enable_spec_decode
         self.spec_tokens = cfg.spec_tokens if spec_tokens is None \
             else spec_tokens
-        self.spec_decode = bool(enable_spec_decode and self.spec_tokens > 0)
+        self.spec_ngram = cfg.spec_ngram if spec_ngram is None else spec_ngram
+        self.spec_decode = bool(enable_spec_decode)
+        if self.spec_decode:
+            # Fail here, with the knob named, instead of as a shape error
+            # deep inside the verify step / Pallas kernel.
+            k = self.spec_tokens
+            if k < 1:
+                raise ValueError(
+                    f"enable_spec_decode requires spec_tokens >= 1, got {k} "
+                    "(each verify step scores spec_tokens drafts + the "
+                    "current token)")
+            if self.spec_ngram not in (2, 3):
+                raise ValueError(
+                    f"spec_ngram must be 2 (bigram) or 3 (trigram draft "
+                    f"keys), got {self.spec_ngram}")
+            window = k + 1
+            if window > self.pages_per_seq * self.page_size:
+                raise ValueError(
+                    f"spec_tokens+1 = {window} verify rows exceed the "
+                    f"{self.pages_per_seq * self.page_size}-row page-table "
+                    f"window (max_len {max_len}, page_size "
+                    f"{self.page_size}); shrink spec_tokens or raise "
+                    "max_len")
+            group = cfg.num_heads // cfg.num_kv_heads
+            if cfg.attn_impl == "pallas" and (window * group) % 8:
+                raise ValueError(
+                    f"verify query tile (spec_tokens+1)*G = {window}*{group}"
+                    f" = {window * group} rows must be a multiple of 8 "
+                    "sublanes for the Pallas verify kernel; adjust "
+                    "spec_tokens (or num_kv_heads)")
         if decode_chunk is None:
             # Occupancy heuristic (BENCH_serve batch-32 droop): hold
             # slots * chunk * expected-tokens-per-step ≈ decode_chunk_tokens
@@ -210,6 +266,12 @@ class ContinuousBatchingEngine:
                                    // (self.max_slots * per_step)))
         self.decode_chunk = decode_chunk
         self.prefill_chunk = prefill_chunk or cfg.prefill_chunk
+        if self.decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got "
+                             f"{self.decode_chunk}")
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got "
+                             f"{self.prefill_chunk}")
         self.prefill_mode = prefill_mode
 
         shape = self.family.paged_pool_shape(cfg, self.num_pages)
@@ -245,6 +307,10 @@ class ContinuousBatchingEngine:
         self._hist = jnp.zeros((s, self.hist_len), jnp.int32) \
             if self.spec_decode else None
         self._live: dict[int, _Live] = {}
+        # Admission queue, consumed front-first by ``admit``. The caller
+        # controls its order: ``generate`` fills it FCFS, the gateway keeps
+        # it policy-ordered (EDF within priority class).
+        self._queue: deque[EngineRequest] = deque()
         self.stats: dict[str, float] = {}
         self._reset_stats()
 
@@ -301,6 +367,7 @@ class ContinuousBatchingEngine:
             k_spec = self.spec_tokens
             t_spec = k_spec + 1
             hlen = self.hist_len
+            ngram = self.spec_ngram
 
             def spec_chunk_fn(params, cur, pos, hist, page_table, active,
                               budget, limit, pool):
@@ -325,11 +392,12 @@ class ContinuousBatchingEngine:
                     # The verified current token enters the history first:
                     # hist[:pos+1] is now the exact token stream.
                     hist = hist.at[bidx, pos].set(cur)
-                    # -- bigram prompt-lookup drafting (device-side) ------
-                    # Latest earlier occurrence of the trailing bigram
-                    # (hist[pos-1], cur); the K tokens that followed it are
-                    # the draft. A bad (or absent) match only lowers the
-                    # accept rate — verification restores exactness.
+                    # -- n-gram prompt-lookup drafting (device-side) ------
+                    # Latest earlier occurrence of the trailing n-gram
+                    # ending at (.., hist[pos-1], cur); the K tokens that
+                    # followed it are the draft. A bad (or absent) match
+                    # only lowers the accept rate — verification restores
+                    # exactness.
                     prev = hist[bidx, pos - 1]
                     hit = (hist[:, :-1] == prev[:, None]) & \
                           (hist[:, 1:] == cur[:, None])
@@ -339,6 +407,21 @@ class ContinuousBatchingEngine:
                                      j, -1)
                     best = cand.max(axis=1)
                     src = jnp.where(best >= 0, best + 2, pos + 1)
+                    if ngram == 3:
+                        # Trigram keys disambiguate contexts a bigram
+                        # conflates; no trigram occurrence (or pos < 2)
+                        # falls back to the bigram match above, which
+                        # itself degenerates to "repeat cur".
+                        p2 = hist[bidx, jnp.maximum(pos - 2, 0)]
+                        hit3 = (hist[:, :-2] == p2[:, None]) & \
+                               (hist[:, 1:-1] == prev[:, None]) & \
+                               (hist[:, 2:] == cur[:, None])
+                        j3 = jnp.arange(hlen - 2)
+                        cand3 = jnp.where(
+                            hit3 & ((j3 + 2)[None, :] < pos[:, None])
+                            & (pos[:, None] >= 2), j3, -1)
+                        best3 = cand3.max(axis=1)
+                        src = jnp.where(best3 >= 0, best3 + 3, src)
                     # A recent match reaches past the known history (e.g. a
                     # period-1 token run matches at pos-2): extrapolate it
                     # periodically by wrapping indices beyond pos back by
@@ -439,13 +522,19 @@ class ContinuousBatchingEngine:
             jnp.asarray(pages, jnp.int32))
 
     # -- admission -----------------------------------------------------------
-    def _admit_wave(self, pending: list, max_new: int) -> int:
-        """Admit queued requests FCFS while slots and pages last.
+    def _admit_wave(self) -> int:
+        """Admit requests from the queue, front-first, while slots and pages
+        last.
 
-        Each accepted request first consults the prefix cache: fully matched
-        pages are aliased into its page-table row (refcount++), a partially
-        matched boundary page is copy-on-written, and only the remaining
-        suffix is prefilled — chunk by chunk, batched across the wave.
+        The queue's order IS the admission policy: ``generate`` keeps it
+        FCFS, the serving gateway keeps it deadline/cost-ordered
+        (:mod:`repro.serve.admission`) — ``_admit_wave`` just consumes it.
+
+        Each accepted request first consults the prefix cache (within the
+        request's namespace): fully matched pages are aliased into its
+        page-table row (refcount++), a partially matched boundary page is
+        copy-on-written, and only the remaining suffix is prefilled — chunk
+        by chunk, batched across the wave.
 
         **Same-wave dedup:** a request's pages are registered in the radix
         index the moment it is accepted, so a later request in the SAME
@@ -462,16 +551,17 @@ class ContinuousBatchingEngine:
         wave: list[_Admit] = []
         cow_pairs: dict[int, list[tuple[int, int]]] = {}   # group -> pairs
         page_group: dict[int, int] = {}    # page -> group whose prefill fills it
-        while pending:
-            rid, prompt = pending[-1]
+        while self._queue:
+            req = self._queue[0]
+            prompt = req.prompt
             plen = len(prompt)
             free_slots = [i for i in range(self.max_slots)
                           if not self._active[i]]
             if not free_slots:
                 break
-            need_total = math.ceil((plen + max_new) / ps)  # checked upstream
-            if self.prefix_cache is not None:
-                chain, raw = self.prefix_cache.lookup(prompt)
+            need_total = math.ceil((plen + req.max_new) / ps)  # checked at
+            if self.prefix_cache is not None:                  # enqueue
+                chain, raw = self.prefix_cache.lookup(prompt, req.namespace)
                 # Always recompute at least the last prompt token: its logits
                 # seed decode, and capping also keeps a fully-cached prompt
                 # from needing zero prefill steps.
@@ -517,12 +607,12 @@ class ContinuousBatchingEngine:
             self._page_table[slot] = row
             self.stats["cached_tokens"] += match
             self.stats["prefill_tokens"] += plen - match
-            wave.append(_Admit(slot, rid, list(prompt), pages, match, group))
+            wave.append(_Admit(slot, req, pages, match, group))
             if self.prefix_cache is not None:
                 # Publish now so the rest of this wave can alias; the grouped
                 # prefill below guarantees the content lands first.
-                self.prefix_cache.register(prompt, pages)
-            pending.pop()
+                self.prefix_cache.register(prompt, pages, req.namespace)
+            self._queue.popleft()
 
         if wave:
             for g in sorted({a.group for a in wave}):
@@ -533,10 +623,9 @@ class ContinuousBatchingEngine:
                 else:
                     self._prefill_paged_wave(members)
             for a in wave:
-                self._live[a.slot] = _Live(a.rid, len(a.prompt), max_new,
-                                           a.pages)
+                self._live[a.slot] = _Live(a.req, a.pages)
             if self.spec_decode:
-                self._load_histories(wave, max_new)
+                self._load_histories(wave)
             self.stats["admitted"] += len(wave)
         self.stats["admit_seconds"] += time.perf_counter() - t0
         return len(wave)
@@ -557,14 +646,14 @@ class ContinuousBatchingEngine:
         for s_, _ in cow_pairs:
             self.alloc.release(s_)              # pin no longer needed
 
-    def _load_histories(self, wave: list[_Admit], max_new: int) -> None:
+    def _load_histories(self, wave: list[_Admit]) -> None:
         """Seed the on-device drafting history + write limit for new slots."""
         rows = np.zeros((len(wave), self.hist_len), np.int32)
         slots = np.zeros(len(wave), np.int32)
         for i, a in enumerate(wave):
-            rows[i, :len(a.prompt)] = a.prompt
+            rows[i, :len(a.req.prompt)] = a.req.prompt
             slots[i] = a.slot
-            self._limit[a.slot] = len(a.prompt) + max_new
+            self._limit[a.slot] = len(a.req.prompt) + a.req.max_new
         self._hist = self._hist.at[jnp.asarray(slots)].set(jnp.asarray(rows))
 
     # -- paged chunked prefill (default admission path) ----------------------
@@ -582,7 +671,8 @@ class ContinuousBatchingEngine:
         for i, a in enumerate(wave):
             page_tables[i] = self._page_table[a.slot]
         pt_dev = jnp.asarray(page_tables)
-        nsteps = max(math.ceil((len(a.prompt) - a.start) / c) for a in wave)
+        nsteps = max(math.ceil((len(a.req.prompt) - a.start) / c)
+                     for a in wave)
 
         step_toks = []
         for j in range(nsteps):
@@ -591,11 +681,12 @@ class ContinuousBatchingEngine:
             kl = np.zeros(gp, np.int32)
             li = np.zeros(gp, np.int32)
             for i, a in enumerate(wave):
+                plen = len(a.req.prompt)
                 s0 = a.start + j * c
                 qs[i] = s0
-                kl[i] = len(a.prompt)
-                li[i] = len(a.prompt) - 1 - s0        # clamped in the step
-                seg = a.prompt[s0:s0 + c]
+                kl[i] = plen
+                li[i] = plen - 1 - s0                 # clamped in the step
+                seg = a.req.prompt[s0:s0 + c]
                 if seg:
                     toks[i, :len(seg)] = seg
             batch = {"tokens": jnp.asarray(toks), "q_start": jnp.asarray(qs),
@@ -609,11 +700,11 @@ class ContinuousBatchingEngine:
         # position plen-1; sync each needed step array once.
         host: dict[int, np.ndarray] = {}
         for i, a in enumerate(wave):
-            j = (len(a.prompt) - 1 - a.start) // c
+            j = (len(a.req.prompt) - 1 - a.start) // c
             if j not in host:
                 host[j] = np.asarray(step_toks[j])
             self._cur[a.slot] = host[j][i]
-            self._pos[a.slot] = len(a.prompt)
+            self._pos[a.slot] = len(a.req.prompt)
 
     # -- dense ragged prefill (PR-1 baseline, kept as in-engine oracle) ------
     def _prefill_dense(self, wave: list[_Admit]) -> None:
@@ -621,7 +712,7 @@ class ContinuousBatchingEngine:
         ps = self.page_size
         by_pad: dict[int, list[_Admit]] = {}
         for a in wave:
-            s_pad = math.ceil(len(a.prompt) / ps) * ps
+            s_pad = math.ceil(len(a.req.prompt) / ps) * ps
             by_pad.setdefault(s_pad, []).append(a)
 
         for s_pad, items in by_pad.items():
@@ -630,8 +721,8 @@ class ContinuousBatchingEngine:
             toks = np.zeros((g, s_pad), np.int32)
             lens = np.zeros(g, np.int32)
             for i, a in enumerate(items):
-                toks[i, :len(a.prompt)] = a.prompt
-                lens[i] = len(a.prompt)
+                toks[i, :len(a.req.prompt)] = a.req.prompt
+                lens[i] = len(a.req.prompt)
             batch = {"tokens": jnp.asarray(toks),
                      "length": jnp.asarray(lens)}
             logits, cache = self._prefill_ragged(self.params, batch)
@@ -640,7 +731,7 @@ class ContinuousBatchingEngine:
             self._write_pages(cache["k"], cache["v"], prompt_pages)
             first = np.array(jnp.argmax(logits, axis=-1), np.int32)  # 1 sync
             for i, a in enumerate(items):
-                self._pos[a.slot] = len(a.prompt)
+                self._pos[a.slot] = len(a.req.prompt)
                 self._cur[a.slot] = first[i]
 
     def _retire(self, slot: int) -> _Live:
@@ -667,92 +758,162 @@ class ContinuousBatchingEngine:
                 f"refcount drift on pages {bad.tolist()}: "
                 f"rows={counts[bad].tolist()} refs={self.alloc.refs[bad].tolist()}")
 
+    # -- stepped serving API (the gateway drives these) ----------------------
+    def _validate_request(self, req: EngineRequest) -> None:
+        """Reject requests that can never run — before reserving anything."""
+        p = req.prompt
+        max_len = self.pages_per_seq * self.page_size
+        pool_cap = self.num_pages - 1
+        if not p:
+            raise ValueError(f"request {req.rid}: empty prompt (nothing to "
+                             "prefill)")
+        if len(p) + req.max_new > max_len:
+            raise ValueError(f"request {req.rid}: {len(p)}+{req.max_new} "
+                             f"tokens exceed max_len {max_len}")
+        need = math.ceil((len(p) + req.max_new) / self.page_size)
+        if need > pool_cap:
+            raise ValueError(
+                f"request {req.rid}: needs {need} pages for "
+                f"{len(p)}+{req.max_new} tokens but the pool only holds "
+                f"{pool_cap}; raise num_pages or shorten the request")
+
+    def enqueue(self, req: EngineRequest) -> None:
+        """Append a validated request to the admission queue."""
+        self._validate_request(req)
+        self._queue.append(req)
+
+    def admit(self) -> int:
+        """Run one admission wave off the queue; returns requests admitted."""
+        return self._admit_wave()
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def live(self) -> int:
+        return len(self._live)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._live)
+
+    @property
+    def open_slots(self) -> int:
+        """Slots not yet claimed by a live or queued request (the gateway
+        dispatches new work only while this is positive, keeping the
+        per-replica queue shallow so EDF reordering stays effective)."""
+        return self.max_slots - len(self._live) - len(self._queue)
+
+    def remaining_tokens(self) -> list[int]:
+        """Per live slot, tokens still to emit — scheduling estimates."""
+        return [l.req.max_new - l.emitted for l in self._live.values()]
+
+    def abort(self) -> list[EngineRequest]:
+        """Drop all live and queued requests and return them for re-enqueue.
+
+        The spot-revocation path: a revoked replica's requests restart from
+        scratch on another replica (greedy decode is deterministic, so the
+        retry emits identical tokens). Pages are released through the normal
+        retire path — refcounts stay exact and cached prefixes survive until
+        reallocated.
+        """
+        dropped = [self._live[s].req for s in sorted(self._live)]
+        for slot in list(self._live):
+            self._retire(slot)
+        dropped.extend(self._queue)
+        self._queue.clear()
+        return dropped
+
+    def decode_step(self, on_chunk=None) -> list[tuple[EngineRequest,
+                                                       list[int]]]:
+        """Run ONE on-device decode chunk; returns requests that finished.
+
+        ``on_chunk(steps, seconds)`` (optional) observes the chunk.
+        ``steps`` is the chunk's *device* trip count — always
+        ``decode_chunk`` — so ``seconds / steps`` is the inter-token
+        latency. It is NOT a count of usable tokens: a slot whose
+        ``max_new`` budget ends mid-chunk idles (masked against the sink
+        page) for the remaining steps. Under speculative decode one step
+        emits 1..spec_tokens+1 tokens per slot, so ``seconds / steps`` is
+        per-VERIFY-step latency there.
+        """
+        if not self._live:
+            return []
+        budget = np.zeros(self.max_slots, np.int32)
+        for slot, live in self._live.items():
+            budget[slot] = live.req.max_new - live.emitted
+        t0 = time.perf_counter()
+        if self.spec_decode:
+            cur, pos, self._hist, n_out, n_it, self.pool, out = \
+                self._chunk_spec(
+                    self.params, jnp.asarray(self._cur),
+                    jnp.asarray(self._pos), self._hist,
+                    jnp.asarray(self._page_table),
+                    jnp.asarray(self._active), jnp.asarray(budget),
+                    jnp.asarray(self._limit), self.pool)
+            n_out_host = np.asarray(n_out)
+            self.stats["spec_steps"] += int(np.asarray(n_it).sum())
+        else:
+            cur, pos, self.pool, out = self._chunk(
+                self.params, jnp.asarray(self._cur),
+                jnp.asarray(self._pos), jnp.asarray(self._page_table),
+                jnp.asarray(self._active), jnp.asarray(budget), self.pool)
+            n_out_host = None              # every live slot emits the chunk
+        out_host = np.asarray(out)                      # one sync per chunk
+        if on_chunk is not None:
+            on_chunk(self.decode_chunk, time.perf_counter() - t0)
+        self._cur = np.array(cur)          # np.array: writable host copies
+        self._pos = np.array(pos)
+        finished: list[tuple[EngineRequest, list[int]]] = []
+        for slot in list(self._live):
+            live = self._live[slot]
+            ntok = self.decode_chunk if n_out_host is None \
+                else int(n_out_host[slot])
+            if n_out_host is not None:
+                # Count only delivered tokens: the final verify step can
+                # overshoot the budget and its truncated tail must not
+                # inflate mean_accepted_len.
+                self.stats["spec_emitted"] += min(
+                    ntok, live.req.max_new - live.emitted)
+            live.tokens.extend(out_host[slot, :ntok].tolist())
+            live.emitted += ntok
+            if live.emitted >= live.req.max_new:
+                finished.append((live.req, live.tokens[:live.req.max_new]))
+                self._retire(slot)
+        return finished
+
     # -- the serving loop ----------------------------------------------------
     def generate(self, prompts: list[list[int]], max_new: int = 16,
                  on_chunk=None) -> ServeResult:
         """Greedy-decode ``max_new`` tokens for every prompt, FCFS admission.
 
-        ``on_chunk(steps, seconds)`` (optional) observes each decode chunk.
-        ``steps`` is the chunk's *device* trip count — always
-        ``decode_chunk`` — so ``seconds / steps`` is the inter-token
-        latency. It is NOT a count of usable tokens: a slot whose
-        ``max_new`` budget ends mid-chunk idles (masked against the sink
-        page) for the remaining steps, so sum emitted tokens from the
-        returned ``ServeResult``, never from ``steps``. Under speculative
-        decode one step emits 1..spec_tokens+1 tokens per slot, so
-        ``seconds / steps`` is per-VERIFY-step latency there.
+        A convenience loop over the stepped API (enqueue / admit /
+        decode_step); see :meth:`decode_step` for ``on_chunk`` semantics.
         """
         if not prompts:
             return ServeResult(np.zeros((0, max_new), np.int32), [])
-        max_len = self.pages_per_seq * self.page_size
-        pool_cap = self.num_pages - 1
-        for rid, p in enumerate(prompts):     # validate before reserving
-            if not p:
-                raise ValueError(f"request {rid}: empty prompt (nothing to "
-                                 "prefill)")
-            if len(p) + max_new > max_len:
-                raise ValueError(f"request {rid}: {len(p)}+{max_new} tokens "
-                                 f"exceed max_len {max_len}")
-            need = math.ceil((len(p) + max_new) / self.page_size)
-            if need > pool_cap:
-                raise ValueError(
-                    f"request {rid}: needs {need} pages for "
-                    f"{len(p)}+{max_new} tokens but the pool only holds "
-                    f"{pool_cap}; raise num_pages or shorten the request")
+        if self.has_work:
+            raise RuntimeError("generate() on a busy engine: drain or abort "
+                               "the stepped API first")
+        reqs = [EngineRequest(rid, list(p), max_new)
+                for rid, p in enumerate(prompts)]
+        for r in reqs:                        # validate before reserving
+            self._validate_request(r)
         self._reset_stats()
-        pending = list(enumerate(prompts))[::-1]        # FCFS from the end
-        done: dict[int, list[int]] = {}
-        self._admit_wave(pending, max_new)
-        if pending and not self._live:
+        self._queue.extend(reqs)
+        done: dict[object, list[int]] = {}
+        self._admit_wave()
+        if self._queue and not self._live:
             raise RuntimeError("admission stalled: request needs more pages "
                                "than the pool holds free")
-
         while self._live:
-            budget = np.zeros(self.max_slots, np.int32)
-            for slot, live in self._live.items():
-                budget[slot] = live.max_new - live.emitted
-            t0 = time.perf_counter()
-            if self.spec_decode:
-                cur, pos, self._hist, n_out, n_it, self.pool, out = \
-                    self._chunk_spec(
-                        self.params, jnp.asarray(self._cur),
-                        jnp.asarray(self._pos), self._hist,
-                        jnp.asarray(self._page_table),
-                        jnp.asarray(self._active), jnp.asarray(budget),
-                        jnp.asarray(self._limit), self.pool)
-                n_out_host = np.asarray(n_out)
-                self.stats["spec_steps"] += int(np.asarray(n_it).sum())
-            else:
-                cur, pos, self.pool, out = self._chunk(
-                    self.params, jnp.asarray(self._cur),
-                    jnp.asarray(self._pos), jnp.asarray(self._page_table),
-                    jnp.asarray(self._active), jnp.asarray(budget), self.pool)
-                n_out_host = None          # every live slot emits the chunk
-            out_host = np.asarray(out)                  # one sync per chunk
-            if on_chunk is not None:
-                on_chunk(self.decode_chunk, time.perf_counter() - t0)
-            self._cur = np.array(cur)      # np.array: writable host copies
-            self._pos = np.array(pos)
-            for slot in list(self._live):
-                live = self._live[slot]
-                ntok = self.decode_chunk if n_out_host is None \
-                    else int(n_out_host[slot])
-                if n_out_host is not None:
-                    # Count only delivered tokens: the final verify step can
-                    # overshoot the budget and its truncated tail must not
-                    # inflate mean_accepted_len.
-                    self.stats["spec_emitted"] += min(
-                        ntok, live.max_new - live.emitted)
-                live.tokens.extend(out_host[slot, :ntok].tolist())
-                live.emitted += ntok
-                if live.emitted >= live.max_new:
-                    done[live.rid] = live.tokens[:live.max_new]
-                    self._retire(slot)
-            self._admit_wave(pending, max_new)
-            if pending and not self._live:
+            for req, toks in self.decode_step(on_chunk=on_chunk):
+                done[req.rid] = toks
+            self._admit_wave()
+            if self._queue and not self._live:
                 raise RuntimeError("admission stalled: request needs more "
                                    "pages than the pool holds free")
-
         tokens = np.stack([np.asarray(done[i], np.int32)
                            for i in range(len(prompts))])
         return ServeResult(tokens, [len(p) for p in prompts])

@@ -1,0 +1,447 @@
+"""Kotta serving gateway: every generation request is a Kotta job.
+
+Cloud Kotta's core contribution is the control plane around the executor —
+fine-grained security over shared data (§VI), queue-driven elastic
+provisioning that cuts cost up to 16x (§IV-C, Table VII-C), and execution
+placed where the economics say (§VII-E). :class:`KottaServeGateway` wraps
+those three planes around one or more :class:`ContinuousBatchingEngine`
+replicas, so serve traffic gets exactly what batch analytics got:
+
+- **Security** (§VI): ``submit`` takes a short-term :class:`SessionToken`
+  and authorizes ``serve:Generate`` on the model resource (plus ``data:Get``
+  on the request's data zone) through :class:`PolicyEngine` — default-deny,
+  every allow/deny appended to the immutable audit log. The engine's radix
+  prefix cache is **tenant-scoped**: each request's page-granular prefix
+  keys are namespaced by (tenant, data-zone), so one tenant's cached KV
+  pages can never be aliased into another tenant's request, while requests
+  inside a tenant still share copy-on-write.
+- **Scheduling** (§IV-D): admission is a pluggable policy
+  (:mod:`repro.serve.admission`). The default
+  :class:`~repro.serve.admission.DeadlineCostPolicy` keeps the pending
+  queue EDF-ordered within priority classes, sheds requests that cannot
+  meet their deadline at current occupancy (typed rejection, never a
+  hang), and prices requests against their cost budget with
+  :mod:`repro.core.cost` instance rates. The engine's ``_admit_wave``
+  consumes this policy-ordered queue verbatim.
+- **Elasticity** (§IV-C): replica count follows queue depth through
+  :class:`repro.core.elastic.Provisioner`; spot replicas bid into
+  :class:`repro.core.market.SpotMarket` and can be **revoked mid-decode**
+  — the gateway aborts the engine (the normal retire path: refcounts stay
+  exact, cached prefixes survive), re-enqueues the live requests exempt
+  from shedding, and another replica completes them. Greedy decode is
+  deterministic, so a requeued request emits identical tokens. Retired
+  engines park in a standby pool (a warm pool: jit caches survive
+  relaunch).
+
+Time is a :class:`repro.core.clock.VirtualClock` driven by a
+:class:`~repro.serve.admission.ServiceModel` — decode/prefill seconds are
+modelled, so per-token and per-replica-second **cost accounting** is
+deterministic and comparable across hosts, exactly like the Table VII-C
+discrete-event reproduction. ``benchmarks/gateway_bench.py`` reports the
+elastic-spot gateway against a static on-demand fleet.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Callable, Optional
+
+from repro.core.clock import Clock, VirtualClock
+from repro.core.cost import ComputePricing
+from repro.core.elastic import Provisioner, ProvisioningModel, ScalingPolicy
+from repro.core.market import SpotMarket
+from repro.core.security import PolicyEngine, SessionToken
+
+from .admission import (AdmissionPolicy, DeadlineCostPolicy, JobState,
+                        ServeJob, ServiceModel)
+from .engine import ContinuousBatchingEngine, EngineRequest
+
+
+class _Replica:
+    """One engine instance with a market identity and a billing meter."""
+
+    _ids = itertools.count()
+
+    def __init__(self, engine: ContinuousBatchingEngine, zone, market: str,
+                 bid: float, ready_at: float):
+        self.id = next(self._ids)
+        self.engine = engine
+        self.zone = zone
+        self.market = market            # "spot" | "on_demand"
+        self.bid = bid                  # $/h; spot revokes when price > bid
+        self.ready_at = ready_at
+        self.state = "provisioning"     # -> "live" -> "retired"
+        self.idle_since: Optional[float] = None
+        self.jobs: set[int] = set()
+        # prefill-token watermark: stats are cumulative per engine, and
+        # engines are reused across launches (warm pool).
+        self.pt_mark = engine.stats["prefill_tokens"]
+
+
+class KottaServeGateway:
+    """Secure, deadline/cost-aware, elastic front for serve replicas."""
+
+    def __init__(self, engine_factory: Callable[[], ContinuousBatchingEngine],
+                 security: PolicyEngine, *,
+                 model_resource: str = "model/serve",
+                 admission: AdmissionPolicy | None = None,
+                 scaling: ScalingPolicy | None = None,
+                 market: SpotMarket | None = None,
+                 provisioning: ProvisioningModel | None = None,
+                 pricing: ComputePricing | None = None,
+                 instance_type: str = "c4.8xlarge",
+                 service_model: ServiceModel | None = None,
+                 clock: Clock | None = None,
+                 idle_tick_s: float = 1.0,
+                 seed: int = 0):
+        self._engine_factory = engine_factory
+        self.security = security
+        self.model_resource = model_resource
+        self.model = service_model or ServiceModel()
+        # The default policy estimates with the SAME service model the
+        # gateway bills with — shed decisions and accounting must agree.
+        self.admission = admission or DeadlineCostPolicy(model=self.model)
+        self.scaling = scaling or ScalingPolicy.none(1, market="on_demand")
+        self.market = market
+        self.pricing = pricing or (market.pricing if market is not None
+                                   else ComputePricing())
+        self.instance_type = instance_type
+        # One clock for both planes: scheduling time must also drive token
+        # expiry and audit timestamps, or the security fabric is time-inert
+        # (a 1 h session token would outlive a week-long trace). Callers
+        # that pass neither clock get a shared fresh VirtualClock.
+        if clock is None and isinstance(security.clock, VirtualClock):
+            clock = security.clock
+        self.clock = clock if clock is not None else VirtualClock()
+        self.idle_tick_s = idle_tick_s
+        self.provisioner = Provisioner(self.scaling, provisioning, seed=seed)
+
+        self.jobs: dict[int, ServeJob] = {}
+        self.completed_order: list[int] = []
+        self._queue: list[ServeJob] = []
+        self._rids = itertools.count()
+        self._replicas: list[_Replica] = []
+        self._standby: list[ContinuousBatchingEngine] = []
+        self.stats = {"rounds": 0, "launches": 0, "terminations": 0,
+                      "revocations": 0, "requeues": 0, "shed": 0,
+                      "tokens": 0, "cost_usd": 0.0, "replica_seconds": 0.0,
+                      "peak_replicas": 0}
+
+        # One engine up front: it validates request shapes at submit time
+        # and seeds the warm pool; every replica is factory-identical.
+        self._standby.append(engine_factory())
+        self._slots_per_replica = self._standby[0].max_slots
+        # Pre-provision the floor, ready immediately — the paper's dev pool
+        # always holds >= min reliable nodes (static baselines start hot).
+        now = self.clock.now()
+        self._start_time = now
+        for _ in range(self.scaling.min_nodes):
+            self._launch(now, ready_now=True)
+
+    # -- user API ------------------------------------------------------------
+    def submit(self, token: SessionToken, prompt: list[int], *,
+               max_new: int = 16, deadline_s: float | None = None,
+               priority: int = 1, cost_budget: float | None = None,
+               data_zone: str | None = None) -> int:
+        """Authorize and enqueue one generation request; returns its job id.
+
+        Raises :class:`repro.core.security.SecurityError` on a deny — the
+        deny (like every allow) is already in the audit log. ``deadline_s``
+        is relative to now; ``priority`` is the class (0 = interactive).
+        """
+        self.security.check(token, "serve:Generate", self.model_resource)
+        if data_zone is not None:
+            self.security.check(token, "data:Get",
+                                f"dataset/{data_zone}/serve-context")
+        now = self.clock.now()
+        rid = next(self._rids)
+        job = ServeJob(
+            rid=rid, tenant=token.principal_id, prompt=list(prompt),
+            max_new=max_new, submitted_at=now,
+            deadline=None if deadline_s is None else now + deadline_s,
+            priority=priority, cost_budget=cost_budget,
+            namespace=(token.principal_id, data_zone))
+        # Fail fast on shapes that can never fit a replica's pool.
+        self._probe_engine()._validate_request(
+            EngineRequest(rid, job.prompt, job.max_new, job.namespace))
+        self.jobs[rid] = job
+        self._queue.append(job)
+        return rid
+
+    def result(self, rid: int) -> list[int]:
+        """Completed tokens; raises the job's typed rejection if shed."""
+        job = self.jobs[rid]
+        if job.status is JobState.DONE:
+            return job.tokens
+        if job.status is JobState.SHED:
+            raise job.error
+        raise RuntimeError(f"job {rid} still {job.status.value}")
+
+    def outstanding(self) -> int:
+        return sum(1 for j in self.jobs.values()
+                   if j.status in (JobState.QUEUED, JobState.RUNNING))
+
+    def drain(self, max_rounds: int = 20_000) -> None:
+        """Step until every submitted job is DONE or SHED."""
+        for _ in range(max_rounds):
+            if not self.outstanding():
+                return
+            self.step()
+        raise RuntimeError(f"gateway did not drain in {max_rounds} rounds "
+                           f"({self.outstanding()} jobs outstanding)")
+
+    # -- one scheduling round --------------------------------------------------
+    def step(self) -> None:
+        """One gateway round: activate, revoke, shed/order, dispatch, pump,
+        autoscale, bill, and advance the virtual clock."""
+        now = self.clock.now()
+        self.stats["rounds"] += 1
+        for r in self._replicas:
+            if r.state == "provisioning" and r.ready_at <= now:
+                r.state = "live"
+                r.idle_since = now
+        self._check_revocations(now)
+        self._shed_and_order(now)
+        self._dispatch()
+        work_s = self._pump(now)
+        self._autoscale(now)
+        tick = work_s if work_s > 0 else self.idle_tick_s
+        self._accrue(now, tick)
+        self.clock.advance(tick)
+
+    # -- security/market helpers ----------------------------------------------
+    def _probe_engine(self) -> ContinuousBatchingEngine:
+        if self._standby:
+            return self._standby[-1]
+        return self._replicas[0].engine
+
+    def _od_price(self) -> float:
+        return self.pricing.on_demand_per_hour[self.instance_type]
+
+    def _replica_price(self, r: _Replica, now: float) -> float:
+        if r.market == "spot":
+            if self.market is not None and r.zone is not None:
+                return self.market.price(r.zone, self.instance_type,
+                                         now / 3600.0)
+            return self._od_price() * self.pricing.typical_spot_fraction
+        return self._od_price()
+
+    def _price_per_slot_hour(self, now: float) -> float:
+        live = [r for r in self._replicas if r.state == "live"]
+        if live:
+            per_h = sum(self._replica_price(r, now) for r in live) / len(live)
+        elif self.scaling.market == "spot":
+            if self.market is not None:
+                per_h = self.market.cheapest_zone(self.instance_type,
+                                                  now / 3600.0)[1]
+            else:
+                per_h = self._od_price() * self.pricing.typical_spot_fraction
+        else:
+            per_h = self._od_price()
+        return per_h / self._slots_per_replica
+
+    # -- revocation -------------------------------------------------------------
+    def _check_revocations(self, now: float) -> None:
+        if self.market is None:
+            return
+        for r in list(self._replicas):
+            if r.state == "live" and r.market == "spot" and \
+                    self.market.revoked(r.zone, self.instance_type, r.bid,
+                                        now / 3600.0):
+                self._revoke(r)
+
+    def revoke_replica(self, replica_id: int) -> None:
+        """Force-revoke a live replica (tests / operator chaos drills)."""
+        for r in self._replicas:
+            if r.id == replica_id and r.state == "live":
+                self._revoke(r)
+                return
+        raise KeyError(f"no live replica {replica_id}")
+
+    def _revoke(self, r: _Replica) -> None:
+        """Spot reclaim: requests restart elsewhere; none are lost."""
+        dropped = r.engine.abort()
+        self._return_to_queue(r, dropped, requeued=True)
+        self.stats["revocations"] += 1
+        self._retire_replica(r, terminated=False)
+
+    def _return_to_queue(self, r: _Replica, reqs: list[EngineRequest], *,
+                         requeued: bool) -> None:
+        for req in reqs:
+            job = self.jobs[req.rid]
+            job.status = JobState.QUEUED
+            job.requeued = job.requeued or requeued
+            job.tokens = None
+            job.replica = None
+            r.jobs.discard(req.rid)
+            self._queue.append(job)
+            if requeued:
+                self.stats["requeues"] += 1
+
+    # -- admission ---------------------------------------------------------------
+    def _slot_horizon(self, now: float) -> list[float]:
+        """When does each decode slot (live or provisioning) next free?"""
+        horizon: list[float] = []
+        step_s = self.model.decode_step_s
+        for r in self._replicas:
+            if r.state == "live":
+                remaining = r.engine.remaining_tokens()
+                horizon.extend(now + rem * step_s for rem in remaining)
+                horizon.extend([now] * max(
+                    self._slots_per_replica - len(remaining)
+                    - r.engine.queued, 0))
+            elif r.state == "provisioning":
+                horizon.extend([r.ready_at] * self._slots_per_replica)
+        return horizon
+
+    def _shed_and_order(self, now: float) -> None:
+        keep, shed = self.admission.plan(
+            self._queue, self._slot_horizon(now), now,
+            self._price_per_slot_hour(now))
+        for job, err in shed:
+            job.status = JobState.SHED
+            job.error = err
+            job.finished_at = now
+            self.stats["shed"] += 1
+        self._queue = keep
+
+    def _dispatch(self) -> None:
+        """Hand policy-ordered queue heads to replicas with open slots."""
+        live = [r for r in self._replicas if r.state == "live"]
+        while self._queue:
+            r = max(live, key=lambda x: x.engine.open_slots, default=None)
+            if r is None or r.engine.open_slots <= 0:
+                break
+            job = self._queue.pop(0)
+            r.engine.enqueue(EngineRequest(job.rid, job.prompt, job.max_new,
+                                           job.namespace))
+            job.status = JobState.RUNNING
+            job.replica = r.id
+            r.jobs.add(job.rid)
+
+    # -- the data plane -----------------------------------------------------------
+    def _pump(self, now: float) -> float:
+        """Admit + decode one chunk on every live replica; returns the
+        round's simulated seconds (max across replicas — they run in
+        parallel)."""
+        round_s = 0.0
+        for r in self._replicas:
+            if r.state != "live":
+                continue
+            eng = r.engine
+            if not eng.has_work:
+                if r.idle_since is None:
+                    r.idle_since = now
+                continue
+            r.idle_since = None
+            eng.admit()
+            fresh = eng.stats["prefill_tokens"] - r.pt_mark
+            r.pt_mark = eng.stats["prefill_tokens"]
+            work = self.model.prefill_s(fresh)
+            if eng.live:
+                finished = eng.decode_step()
+                work += eng.decode_chunk * self.model.decode_step_s
+                for req, toks in finished:
+                    job = self.jobs[req.rid]
+                    job.status = JobState.DONE
+                    job.tokens = toks
+                    job.finished_at = now + work
+                    job.replica = None
+                    r.jobs.discard(req.rid)
+                    self.completed_order.append(req.rid)
+                    self.stats["tokens"] += len(toks)
+            elif eng.queued:
+                # Admission produced nothing (transient page pressure):
+                # give the requests back to the central queue so another
+                # replica — or a later round here — picks them up.
+                self._return_to_queue(r, eng.abort(), requeued=False)
+            round_s = max(round_s, work)
+        return round_s
+
+    # -- elasticity ----------------------------------------------------------------
+    def _autoscale(self, now: float) -> None:
+        live = [r for r in self._replicas if r.state == "live"]
+        provisioning = sum(1 for r in self._replicas
+                           if r.state == "provisioning")
+        idle = sum(1 for r in live if not r.engine.has_work)
+        n = self.provisioner.launch_count(len(self._queue), idle,
+                                          provisioning, len(live))
+        for _ in range(n):
+            self._launch(now)
+        for r in live:
+            if r.engine.has_work or r.jobs or r.idle_since is None:
+                continue
+            total = sum(1 for x in self._replicas if x.state == "live")
+            if self.provisioner.should_terminate(now - r.idle_since, total):
+                self._retire_replica(r, terminated=True)
+
+    def _launch(self, now: float, ready_now: bool = False) -> _Replica:
+        engine = self._standby.pop() if self._standby \
+            else self._engine_factory()
+        zone = None
+        if self.market is not None:
+            zone = self.market.cheapest_zone(self.instance_type,
+                                             now / 3600.0)[0]
+        bid = self.scaling.bid_fraction * self._od_price()
+        delay = 0.0 if ready_now else self.provisioner.provisioning_delay()
+        r = _Replica(engine, zone, self.scaling.market, bid,
+                     ready_at=now + delay)
+        if delay == 0.0:
+            r.state = "live"
+            r.idle_since = now
+        self._replicas.append(r)
+        self.stats["launches"] += 1
+        return r
+
+    def _retire_replica(self, r: _Replica, *, terminated: bool) -> None:
+        r.state = "retired"
+        self._replicas.remove(r)
+        self._standby.append(r.engine)
+        if terminated:
+            self.stats["terminations"] += 1
+
+    # -- billing / reporting ----------------------------------------------------
+    def _accrue(self, now: float, tick: float) -> None:
+        live = [r for r in self._replicas if r.state == "live"]
+        for r in live:
+            self.stats["cost_usd"] += \
+                self._replica_price(r, now) * tick / 3600.0
+            self.stats["replica_seconds"] += tick
+        self.stats["peak_replicas"] = max(self.stats["peak_replicas"],
+                                          len(live))
+
+    def replicas(self, state: str = "live") -> list[_Replica]:
+        return [r for r in self._replicas if r.state == state]
+
+    def metrics(self) -> dict:
+        """Serving report: throughput, deadline SLA, spend — the serving
+        analogue of the Table VII-C makespan/cost/wait rows."""
+        done = [j for j in self.jobs.values() if j.status is JobState.DONE]
+        lat = sorted(j.finished_at - j.submitted_at for j in done)
+        hits = sum(1 for j in done
+                   if j.deadline is None or j.finished_at <= j.deadline)
+        sim_s = self.clock.now() - self._start_time
+        # Nearest-rank percentile: ceil(q*n)-1, not int(q*n) (which would
+        # report the single worst latency as p95 for any n <= 20).
+        pct = (lambda q: lat[min(max(math.ceil(q * len(lat)) - 1, 0),
+                                 len(lat) - 1)]) \
+            if lat else (lambda q: 0.0)
+        return {
+            "jobs": len(self.jobs), "completed": len(done),
+            "shed": self.stats["shed"],
+            "tokens": self.stats["tokens"],
+            "sim_seconds": sim_s,
+            "tok_per_sim_s": self.stats["tokens"] / sim_s if sim_s else 0.0,
+            "cost_usd": self.stats["cost_usd"],
+            "usd_per_1k_tokens": (self.stats["cost_usd"] * 1e3
+                                  / max(self.stats["tokens"], 1)),
+            "replica_seconds": self.stats["replica_seconds"],
+            "peak_replicas": self.stats["peak_replicas"],
+            "deadline_hit_rate": hits / len(done) if done else 0.0,
+            "sla_rate": hits / len(self.jobs) if self.jobs else 0.0,
+            "p50_latency_s": pct(0.50), "p95_latency_s": pct(0.95),
+            "revocations": self.stats["revocations"],
+            "requeues": self.stats["requeues"],
+            "launches": self.stats["launches"],
+            "terminations": self.stats["terminations"],
+        }

@@ -15,6 +15,13 @@ prompt, few-shot header) and the "jobs" are decode requests:
   page at a time; a final sub-page remainder is kept as a *partial* entry
   under its parent, which is what lets admission copy-on-write the one
   boundary page instead of re-prefilling it.
+- Every walk starts at a **namespace root** (default ``None``): the gateway
+  namespaces prefix keys by (tenant, data-zone), so one tenant's cached KV
+  pages can never be aliased into another tenant's request — deeper radix
+  keys are parented by physical page ids, which are only reachable by first
+  matching through the namespace's own root. This is the paper's §VI
+  isolation guarantee carried down to the KV cache: shared *within* a
+  security domain, invisible *across* domains.
 
 The allocator's ``on_alloc`` hook evicts a page's index entries the moment
 the page is repurposed, and recursively scrubs the subtree it anchored:
@@ -82,18 +89,25 @@ class PrefixCache:
         self._owned = {}     # page -> ("full", key) | ("partial", parent, toks)
         self._kids = {}      # parent_page -> list of full keys under it
 
+    @staticmethod
+    def _root(namespace):
+        """Radix root for ``namespace``; distinct from every physical page
+        id, so cross-namespace walks can never meet."""
+        return ("root", namespace)
+
     # -- lookup --------------------------------------------------------------
-    def lookup(self, prompt) -> tuple[list[int], int]:
-        """Longest cached prefix of ``prompt``.
+    def lookup(self, prompt, namespace=None) -> tuple[list[int], int]:
+        """Longest cached prefix of ``prompt`` within ``namespace``.
 
         Returns (chain, match_len): ``chain`` holds the full pages covering
         ``match_len // page_size`` pages plus, if ``match_len`` ends
         mid-page, the page holding that partial tail (the copy-on-write
-        source).
+        source). Entries registered under a different namespace are
+        unreachable: the walk starts at the namespace's own root.
         """
         ps = self.page_size
         chain: list[int] = []
-        parent, i = -1, 0
+        parent, i = self._root(namespace), 0
         while (i + 1) * ps <= len(prompt):
             page = self._full.get((parent, tuple(prompt[i * ps:(i + 1) * ps])))
             if page is None:
@@ -113,15 +127,17 @@ class PrefixCache:
         return chain, match
 
     # -- registration --------------------------------------------------------
-    def register(self, prompt, pages) -> None:
-        """Record a freshly prefilled prompt's pages.
+    def register(self, prompt, pages, namespace=None) -> None:
+        """Record a freshly prefilled prompt's pages under ``namespace``.
 
         Existing entries win (their pages are what later lookups alias); our
         private duplicate simply stays out of the index. ``pages`` is the
         request's page list: ``pages[i]`` holds rows [i*ps, (i+1)*ps).
+        The same token content registered under two namespaces keeps two
+        physical copies — exactly the tenant-isolation requirement.
         """
         ps = self.page_size
-        parent = -1
+        parent = self._root(namespace)
         n_full = len(prompt) // ps
         for i in range(n_full):
             key = (parent, tuple(prompt[i * ps:(i + 1) * ps]))
@@ -146,6 +162,17 @@ class PrefixCache:
         if owned is not None:
             if owned[0] == "full":
                 self._full.pop(owned[1], None)
+                # Also unlink from the parent's child list: namespace roots
+                # are never scrubbed, so a stale key left here would leak
+                # one entry per eviction for the gateway's lifetime.
+                kids = self._kids.get(owned[1][0])
+                if kids is not None:
+                    try:
+                        kids.remove(owned[1])
+                    except ValueError:
+                        pass
+                    if not kids:
+                        del self._kids[owned[1][0]]
             else:
                 _, parent, toks = owned
                 lst = self._partial.get(parent)

@@ -1,0 +1,290 @@
+"""Kotta serving gateway: security (authorize + audit), tenant-scoped
+prefix-cache isolation, deadline-ordered (EDF) admission across waves,
+typed load-shed rejections, cost-budget rejection, spot revocation with
+lossless requeue, and queue-driven elastic scaling."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.clock import VirtualClock
+from repro.core.elastic import ProvisioningModel, ScalingPolicy
+from repro.core.market import SpotMarket
+from repro.core.security import (AuthorizationError, PolicyEngine, Principal,
+                                 Role, provision_tenant)
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import (ContinuousBatchingEngine, CostBudgetExceeded,
+                         DeadlineCostPolicy, DeadlineInfeasible,
+                         EngineRequest, JobState, KottaServeGateway,
+                         ServeEngine, ServiceModel)
+
+MAX_LEN = 48
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced_config("yi-6b").replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gold_engine(model):
+    cfg, params = model
+    return ServeEngine(cfg, params, max_len=MAX_LEN)
+
+
+def _factory(model, **kw):
+    cfg, params = model
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_chunk", 4)
+    return lambda: ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _security(*tenants):
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = {t: provision_tenant(sec, t, f"pw-{t}",
+                                  data_zones=("public", t))
+              for t in tenants}
+    return sec, tokens
+
+
+def _gateway(model, sec, *, scaling=None, market=None, engine_kw=None,
+             **kw):
+    kw.setdefault("provisioning",
+                  ProvisioningModel(base_delay_s=5.0, jitter_s=0.0,
+                                    volatility_prob=0.0))
+    kw.setdefault("service_model", ServiceModel(decode_step_s=0.05))
+    return KottaServeGateway(_factory(model, **(engine_kw or {})), sec,
+                             scaling=scaling or ScalingPolicy.none(
+                                 1, market="on_demand"),
+                             market=market, **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.RandomState(seed).randint(
+        0, cfg.vocab_size, size=n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Security: authorization + audit
+# ---------------------------------------------------------------------------
+
+def test_submit_authorizes_and_audits(model):
+    cfg, _ = model
+    sec, tok = _security("alice")
+    # mallory authenticates but holds no serving role: default deny.
+    mallory = Principal("mallory")
+    sec.authenticator.register_identity(mallory, "pw-m")
+    sec.register_role(Role("bystander"))
+    sec.bind(mallory, "bystander")
+    tok_m = sec.login("mallory", "pw-m")
+
+    gw = _gateway(model, sec)
+    rid = gw.submit(tok["alice"], _prompt(cfg, 6), max_new=4,
+                    data_zone="public")
+    with pytest.raises(AuthorizationError):
+        gw.submit(tok_m, _prompt(cfg, 6), max_new=4)
+    gw.drain()
+    assert gw.result(rid)
+
+    allows = sec.audit.records(principal_id="alice", decision="allow")
+    assert any(r.action == "serve:Generate" for r in allows)
+    assert any(r.action == "data:Get" for r in allows)
+    denies = sec.audit.records(principal_id="mallory", decision="deny")
+    assert len(denies) == 1 and denies[0].action == "serve:Generate"
+
+    # Security and scheduling share ONE clock: audit records written after
+    # the drain carry the advanced sim time (token expiry is live too).
+    assert gw.clock is sec.clock
+    t_now = gw.clock.now()
+    assert t_now > 0
+    gw.submit(tok["alice"], _prompt(cfg, 6), max_new=4)
+    rec = sec.audit.records(principal_id="alice", decision="allow")[-1]
+    assert rec.timestamp == t_now
+    gw.drain()
+
+
+# ---------------------------------------------------------------------------
+# Tenant-scoped prefix cache
+# ---------------------------------------------------------------------------
+
+def test_cross_tenant_prompts_share_no_pages(model):
+    """Identical prompts from two tenants in the SAME wave: ZERO prefix
+    hits, disjoint physical pages (every page single-referenced), while the
+    same prompt within one tenant still aliases."""
+    cfg, _ = model
+    sec, tok = _security("alice", "bob")
+    gw = _gateway(model, sec, engine_kw={"decode_chunk": 2})
+    eng = gw.replicas()[0].engine
+    prompt = _prompt(cfg, 16, seed=3)        # 2 full pages
+
+    gw.submit(tok["alice"], prompt, max_new=8, data_zone="public")
+    gw.submit(tok["bob"], prompt, max_new=8, data_zone="public")
+    gw.step()                                # both admitted, decode underway
+    assert eng.live == 2
+    # Cross-tenant: not one token served from the other's pages, and the
+    # two slots' physical pages are fully disjoint (refcounts all 1).
+    assert eng.stats["cached_tokens"] == 0
+    pages = [set(l.pages) for l in eng._live.values()]
+    assert not pages[0] & pages[1]
+    assert all(eng.alloc.refs[p] == 1 for s in pages for p in s)
+    eng._debug_check_refcounts()
+    gw.drain()
+    assert eng.stats["cached_tokens"] == 0
+
+    # Same tenant, same prompt: pages ARE shared again (alice's cached
+    # pages were not reallocated by the drain above).
+    gw.submit(tok["alice"], prompt, max_new=4, data_zone="public")
+    gw.drain()
+    assert eng.stats["cached_tokens"] > 0
+    eng._debug_check_refcounts()
+
+
+def test_same_data_zone_different_tenant_isolated(model):
+    """The namespace is (tenant, zone): sharing a zone does not merge
+    tenants' caches, and two zones of one tenant don't merge either."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec)
+    eng = gw.replicas()[0].engine
+    prompt = _prompt(cfg, 16, seed=4)
+    gw.submit(tok["alice"], prompt, max_new=4, data_zone="public")
+    gw.drain()
+    gw.submit(tok["alice"], prompt, max_new=4, data_zone="alice")
+    gw.drain()
+    assert eng.stats["cached_tokens"] == 0   # distinct zones: no aliasing
+
+
+# ---------------------------------------------------------------------------
+# Deadline-ordered admission + load shed
+# ---------------------------------------------------------------------------
+
+def test_edf_order_across_waves(model):
+    """Jobs dispatched strictly by (priority, deadline), not submit order."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec, engine_kw={"max_slots": 1})
+    t = tok["alice"]
+    p = _prompt(cfg, 6, seed=5)
+    loose = gw.submit(t, p, max_new=4, deadline_s=10_000.0)
+    tight = gw.submit(t, p, max_new=4, deadline_s=1_000.0)
+    mid = gw.submit(t, p, max_new=4, deadline_s=5_000.0)
+    urgent = gw.submit(t, p, max_new=4, deadline_s=9_000.0, priority=0)
+    gw.drain()
+    # priority class 0 first, then EDF within class 1.
+    assert gw.completed_order == [urgent, tight, mid, loose]
+    assert gw.metrics()["deadline_hit_rate"] == 1.0
+
+
+def test_infeasible_deadline_is_shed_with_typed_rejection(model):
+    """A request that cannot make its deadline at current occupancy is shed
+    (typed error, audit-able status) instead of hanging the queue."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec, engine_kw={"max_slots": 1},
+                  service_model=ServiceModel(decode_step_s=1.0))
+    t = tok["alice"]
+    p = _prompt(cfg, 6, seed=6)
+    ok = gw.submit(t, p, max_new=8, deadline_s=10_000.0)
+    # 8 decode steps at 1 s/step can never fit a 2 s deadline.
+    doomed = gw.submit(t, p, max_new=8, deadline_s=2.0)
+    gw.drain()                               # returns: no hang
+    assert gw.result(ok)
+    assert gw.jobs[doomed].status is JobState.SHED
+    with pytest.raises(DeadlineInfeasible):
+        gw.result(doomed)
+    m = gw.metrics()
+    assert m["shed"] == 1 and m["completed"] == 1
+
+
+def test_cost_budget_rejection(model):
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec)
+    rid = gw.submit(tok["alice"], _prompt(cfg, 6, seed=7), max_new=8,
+                    cost_budget=1e-12)
+    gw.drain()
+    with pytest.raises(CostBudgetExceeded):
+        gw.result(rid)
+
+
+# ---------------------------------------------------------------------------
+# Spot revocation: lossless requeue
+# ---------------------------------------------------------------------------
+
+def test_spot_revocation_mid_decode_loses_no_request(model, gold_engine):
+    """Revoking a spot replica mid-decode re-enqueues its live requests;
+    they complete on the replacement with oracle-identical tokens."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(
+        model, sec,
+        scaling=ScalingPolicy.limited(1, market="spot", bid_fraction=1e9),
+        market=SpotMarket(seed=0),
+        engine_kw={"max_slots": 2, "decode_chunk": 2})
+    t = tok["alice"]
+    rng = np.random.RandomState(8)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (6, 9)]
+    rids = [gw.submit(t, p, max_new=12) for p in prompts]
+
+    # Step until decode is genuinely mid-flight, then pull the plug.
+    for _ in range(200):
+        gw.step()
+        live = gw.replicas()
+        if live and any(0 < l.emitted < l.req.max_new
+                        for l in live[0].engine._live.values()):
+            break
+    else:
+        pytest.fail("never reached mid-decode state")
+    gw.revoke_replica(gw.replicas()[0].id)
+    assert all(gw.jobs[r].status is JobState.QUEUED for r in rids
+               if gw.jobs[r].tokens is None)
+    gw.drain()
+
+    gold = np.concatenate([gold_engine.generate([p], max_new=12).tokens
+                           for p in prompts])
+    got = np.stack([np.asarray(gw.result(r), np.int32) for r in rids])
+    np.testing.assert_array_equal(gold, got)
+    m = gw.metrics()
+    assert m["revocations"] == 1 and m["requeues"] >= 1
+    assert m["completed"] == 2 and m["shed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Elasticity
+# ---------------------------------------------------------------------------
+
+def test_queue_depth_scales_replicas_up_and_down(model):
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(
+        model, sec,
+        scaling=ScalingPolicy.limited(3, market="spot", bid_fraction=1e9,
+                                      idle_timeout_s=30.0),
+        market=SpotMarket(seed=0),
+        engine_kw={"max_slots": 1})
+    t = tok["alice"]
+    p = _prompt(cfg, 6, seed=9)
+    for _ in range(6):
+        gw.submit(t, p, max_new=4, deadline_s=100_000.0)
+    gw.drain()
+    m = gw.metrics()
+    assert m["completed"] == 6
+    assert m["peak_replicas"] > 1            # burst scaled out
+    assert m["launches"] >= m["peak_replicas"]
+    # After the burst drains plus the idle timeout, the pool shrinks to the
+    # floor (min_nodes=0).
+    for _ in range(80):
+        if not gw.replicas():
+            break
+        gw.step()
+    assert not gw.replicas()
+    assert m["cost_usd"] > 0.0               # live spot replicas were billed

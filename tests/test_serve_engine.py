@@ -10,8 +10,8 @@ import pytest
 from repro.configs import get_reduced_config
 from repro.models import get_family
 from repro.models.params import init_params
-from repro.serve import (ContinuousBatchingEngine, PageAllocator, PrefixCache,
-                         ServeEngine)
+from repro.serve import (ContinuousBatchingEngine, EngineRequest,
+                         PageAllocator, PrefixCache, ServeEngine)
 
 
 def _make(arch="yi-6b", **kw):
@@ -467,6 +467,128 @@ def test_prefill_chunk_compiles_per_bucket_not_per_length(model):
 
 
 # ---------------------------------------------------------------------------
+# Namespaced prefix cache (tenant scoping) through the stepped API
+# ---------------------------------------------------------------------------
+
+def test_namespaced_requests_never_alias_across_namespaces(model):
+    """Identical prompts under different namespaces admitted in ONE wave
+    keep fully disjoint pages (no same-wave dedup across the boundary);
+    the same namespace still dedups."""
+    cfg, params = model
+    rng = np.random.RandomState(30)
+    prompt = rng.randint(0, cfg.vocab_size, size=16).tolist()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=3,
+                                   prefill_chunk=8, decode_chunk=2)
+    for rid, ns in enumerate((("a", None), ("b", None), ("a", None))):
+        eng.enqueue(EngineRequest(rid, list(prompt), 4, namespace=ns))
+    eng.admit()
+    assert eng.live == 3
+    pages = {l.req.rid: set(l.pages) for l in eng._live.values()}
+    assert not pages[0] & pages[1]          # cross-namespace: disjoint
+    assert pages[0] & pages[2]              # same namespace: aliased
+    # Only the same-namespace duplicate hit the cache.
+    assert 0 < eng.stats["cached_tokens"] <= len(prompt)
+    eng._debug_check_refcounts()
+    while eng.has_work:
+        eng.decode_step()
+        eng.admit()
+    eng._debug_check_refcounts()
+    assert eng.alloc.available() == eng.num_pages - 1
+
+
+def test_stepped_api_heterogeneous_budgets(model, gold_engine):
+    """enqueue/admit/decode_step with per-request max_new matches the
+    oracle for each request's own budget."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [5, 11, 8], seed=31)
+    budgets = [3, 7, 5]
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=2)
+    for rid, (p, m) in enumerate(zip(prompts, budgets)):
+        eng.enqueue(EngineRequest(rid, p, m))
+    done = {}
+    eng.admit()
+    while eng.has_work:
+        for req, toks in eng.decode_step():
+            done[req.rid] = toks
+        eng.admit()
+    for rid, (p, m) in enumerate(zip(prompts, budgets)):
+        gold = gold_engine.generate([p], max_new=m).tokens[0]
+        np.testing.assert_array_equal(gold, np.asarray(done[rid]))
+
+
+def test_abort_returns_requests_and_releases_pages(model, gold_engine):
+    """abort() mid-decode hands every live+queued request back and leaves
+    the pool clean; re-running them from scratch matches the oracle."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [6, 9, 12], seed=32)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=2)
+    for rid, p in enumerate(prompts):
+        eng.enqueue(EngineRequest(rid, p, 8))
+    eng.admit()
+    eng.decode_step()                       # mid-flight (2 live, 1 queued)
+    dropped = eng.abort()
+    assert sorted(r.rid for r in dropped) == [0, 1, 2]
+    assert not eng.has_work
+    assert eng.alloc.available() == eng.num_pages - 1
+    eng._debug_check_refcounts()
+    gold = _gold(gold_engine, prompts, 8)
+    np.testing.assert_array_equal(gold,
+                                  eng.generate(prompts, max_new=8).tokens)
+
+
+# ---------------------------------------------------------------------------
+# Trigram draft keys + construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_trigram_spec_decode_token_identical(model, gold_engine):
+    """spec_ngram=3 (with bigram fallback) emits exactly the greedy
+    tokens, via the constructor arg and via the config field."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [3, 7, 12, 5], seed=33)
+    gold = _gold(gold_engine, prompts, 10)
+    by_arg = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                      prefill_chunk=8, decode_chunk=4,
+                                      enable_spec_decode=True, spec_tokens=4,
+                                      spec_ngram=3)
+    np.testing.assert_array_equal(gold,
+                                  by_arg.generate(prompts, max_new=10).tokens)
+    assert by_arg.stats["spec_steps"] > 0
+    cfg3 = cfg.replace(spec_ngram=3)
+    params3 = params                        # same layout
+    by_cfg = ContinuousBatchingEngine(cfg3, params3, max_len=64, max_slots=2,
+                                      prefill_chunk=8, decode_chunk=4,
+                                      enable_spec_decode=True, spec_tokens=4)
+    assert by_cfg.spec_ngram == 3
+    np.testing.assert_array_equal(gold,
+                                  by_cfg.generate(prompts, max_new=10).tokens)
+
+
+def test_engine_config_bounds_validated_at_construction(model):
+    """Bad spec/slot configs fail at construction with named knobs, not as
+    shape errors deep in the verify step / Pallas kernel."""
+    cfg, params = model
+    mk = lambda c=cfg, **kw: ContinuousBatchingEngine(c, params, max_len=64,
+                                                      **kw)
+    with pytest.raises(ValueError, match="spec_tokens >= 1"):
+        mk(enable_spec_decode=True, spec_tokens=0)
+    with pytest.raises(ValueError, match="spec_ngram"):
+        mk(enable_spec_decode=True, spec_ngram=4)
+    with pytest.raises(ValueError, match="max_slots"):
+        mk(max_slots=0)
+    with pytest.raises(ValueError, match="page-table window"):
+        mk(enable_spec_decode=True, spec_tokens=64)
+    # (K+1)*G = 5*2 = 10 rows: not an 8-sublane multiple for the TPU tile.
+    with pytest.raises(ValueError, match="multiple of 8"):
+        mk(cfg.replace(attn_impl="pallas"), enable_spec_decode=True,
+           spec_tokens=4)
+    # K=3 -> (K+1)*G = 8: tile fits, construction succeeds.
+    mk(cfg.replace(attn_impl="pallas"), enable_spec_decode=True,
+       spec_tokens=3)
+
+
+# ---------------------------------------------------------------------------
 # PageAllocator / PrefixCache units
 # ---------------------------------------------------------------------------
 
@@ -483,6 +605,24 @@ def test_page_allocator_share_revives_free_page():
         al.alloc()
     al.release(p)
     assert al.alloc() == p
+
+
+def test_prefix_cache_namespaces_isolated():
+    """Entries registered under one namespace are invisible to lookups from
+    another; eviction under one namespace leaves the other intact."""
+    pc = PrefixCache(4)
+    prompt = list(range(8))
+    pc.register(prompt, [3, 4], namespace="tenant-a")
+    pc.register(prompt, [5, 6], namespace="tenant-b")
+    assert pc.lookup(prompt, namespace="tenant-a") == ([3, 4], 8)
+    assert pc.lookup(prompt, namespace="tenant-b") == ([5, 6], 8)
+    assert pc.lookup(prompt) == ([], 0)         # default namespace: no hit
+    pc.evict(3)                                 # scrubs only tenant-a's chain
+    assert pc.lookup(prompt, namespace="tenant-a") == ([], 0)
+    assert pc.lookup(prompt, namespace="tenant-b") == ([5, 6], 8)
+    # Namespace roots are never scrubbed, so eviction must unlink the key
+    # from the root's child list too (else it leaks one entry per evict).
+    assert pc._root("tenant-a") not in pc._kids
 
 
 def test_prefix_cache_lookup_register_evict():
