@@ -1,0 +1,196 @@
+"""CI perf-regression gate: fresh smoke-run metrics vs committed baselines.
+
+The smoke benches (``serve_bench.py --smoke``, ``gateway_bench.py --smoke``)
+write machine-readable JSON. This script compares a fresh run against the
+``BENCH_*.smoke.json`` baselines committed in the repo and exits nonzero on
+any regression, so a perf-path slip fails the PR instead of waiting for a
+human to read the artifacts.
+
+Design rules:
+
+- **Gate on ratios and simulated metrics, never on absolute wall-clock.**
+  A GitHub runner is not the machine the baseline was recorded on, so raw
+  tok/s is meaningless across hosts — but continuous/static *speedup*,
+  spec-decode *speedup* and accepted-draft length are normalized within one
+  run, and every gateway metric runs on a virtual clock (host-independent).
+- **Derived ratios are recomputed from the raw fields**, not read from the
+  stored convenience fields: a candidate whose ``continuous_tok_s`` dropped
+  20% fails the gate even if its stored ``speedup`` field were stale.
+- **A missing metric is a failure**, not a skip: the benches exit nonzero
+  on scenario errors, and a JSON that lacks a gated metric is exactly the
+  half-run the gate exists to catch.
+
+Usage (CI runs the smokes into a scratch dir first)::
+
+    python benchmarks/serve_bench.py   --smoke --json /tmp/serve.json
+    python benchmarks/gateway_bench.py --smoke --json /tmp/gateway.json
+    python benchmarks/check_regression.py \
+        --serve /tmp/serve.json --gateway /tmp/gateway.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable
+
+REPO = Path(__file__).resolve().parent.parent
+SERVE_BASELINE = REPO / "BENCH_serve.smoke.json"
+GATEWAY_BASELINE = REPO / "BENCH_gateway.smoke.json"
+
+
+class MetricMissing(Exception):
+    pass
+
+
+def _decode_speedup(r: dict) -> float:
+    d = r["decode"][0]
+    return d["continuous_tok_s"] / d["static_tok_s"]
+
+
+def _spec_speedup(r: dict) -> float:
+    s = r["spec_decode"]
+    return s["spec_decode_tok_s"] / s["base_decode_tok_s"]
+
+
+@dataclass(frozen=True)
+class Metric:
+    """One gated metric.
+
+    ``direction`` is what a HEALTHY candidate does: ``higher`` means the
+    candidate must stay >= baseline * (1 - rel_tol); ``lower`` means it must
+    stay <= baseline * (1 + rel_tol). ``rel_tol`` absorbs run-to-run noise —
+    0.0 for metrics that are deterministic on the virtual clock.
+    """
+
+    bench: str                      # "serve" | "gateway"
+    name: str
+    extract: Callable[[dict], float]
+    direction: str                  # "higher" | "lower"
+    rel_tol: float
+    # Additive slack on top of the relative band — for metrics whose
+    # baseline sits at/near zero (a pure relative tolerance degenerates to
+    # an exact-match check there).
+    abs_tol: float = 0.0
+
+
+METRICS = [
+    # -- serve smoke: same-host normalized ratios ---------------------------
+    Metric("serve", "decode.continuous_vs_static_speedup", _decode_speedup,
+           "higher", 0.15),        # a 20% decode-tok/s drop MUST fail
+    Metric("serve", "spec_decode.speedup", _spec_speedup, "higher", 0.35),
+    Metric("serve", "spec_decode.mean_accepted_len",
+           lambda r: r["spec_decode"]["mean_accepted_len"], "higher", 0.35),
+    Metric("serve", "shared_prefix.hit_rate",
+           lambda r: r["shared_prefix"]["prefix_hit_rate"], "higher", 0.05),
+    # -- gateway smoke: virtual-clock, host-independent ---------------------
+    Metric("gateway", "trace.cost_ratio_static_over_elastic",
+           lambda r: r["trace"]["cost_ratio_static_over_elastic"],
+           "higher", 0.10),
+    Metric("gateway", "trace.elastic.deadline_hit_rate",
+           lambda r: r["trace"]["elastic"]["deadline_hit_rate"],
+           "higher", 0.0),
+    Metric("gateway", "interactive_burst.ttft_reduction_s",
+           lambda r: r["interactive_burst"]["ttft_reduction_s"],
+           "higher", 0.20),
+    Metric("gateway", "interactive_burst.preempt.p99_ttft_s",
+           lambda r: r["interactive_burst"]["preempt"]
+           ["interactive_p99_ttft_s"], "lower", 0.20,
+           abs_tol=0.1),    # baseline ~0: allow one round of virtual time
+    Metric("gateway", "interactive_burst.preempt.interactive_sla_rate",
+           lambda r: r["interactive_burst"]["preempt"]
+           ["interactive_sla_rate"], "higher", 0.0),
+]
+
+
+def _get(metric: Metric, results: dict, which: str) -> float:
+    try:
+        return float(metric.extract(results))
+    except (KeyError, IndexError, TypeError, ZeroDivisionError) as e:
+        raise MetricMissing(
+            f"{metric.bench}:{metric.name} unreadable in {which} results "
+            f"({type(e).__name__}: {e})") from e
+
+
+def check(serve: dict | None, gateway: dict | None,
+          serve_base: dict | None, gateway_base: dict | None,
+          out=sys.stdout) -> list[str]:
+    """Compare candidates against baselines; returns failure strings."""
+    results = {"serve": serve, "gateway": gateway}
+    baselines = {"serve": serve_base, "gateway": gateway_base}
+    failures: list[str] = []
+    print(f"{'metric':<48}{'baseline':>10}{'candidate':>11}{'limit':>10}"
+          f"{'status':>8}", file=out)
+    for m in METRICS:
+        cand_res, base_res = results[m.bench], baselines[m.bench]
+        if cand_res is None or base_res is None:
+            continue                        # bench not under test this call
+        for res, which in ((cand_res, "candidate"), (base_res, "baseline")):
+            if res.get("failures"):
+                failures.append(f"{m.bench} {which} JSON records scenario "
+                                f"failures: {res['failures']}")
+        try:
+            base = _get(m, base_res, "baseline")
+            cand = _get(m, cand_res, "candidate")
+        except MetricMissing as e:
+            failures.append(str(e))
+            print(f"{m.bench + ':' + m.name:<48}{'MISSING':>39}", file=out)
+            continue
+        if m.direction == "higher":
+            limit = base * (1.0 - m.rel_tol) - m.abs_tol
+            ok = cand >= limit
+        else:
+            limit = base * (1.0 + m.rel_tol) + m.abs_tol
+            ok = cand <= limit
+        status = "ok" if ok else "FAIL"
+        print(f"{m.bench + ':' + m.name:<48}{base:>10.3f}{cand:>11.3f}"
+              f"{limit:>10.3f}{status:>8}", file=out)
+        if not ok:
+            failures.append(
+                f"{m.bench}:{m.name} regressed: {cand:.4f} vs baseline "
+                f"{base:.4f} (limit {limit:.4f}, direction {m.direction})")
+    # Deduplicate the scenario-failure complaints (added once per metric).
+    seen, uniq = set(), []
+    for f in failures:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def _load(path: str | Path | None) -> dict | None:
+    if path is None:
+        return None
+    return json.loads(Path(path).read_text())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--serve", default=None,
+                    help="fresh serve smoke JSON (candidate)")
+    ap.add_argument("--gateway", default=None,
+                    help="fresh gateway smoke JSON (candidate)")
+    ap.add_argument("--serve-baseline", default=SERVE_BASELINE,
+                    help=f"baseline (default: {SERVE_BASELINE})")
+    ap.add_argument("--gateway-baseline", default=GATEWAY_BASELINE,
+                    help=f"baseline (default: {GATEWAY_BASELINE})")
+    args = ap.parse_args()
+    if args.serve is None and args.gateway is None:
+        ap.error("nothing to check: pass --serve and/or --gateway")
+    failures = check(
+        _load(args.serve), _load(args.gateway),
+        _load(args.serve_baseline if args.serve else None),
+        _load(args.gateway_baseline if args.gateway else None))
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nregression gate: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

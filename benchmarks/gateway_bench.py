@@ -18,10 +18,24 @@ provisioning: makespan / cost / wait) plus its §VI isolation guarantees:
 2. ``isolation``: identical prompts across tenants produce ZERO prefix-
    cache hits (tenant-scoped namespaces) while a repeat within the tenant
    aliases its cached pages; the audit log holds every allow/deny.
+3. ``interactive_burst``: every decode slot is held by a long batch-class
+   job when a burst of tight-deadline interactive requests arrives. Three
+   runs share the identical arrival trace: **preempt** (deadline-aware
+   decode preemption on — each interactive request pauses the
+   latest-deadline batch slot, starts immediately, and the victim resumes
+   losslessly), **no_preempt** (same tight deadlines, preemption off — the
+   policy can only shed them), and **no_preempt_wait** (preemption off,
+   interactive deadlines dropped — measures the wait an interactive
+   request actually endures when it cannot jump the batch). p99
+   interactive TTFT with preemption vs. the wait baseline is the headline;
+   the shed count of ``no_preempt`` shows the only alternative under real
+   deadlines.
 
 Results land in ``BENCH_gateway.json`` alongside the CSV rows that
 ``benchmarks/run.py`` prints. ``--smoke`` runs a one-burst subset for CI
-(control-plane breakage, not numbers).
+(control-plane breakage, not numbers). Any scenario failure is recorded in
+``results["failures"]`` and re-raised after the JSON is written, so a CI
+gate can never pass on a half-run bench.
 """
 from __future__ import annotations
 
@@ -42,8 +56,8 @@ from repro.core.security import PolicyEngine, provision_tenant
 from repro.core.clock import VirtualClock
 from repro.models import get_family
 from repro.models.params import init_params
-from repro.serve import (ContinuousBatchingEngine, JobState,
-                         KottaServeGateway, ServiceModel)
+from repro.serve import (ContinuousBatchingEngine, DeadlineCostPolicy,
+                         JobState, KottaServeGateway, ServiceModel)
 
 ARCH = "yi-6b"
 TENANTS = ("alice", "bob", "carol")
@@ -220,6 +234,107 @@ def _bench_trace(cfg, params, verbose, results, bursts=2,
     return rows
 
 
+IB_BATCH_MAX_NEW = 40           # long batch-class jobs: hold slots ~2 s
+IB_INTER_MAX_NEW = 6
+IB_INTER_DEADLINE_S = 0.5       # only an (almost) instant start can meet it
+IB_INTER_ARRIVALS = (0.5, 0.9, 1.3, 1.7)
+IB_NUM_PAGES = 48               # headroom: paused victims keep pages pinned
+
+
+def _bench_interactive_burst(cfg, params, verbose, results):
+    """p99 interactive TTFT with and without decode preemption.
+
+    All decode slots hold long batch jobs when the interactive burst lands.
+    ``preempt``: tight deadlines + preemption — each interactive request is
+    infeasible at occupancy, pauses the latest-deadline batch slot (pages
+    pinned) and starts immediately; the victim resumes losslessly.
+    ``no_preempt``: same deadlines, preemption off — shedding is the
+    policy's only move. ``no_preempt_wait``: preemption off and no
+    interactive deadlines — the wait such a request endures when it cannot
+    jump the batch, which is the TTFT baseline preemption is up against.
+    """
+    rng = np.random.RandomState(9)
+    batch_prompts = [rng.randint(0, cfg.vocab_size, size=12).tolist()
+                     for _ in range(SLOTS)]
+    inter_prompts = [rng.randint(0, cfg.vocab_size, size=8).tolist()
+                     for _ in IB_INTER_ARRIVALS]
+    modes = {"preempt": (True, IB_INTER_DEADLINE_S),
+             "no_preempt": (False, IB_INTER_DEADLINE_S),
+             "no_preempt_wait": (False, None)}
+    out = {}
+    for mode, (preempt_on, ideadline) in modes.items():
+        sec, tokens = _security()
+        gw = KottaServeGateway(
+            lambda: ContinuousBatchingEngine(
+                cfg, params, max_len=MAX_LEN, max_slots=SLOTS,
+                num_pages=IB_NUM_PAGES, prefill_chunk=8, decode_chunk=2),
+            sec, scaling=ScalingPolicy.none(1, market="on_demand"),
+            service_model=SERVICE, idle_tick_s=0.5,
+            admission=DeadlineCostPolicy(model=SERVICE, preempt=preempt_on))
+        tok = tokens[TENANTS[0]]
+        b_rids = [gw.submit(tok, p, max_new=IB_BATCH_MAX_NEW,
+                            deadline_s=3600.0, priority=1,
+                            data_zone="public") for p in batch_prompts]
+        arrivals = sorted(zip(IB_INTER_ARRIVALS, inter_prompts))
+        i_rids = []
+        rounds = 0
+        for arrival, prompt in arrivals:
+            while gw.clock.now() < arrival:
+                gw.step()
+                rounds += 1
+                if rounds > 20_000:
+                    raise RuntimeError("interactive_burst did not reach "
+                                       f"arrival t={arrival}")
+            i_rids.append(gw.submit(tok, prompt, max_new=IB_INTER_MAX_NEW,
+                                    deadline_s=ideadline, priority=0,
+                                    data_zone="public"))
+        gw.drain()
+        m = gw.metrics()
+        m["batch_completed"] = sum(
+            1 for r in b_rids if gw.jobs[r].status is JobState.DONE)
+        m["interactive_shed"] = sum(
+            1 for r in i_rids if gw.jobs[r].status is JobState.SHED)
+        m["audit_preempts"] = len(
+            [r for r in sec.audit.records() if r.action == "serve:Preempt"])
+        out[mode] = m
+
+    p99_pre = out["preempt"]["interactive_p99_ttft_s"]
+    p99_wait = out["no_preempt_wait"]["interactive_p99_ttft_s"]
+    results["interactive_burst"] = {
+        "batch_jobs": SLOTS, "batch_max_new": IB_BATCH_MAX_NEW,
+        "interactive_jobs": len(IB_INTER_ARRIVALS),
+        "interactive_deadline_s": IB_INTER_DEADLINE_S,
+        "preempt": out["preempt"], "no_preempt": out["no_preempt"],
+        "no_preempt_wait": out["no_preempt_wait"],
+        "ttft_reduction_s": p99_wait - p99_pre,
+        "ttft_speedup": p99_wait / max(p99_pre, SERVICE.decode_step_s)}
+    if verbose:
+        print(f"\n== gateway: interactive burst under full batch occupancy "
+              f"({SLOTS} slots, {len(IB_INTER_ARRIVALS)} interactive "
+              f"arrivals, deadline {IB_INTER_DEADLINE_S}s) ==")
+        print(f"{'mode':<17}{'p99 TTFT':>10}{'i-sla%':>8}{'shed':>6}"
+              f"{'preempts':>10}{'resumes':>9}{'wait_s':>8}")
+        for mode in modes:
+            m = out[mode]
+            print(f"{mode:<17}{m['interactive_p99_ttft_s']:>9.2f}s"
+                  f"{100 * m['interactive_sla_rate']:>7.1f}%"
+                  f"{m['interactive_shed']:>6}{m['preemptions']:>10}"
+                  f"{m['resumes']:>9}{m['preempt_wait_s']:>8.2f}")
+        print(f"headline: preemption cuts interactive p99 TTFT "
+              f"{p99_wait:.2f}s -> {p99_pre:.2f}s "
+              f"({results['interactive_burst']['ttft_speedup']:.1f}x); "
+              f"without it the same deadlines shed "
+              f"{out['no_preempt']['interactive_shed']}/"
+              f"{len(IB_INTER_ARRIVALS)} interactive jobs")
+    return [("gateway.burst.preempt", p99_pre * 1e6,
+             f"p99_ttft_s={p99_pre:.3f};"
+             f"preemptions={out['preempt']['preemptions']};"
+             f"isla={out['preempt']['interactive_sla_rate']:.2f}"),
+            ("gateway.burst.wait", p99_wait * 1e6,
+             f"p99_ttft_s={p99_wait:.3f};"
+             f"speedup={results['interactive_burst']['ttft_speedup']:.2f}x")]
+
+
 def _bench_isolation(cfg, params, verbose, results):
     """Tenant-scoped prefix cache: same prompt, zero cross-tenant hits."""
     sec, tokens = _security()
@@ -265,17 +380,39 @@ def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
         smoke: bool = False):
     cfg, params = _build()
     results: dict = {"arch": ARCH, "slots_per_replica": SLOTS,
-                     "max_replicas": MAX_REPLICAS, "smoke": smoke}
+                     "max_replicas": MAX_REPLICAS, "smoke": smoke,
+                     "failures": []}
     if smoke:
-        rows = _bench_trace(cfg, params, verbose, results, bursts=1,
-                            jobs_per_burst=6)
+        scenarios = [("trace", lambda: _bench_trace(
+            cfg, params, verbose, results, bursts=1, jobs_per_burst=6))]
     else:
-        rows = _bench_trace(cfg, params, verbose, results)
-    rows += _bench_isolation(cfg, params, verbose, results)
+        scenarios = [("trace", lambda: _bench_trace(
+            cfg, params, verbose, results))]
+    scenarios += [
+        ("interactive_burst", lambda: _bench_interactive_burst(
+            cfg, params, verbose, results)),
+        ("isolation", lambda: _bench_isolation(cfg, params, verbose,
+                                               results)),
+    ]
+    rows = []
+    for name, fn in scenarios:
+        # Every scenario is attempted (one failure must not hide the rest),
+        # but a failed scenario fails the WHOLE bench after the JSON lands:
+        # the CI regression gate must never read a half-run as healthy.
+        try:
+            rows.extend(fn())
+        except Exception as e:                      # noqa: BLE001
+            results["failures"].append(f"{name}: {type(e).__name__}: {e}")
+            if verbose:
+                print(f"\n!! scenario {name} FAILED: {e}")
     if json_path is not None:
         Path(json_path).write_text(json.dumps(results, indent=2) + "\n")
         if verbose:
             print(f"\nwrote {json_path}")
+    if results["failures"]:
+        raise RuntimeError(
+            f"{len(results['failures'])} gateway bench scenario(s) failed: "
+            + "; ".join(results["failures"]))
     return rows
 
 

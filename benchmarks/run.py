@@ -36,11 +36,23 @@ def main() -> None:
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     rows = []
+    failures = []
     for name in names:
-        rows.extend(BENCHES[name](verbose=True))
+        # Run every requested bench even when one fails, then exit nonzero:
+        # a raising scenario must never look like a clean (half-)run to CI.
+        try:
+            rows.extend(BENCHES[name](verbose=True))
+        except Exception as e:                      # noqa: BLE001
+            failures.append(f"{name}: {type(e).__name__}: {e}")
+            print(f"\n!! bench {name} FAILED: {e}")
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if failures:
+        print(f"\n{len(failures)} bench(es) failed:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

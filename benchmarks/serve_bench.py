@@ -87,54 +87,64 @@ def _prompts(batch: int, vocab: int):
             .tolist() for i in range(batch)]
 
 
-def _bench_static(cfg, params, prompts, max_len, max_new):
-    eng = ServeEngine(cfg, params, max_len=max_len)
-    eng.generate(prompts, max_new=4)                  # warm the jit caches
-    t0 = time.perf_counter()
-    out = eng.generate(prompts, max_new=max_new)
-    dt = time.perf_counter() - t0
-    n_tok = out.tokens.size
-    # One device sync per generate: every token lands in the same burst, so
-    # the per-token latency distribution is degenerate (p50 == p95 == mean).
-    return n_tok / dt, dt / max_new * 1e3
+def _bench_decode_point(cfg, params, prompts, max_len, max_new, reps=1):
+    """Static vs continuous at one batch point.
 
-
-def _bench_continuous(cfg, params, prompts, max_len, max_new):
-    # One engine for warmup + measurement: the decode-chunk/prefill jits are
-    # per-engine closures, so a fresh engine would re-pay compilation.
-    # Prefix cache off: these rows track decode batching; re-running the same
-    # prompts with the cache hot would measure admission aliasing instead
-    # (the shared_prefix rows cover that). decode_chunk=None exercises the
-    # occupancy heuristic; at low batch it picks a chunk >= max_new, so the
-    # whole decode is one chunk and p50 == p95 there (tail latency is only
-    # meaningful in the high-occupancy rows, where chunks are short).
-    eng = ContinuousBatchingEngine(
+    Repetitions INTERLEAVE the two engines (static, continuous, static, ...)
+    and each takes its best rep: on a throttled/loaded host a slow window
+    then penalizes both engines alike instead of whichever happened to run
+    second, which is what keeps the speedup *ratio* (the metric the CI
+    regression gate checks) reproducible when absolute tok/s is not.
+    """
+    static = ServeEngine(cfg, params, max_len=max_len)
+    # One continuous engine for warmup + measurement: the decode-chunk /
+    # prefill jits are per-engine closures, so a fresh engine would re-pay
+    # compilation. Prefix cache off: these rows track decode batching;
+    # re-running the same prompts with the cache hot would measure admission
+    # aliasing instead (the shared_prefix rows cover that).
+    # decode_chunk=None exercises the occupancy heuristic; at low batch it
+    # picks a chunk >= max_new, so the whole decode is one chunk and
+    # p50 == p95 there (tail latency is only meaningful in the
+    # high-occupancy rows, where chunks are short).
+    cont = ContinuousBatchingEngine(
         cfg, params, max_len=max_len,
         max_slots=min(len(prompts), cfg.max_decode_slots * 4),
         decode_chunk=DECODE_CHUNK, enable_prefix_cache=False)
 
-    def run(chunk_times):
+    def run_cont(chunk_times):
         t0 = time.perf_counter()
-        out = eng.generate(prompts, max_new=max_new,
-                           on_chunk=lambda steps, s: chunk_times.append(
-                               (steps, s)))
+        out = cont.generate(prompts, max_new=max_new,
+                            on_chunk=lambda steps, s: chunk_times.append(
+                                (steps, s)))
         return out, time.perf_counter() - t0
 
-    run([])                                           # warm the jit caches
+    static.generate(prompts, max_new=4)               # warm the jit caches
+    run_cont([])
+    s_dt = c_dt = np.inf
     chunk_times: list[tuple[int, float]] = []
-    out, dt = run(chunk_times)
-    n_tok = out.tokens.size
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        s_out = static.generate(prompts, max_new=max_new)
+        s_dt = min(s_dt, time.perf_counter() - t0)
+        times: list[tuple[int, float]] = []
+        c_out, dt = run_cont(times)
+        if dt < c_dt:
+            c_dt, chunk_times = dt, times
+    # One device sync per static generate: every token lands in the same
+    # burst, so its per-token latency is degenerate (p50 == p95 == mean).
+    s_tps = s_out.tokens.size / s_dt
+    s_lat = s_dt / max_new * 1e3
     # Inter-token latency per request stream: a chunk of k steps gives every
     # active slot k tokens in `s` seconds -> k samples of s/k.
     lat = np.concatenate([
         np.full(steps, s / max(steps, 1)) for steps, s in chunk_times])
-    return (n_tok / dt,
+    return (s_tps, s_lat, c_out.tokens.size / c_dt,
             float(np.percentile(lat, 50)) * 1e3,
             float(np.percentile(lat, 95)) * 1e3)
 
 
 def _bench_decode(cfg, params, verbose, results, batches=BATCHES,
-                  max_new=MAX_NEW):
+                  max_new=MAX_NEW, reps=1):
     rows = []
     if verbose:
         print("\n== serve: static batch vs continuous batching "
@@ -145,9 +155,8 @@ def _bench_decode(cfg, params, verbose, results, batches=BATCHES,
     max_len = max(PROMPT_LENS) + max_new + 8
     for b in batches:
         prompts = _prompts(b, cfg.vocab_size)
-        s_tps, s_lat = _bench_static(cfg, params, prompts, max_len, max_new)
-        c_tps, p50, p95 = _bench_continuous(cfg, params, prompts, max_len,
-                                            max_new)
+        s_tps, s_lat, c_tps, p50, p95 = _bench_decode_point(
+            cfg, params, prompts, max_len, max_new, reps=reps)
         speed = c_tps / s_tps
         if verbose:
             print(f"{b:>6}{s_tps:>14.0f}{c_tps:>12.0f}{speed:>8.2f}x"
@@ -291,19 +300,19 @@ def _bench_ttft_long(cfg, params, verbose, results):
              f"ttft_ms={ttft['paged']:.2f};speedup={speed:.2f}x")]
 
 
-def _bench_shared_prefix(cfg, params, verbose, results):
-    """Batch-8 admission with a hot shared system prompt: paged aliases the
-    cached prefix pages and prefills only each request's unique tail."""
+def _bench_shared_prefix(cfg, params, verbose, results, batch=SHARED_BATCH,
+                         prefix_len=PREFIX_LEN, rounds=5):
+    """Shared-system-prompt admission: paged aliases the cached prefix pages
+    and prefills only each request's unique tail."""
     rng = np.random.RandomState(2)
-    prefix = rng.randint(0, cfg.vocab_size, size=PREFIX_LEN).tolist()
+    prefix = rng.randint(0, cfg.vocab_size, size=prefix_len).tolist()
 
     def mk():
         return [prefix + rng.randint(0, cfg.vocab_size, size=TAIL_LEN).tolist()
-                for _ in range(SHARED_BATCH)]
+                for _ in range(batch)]
 
-    max_len = PREFIX_LEN + TAIL_LEN + 16
-    dense, paged = _admit_engines(cfg, params, max_len,
-                                  max_slots=SHARED_BATCH)
+    max_len = prefix_len + TAIL_LEN + 16
+    dense, paged = _admit_engines(cfg, params, max_len, max_slots=batch)
     # Warmup: two rounds compile both paths — cold prefill AND the
     # cache-hit/aliasing path — and leave the prefix pages hot in the paged
     # engine's cache, the steady state of a shared system prompt.
@@ -315,7 +324,7 @@ def _bench_shared_prefix(cfg, params, verbose, results):
     # loaded machine contaminates individual rounds far more than the steady
     # state; the min is the reproducible number.
     d_ms, p_ms, hit = np.inf, np.inf, 0.0
-    for _ in range(5):
+    for _ in range(rounds):
         dense.generate(mk(), max_new=1)
         d_ms = min(d_ms, dense.stats["admit_seconds"] * 1e3)
         paged.generate(mk(), max_new=1)
@@ -323,42 +332,71 @@ def _bench_shared_prefix(cfg, params, verbose, results):
         hit = max(hit, paged.prefix_hit_rate)
     speed = d_ms / p_ms
     if verbose:
-        print(f"\n== serve: shared-prefix admission (batch {SHARED_BATCH}, "
-              f"{PREFIX_LEN}-token system prompt + {TAIL_LEN}-token tails) ==")
+        print(f"\n== serve: shared-prefix admission (batch {batch}, "
+              f"{prefix_len}-token system prompt + {TAIL_LEN}-token tails) ==")
         print(f"dense prefill {d_ms:.1f} ms   paged+prefix {p_ms:.1f} ms   "
               f"speedup {speed:.2f}x   prefix hit rate {hit:.2f}")
     results["shared_prefix"] = {
-        "batch": SHARED_BATCH, "prefix_len": PREFIX_LEN, "tail_len": TAIL_LEN,
+        "batch": batch, "prefix_len": prefix_len, "tail_len": TAIL_LEN,
         "dense_admit_ms": d_ms, "paged_admit_ms": p_ms,
         "admission_speedup": speed, "prefix_hit_rate": hit}
-    return [("serve.prefix.dense.b8", d_ms * 1e3, f"admit_ms={d_ms:.2f}"),
-            ("serve.prefix.paged.b8", p_ms * 1e3,
+    return [(f"serve.prefix.dense.b{batch}", d_ms * 1e3,
+             f"admit_ms={d_ms:.2f}"),
+            (f"serve.prefix.paged.b{batch}", p_ms * 1e3,
              f"admit_ms={p_ms:.2f};speedup={speed:.2f}x;hit_rate={hit:.2f}")]
 
 
 def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
         smoke: bool = False):
     cfg, params = _build()
-    results: dict = {"arch": ARCH, "max_new": MAX_NEW, "decode": []}
+    results: dict = {"arch": ARCH, "max_new": MAX_NEW, "decode": [],
+                     "failures": []}
     if smoke:
         # CI gate: one batch point through every serve hot path (static,
-        # continuous, speculative) on the tiny config — catches perf-path
-        # breakage, not perf numbers.
+        # continuous, prefix-sharing, speculative) on the tiny config —
+        # catches perf-path breakage, not perf numbers.
         results["smoke"] = True
         results["max_new"] = 8          # what the smoke decode rows measure
-        rows = _bench_decode(cfg, params, verbose, results, batches=(4,),
-                             max_new=8)
-        rows += _bench_spec_decode(cfg, params, verbose, results, requests=4,
-                                   slots=4, max_new=16, seed_len=24)
+        scenarios = [
+            ("decode", lambda: _bench_decode(cfg, params, verbose, results,
+                                             batches=(4,), max_new=8,
+                                             reps=5)),
+            ("shared_prefix", lambda: _bench_shared_prefix(
+                cfg, params, verbose, results, batch=4, prefix_len=32,
+                rounds=2)),
+            ("spec_decode", lambda: _bench_spec_decode(
+                cfg, params, verbose, results, requests=4, slots=4,
+                max_new=16, seed_len=24)),
+        ]
     else:
-        rows = _bench_decode(cfg, params, verbose, results)
-        rows += _bench_ttft_long(cfg, params, verbose, results)
-        rows += _bench_shared_prefix(cfg, params, verbose, results)
-        rows += _bench_spec_decode(cfg, params, verbose, results)
+        scenarios = [
+            ("decode", lambda: _bench_decode(cfg, params, verbose, results)),
+            ("ttft_long", lambda: _bench_ttft_long(cfg, params, verbose,
+                                                   results)),
+            ("shared_prefix", lambda: _bench_shared_prefix(
+                cfg, params, verbose, results)),
+            ("spec_decode", lambda: _bench_spec_decode(cfg, params, verbose,
+                                                       results)),
+        ]
+    rows = []
+    for name, fn in scenarios:
+        # Attempt every scenario, then fail the bench as a whole if any
+        # raised — after writing the JSON. A half-run bench must exit
+        # nonzero so the CI regression gate cannot read it as healthy.
+        try:
+            rows.extend(fn())
+        except Exception as e:                      # noqa: BLE001
+            results["failures"].append(f"{name}: {type(e).__name__}: {e}")
+            if verbose:
+                print(f"\n!! scenario {name} FAILED: {e}")
     if json_path is not None:
         Path(json_path).write_text(json.dumps(results, indent=2) + "\n")
         if verbose:
             print(f"\nwrote {json_path}")
+    if results["failures"]:
+        raise RuntimeError(
+            f"{len(results['failures'])} serve bench scenario(s) failed: "
+            + "; ".join(results["failures"]))
     return rows
 
 

@@ -64,6 +64,13 @@ class ModelConfig:
     max_decode_slots: int = 8        # concurrent requests the serve engine admits
     prefill_chunk: int = 32          # query tokens per paged-prefill step
     enable_prefix_cache: bool = True # share prompt-prefix pages copy-on-write
+    # Gateway decode preemption: an otherwise-infeasible interactive request
+    # may pause the latest-deadline batch-class slot (KV pages pinned,
+    # lossless zero-re-prefill resume) when the feasibility walk says the
+    # pause meets BOTH deadlines. Consumed by the serving launcher when it
+    # builds the gateway's DeadlineCostPolicy; pools should keep page
+    # headroom, since a paused request's pages stay allocated while parked.
+    enable_decode_preemption: bool = True
     # Self-speculative decode: each engine step drafts spec_tokens candidates
     # per slot by n-gram lookup over the slot's own token history and scores
     # all spec_tokens+1 positions in one paged multi-query verify pass.

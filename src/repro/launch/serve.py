@@ -24,9 +24,20 @@ scheduled Kotta job:
   (reported, not hung).
 - ``--replicas R`` sizes a static on-demand replica fleet (elastic spot
   autoscaling is exercised in ``benchmarks/gateway_bench.py``).
+- ``--interactive-burst`` (implies ``--gateway``) demos deadline-aware
+  decode preemption: long batch-class jobs occupy every decode slot, then a
+  burst of tight-deadline interactive requests arrives. Each infeasible
+  interactive request pauses the latest-deadline batch slot (KV pages
+  pinned, parked host-side), starts immediately, and the victim resumes
+  with zero re-prefill — the summary prints preemptions/resumes, the added
+  batch wait, and interactive p99 TTFT. Preemption follows the config knob
+  ``enable_decode_preemption`` (pass ``--no-preempt`` to watch the same
+  burst get shed instead).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --gateway \\
         --tenants 2 --deadline-s 120 --batch 6
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \\
+        --interactive-burst
 """
 import argparse
 
@@ -49,17 +60,25 @@ def _run_gateway(cfg, params, args) -> None:
     from repro.core.elastic import ScalingPolicy
     from repro.core.security import PolicyEngine, provision_tenant
     from repro.core.clock import VirtualClock
-    from repro.serve import JobState, KottaServeGateway
+    from repro.serve import (DeadlineCostPolicy, JobState, KottaServeGateway,
+                             ServiceModel)
 
     sec = PolicyEngine(clock=VirtualClock())
     tokens = [provision_tenant(sec, f"tenant{i}", f"pw-tenant{i}",
                                data_zones=("public",))
               for i in range(args.tenants)]
 
+    # The policy estimates with the same model the gateway bills with; the
+    # config knob decides whether infeasible interactive requests may pause
+    # a batch-class slot instead of being shed.
+    svc = ServiceModel()
     gw = KottaServeGateway(
         lambda: ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
                                          enable_spec_decode=args.spec),
-        sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"))
+        sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
+        service_model=svc,
+        admission=DeadlineCostPolicy(
+            model=svc, preempt=cfg.enable_decode_preemption))
     prompts = _demo_prompts(cfg, args.batch)
     rids = [gw.submit(tokens[i % len(tokens)], p, max_new=args.max_new,
                       deadline_s=args.deadline_s, data_zone="public")
@@ -79,6 +98,70 @@ def _run_gateway(cfg, params, args) -> None:
     print(f"deadline hit rate {m['deadline_hit_rate']:.2f}   shed "
           f"{m['shed']}   audit: {len(audit.records(decision='allow'))} "
           f"allows / {len(audit.records(decision='deny'))} denies")
+
+
+def _run_interactive_burst(cfg, params, args) -> None:
+    """Demo: decode preemption under a tight-deadline interactive burst."""
+    from repro.core.elastic import ScalingPolicy
+    from repro.core.security import PolicyEngine, provision_tenant
+    from repro.core.clock import VirtualClock
+    from repro.serve import (ContinuousBatchingEngine, DeadlineCostPolicy,
+                             JobState, KottaServeGateway, ServiceModel)
+
+    preempt_on = cfg.enable_decode_preemption and not args.no_preempt
+    sec = PolicyEngine(clock=VirtualClock())
+    tok = provision_tenant(sec, "tenant0", "pw-tenant0",
+                           data_zones=("public",))
+    svc = ServiceModel()
+    slots = 4
+    gw = KottaServeGateway(
+        lambda: ContinuousBatchingEngine(
+            cfg, params, max_len=args.max_len, max_slots=slots,
+            num_pages=2 * slots * (args.max_len // cfg.page_size),
+            decode_chunk=2),
+        sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
+        service_model=svc,
+        admission=DeadlineCostPolicy(model=svc, preempt=preempt_on))
+    rng = jax.random.PRNGKey(2)
+    batch_rids = [gw.submit(
+        tok, [int(t) for t in jax.random.randint(
+            jax.random.fold_in(rng, i), (8,), 0, cfg.vocab_size)],
+        max_new=32, deadline_s=3600.0, priority=1, data_zone="public")
+        for i in range(slots)]
+    # Let the batch occupy every slot, then fire the interactive burst.
+    for _ in range(10_000):
+        if any(l.emitted > 0 for r in gw.replicas()
+               for l in r.engine._live.values()):
+            break
+        gw.step()
+    else:
+        raise SystemExit("interactive-burst demo: batch jobs never started "
+                         "decoding (no live replica?)")
+    inter_rids = [gw.submit(
+        tok, [int(t) for t in jax.random.randint(
+            jax.random.fold_in(rng, 100 + i), (6,), 0, cfg.vocab_size)],
+        max_new=4, deadline_s=0.5, priority=0, data_zone="public")
+        for i in range(3)]
+    gw.drain()
+    m = gw.metrics()
+    print(f"engine: gateway interactive-burst demo (preemption "
+          f"{'ON' if preempt_on else 'OFF'}; {slots} slots, "
+          f"{len(batch_rids)} batch jobs, {len(inter_rids)} interactive)")
+    for rid in inter_rids:
+        job = gw.jobs[rid]
+        if job.status is JobState.DONE:
+            print(f"  interactive job {rid}: DONE ttft="
+                  f"{job.started_at - job.submitted_at:.2f}s -> {job.tokens}")
+        else:
+            print(f"  interactive job {rid}: SHED ({job.error.reason})")
+    print(f"preemptions {m['preemptions']}   resumes {m['resumes']}   "
+          f"added batch wait {m['preempt_wait_s']:.2f}s   interactive p99 "
+          f"TTFT {m['interactive_p99_ttft_s']:.2f}s   deadline hit rate "
+          f"{m['deadline_hit_rate']:.2f}   shed {m['shed']}")
+    audit = sec.audit.records()
+    print(f"audit: {len([r for r in audit if r.action == 'serve:Preempt'])} "
+          f"preempt / {len([r for r in audit if r.action == 'serve:Resume'])}"
+          f" resume records")
 
 
 def main() -> None:
@@ -104,6 +187,13 @@ def main() -> None:
                          "infeasible requests are shed, typed)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="gateway: static on-demand replica count")
+    ap.add_argument("--interactive-burst", action="store_true",
+                    help="gateway demo: batch jobs hold every decode slot, "
+                         "a tight-deadline interactive burst preempts them "
+                         "(lossless pause/resume, pages pinned)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="with --interactive-burst: disable preemption to "
+                         "watch the burst shed instead")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -112,6 +202,14 @@ def main() -> None:
     fam = get_family(cfg)
     params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
+    if args.interactive_burst:
+        if not hasattr(fam, "decode_paged"):
+            raise SystemExit("--interactive-burst requires a paged-decode "
+                             "family")
+        if args.replicas < 1:
+            raise SystemExit("--interactive-burst needs --replicas >= 1")
+        _run_interactive_burst(cfg, params, args)
+        return
     if args.gateway:
         if not hasattr(fam, "decode_paged"):
             raise SystemExit("--gateway requires a paged-decode family")

@@ -1,13 +1,14 @@
 from .admission import (AdmissionError, AdmissionPolicy, CostBudgetExceeded,
                         DeadlineCostPolicy, DeadlineInfeasible, FCFSPolicy,
-                        JobState, ServeJob, ServiceModel)
-from .engine import (ContinuousBatchingEngine, EngineRequest, ServeEngine,
-                     ServeResult)
+                        JobState, PreemptCandidate, ServeJob, ServiceModel)
+from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
+                     ServeEngine, ServeResult)
 from .gateway import KottaServeGateway
 from .paging import PageAllocator, PrefixCache
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
-           "ServeResult", "PageAllocator", "PrefixCache",
+           "PausedRequest", "ServeResult", "PageAllocator", "PrefixCache",
            "KottaServeGateway", "ServeJob", "JobState", "ServiceModel",
            "AdmissionPolicy", "FCFSPolicy", "DeadlineCostPolicy",
-           "AdmissionError", "DeadlineInfeasible", "CostBudgetExceeded"]
+           "PreemptCandidate", "AdmissionError", "DeadlineInfeasible",
+           "CostBudgetExceeded"]

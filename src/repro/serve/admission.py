@@ -19,6 +19,15 @@ serving-side analogue for generation requests:
   :mod:`repro.core.cost` before they occupy capacity; a request whose
   estimated serving cost exceeds its budget is rejected with
   :class:`CostBudgetExceeded`.
+- Before an **interactive** request is shed as infeasible, the policy may
+  instead nominate a running lower-class request for **decode preemption**
+  (:meth:`DeadlineCostPolicy.plan_preemption`): among the batch-class slots
+  it picks the latest-deadline victim whose pause lets the interactive
+  request start immediately *and* still leaves the victim able to meet its
+  own deadline after a lossless resume (paused decode re-prefills nothing,
+  so the resume cost is exactly its remaining decode steps). The companion
+  paper's interactive-analytics requirement: scarce capacity serves the
+  urgent class first, without breaking the batch class's promises.
 
 Requests that a replica already accepted and then lost to spot revocation
 are re-enqueued with ``requeued=True`` and are exempt from shedding —
@@ -55,6 +64,7 @@ class CostBudgetExceeded(AdmissionError):
 class JobState(str, enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
+    PAUSED = "paused"        # decode-preempted; KV pages pinned on a replica
     DONE = "done"
     SHED = "shed"
 
@@ -81,10 +91,26 @@ class ServeJob:
     namespace: object = None
     status: JobState = JobState.QUEUED
     tokens: Optional[list[int]] = None
+    started_at: Optional[float] = None   # first admitted into a decode slot
     finished_at: Optional[float] = None
     error: Optional[AdmissionError] = None
     requeued: bool = False
     replica: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PreemptCandidate:
+    """A running request the gateway could pause to admit a more urgent one.
+
+    ``remaining_tokens`` is the victim's outstanding decode budget — after a
+    lossless pause/resume (pages pinned, zero re-prefill) that is its ONLY
+    remaining cost, which is what makes the feasibility arithmetic exact.
+    """
+
+    job: ServeJob
+    remaining_tokens: int
+    replica_id: int
+    slot: int
 
 
 @dataclass(frozen=True)
@@ -125,6 +151,12 @@ class AdmissionPolicy:
         """Return (keep_ordered, shed) — FCFS keeps everything."""
         return self.order(jobs, now), []
 
+    def plan_preemption(self, job: ServeJob,
+                        candidates: list[PreemptCandidate],
+                        now: float) -> Optional[PreemptCandidate]:
+        """Victim whose pause would admit ``job``; FCFS never preempts."""
+        return None
+
 
 FCFSPolicy = AdmissionPolicy
 
@@ -145,6 +177,9 @@ class DeadlineCostPolicy(AdmissionPolicy):
     """
 
     model: ServiceModel = field(default_factory=ServiceModel)
+    # Decode preemption: pause the latest-deadline batch-class slot to admit
+    # an otherwise-infeasible interactive request (both deadlines must hold).
+    preempt: bool = True
     name = "edf_cost"
 
     def order(self, jobs: list[ServeJob], now: float) -> list[ServeJob]:
@@ -193,3 +228,37 @@ class DeadlineCostPolicy(AdmissionPolicy):
             if slot_t is not None:
                 heapq.heappush(horizon, finish)
         return keep, shed
+
+    def plan_preemption(self, job, candidates, now):
+        """Pick the victim whose pause admits ``job`` within BOTH deadlines.
+
+        Eligibility: the victim must belong to a strictly lower priority
+        class, ``job`` must finish by its deadline given an *instant* start
+        on the freed slot, and the victim — resumed after ``job`` finishes,
+        paying only its remaining decode steps (pause/resume is lossless:
+        pages pinned, zero re-prefill) — must still meet its own deadline.
+        Among eligible victims the LATEST-deadline one is paused: it has the
+        most slack to absorb the added wait, so preemption consumes the
+        cheapest SLA headroom first. Returns None (shed proceeds) when no
+        victim qualifies or preemption is disabled.
+        """
+        if not self.preempt:
+            return None
+        svc = self.model.service_s(len(job.prompt), job.max_new)
+        finish = now + svc
+        if job.deadline is not None and finish > job.deadline:
+            return None          # even an instant start cannot make it
+        best, best_key = None, None
+        for c in candidates:
+            if c.job.priority <= job.priority:
+                continue         # only a lower class may be paused
+            resume_finish = finish \
+                + c.remaining_tokens * self.model.decode_step_s
+            if c.job.deadline is not None \
+                    and resume_finish > c.job.deadline:
+                continue         # pausing would break the victim's own SLA
+            key = (math.inf if c.job.deadline is None else c.job.deadline,
+                   c.job.submitted_at, c.job.rid)
+            if best is None or key > best_key:
+                best, best_key = c, key
+        return best

@@ -60,6 +60,18 @@ each request's prefix-cache ``namespace`` by (tenant, data-zone), and
 re-enqueues a revoked spot replica's requests through ``abort`` — turning
 every generation request into a first-class secured, scheduled Kotta job.
 
+**Deadline-aware decode preemption** rides on the stepped API:
+``preempt(slot)`` pauses a running request mid-stream with zero lost work —
+its KV pages stay allocated and *pinned* (their refcounts are untouched, so
+the allocator can never hand them out, and eviction-on-realloc can never
+scrub their prefix-cache entries) while the host-side cursor / token
+history / draft state parks in a :class:`PausedRequest`. The freed slot
+admits an interactive request immediately. ``resume`` re-attaches the
+parked pages to a fresh slot through the page table and continues decoding
+with **zero re-prefill** (``prefill_tokens`` does not move) and greedy
+tokens identical to an uninterrupted run — with or without speculative
+decode, whose per-slot history buffer is parked and restored too.
+
 ``ServeEngine`` (static batch, dense cache) is kept as the fallback path for
 recurrent-state families and as the benchmark baseline;
 ``prefill_mode="dense"`` keeps the PR-1 bucketed dense-prefill admission
@@ -168,6 +180,27 @@ class _Live:
     pages: list[int]
     emitted: int = 0
     tokens: list[int] = field(default_factory=list)
+
+
+@dataclass
+class PausedRequest:
+    """A preempted request parked host-side, its KV pages still pinned.
+
+    ``pages`` keep their refcounts (never released, never reallocatable)
+    so the sequence's KV survives any eviction pressure while paused;
+    ``cur``/``pos``/``limit`` — and ``hist``, the speculative-decode
+    drafting history row — are the exact slot state at the chunk boundary
+    where the request was paused. ``resume`` restores all of it into a
+    fresh slot with zero re-prefill.
+    """
+    req: EngineRequest
+    pages: list[int]
+    emitted: int
+    tokens: list[int]
+    cur: int
+    pos: int
+    limit: int
+    hist: np.ndarray | None = None
 
 
 def _next_pow2(n: int) -> int:
@@ -307,6 +340,8 @@ class ContinuousBatchingEngine:
         self._hist = jnp.zeros((s, self.hist_len), jnp.int32) \
             if self.spec_decode else None
         self._live: dict[int, _Live] = {}
+        # Preempted requests parked host-side; their pages stay pinned.
+        self._paused: dict[object, PausedRequest] = {}
         # Admission queue, consumed front-first by ``admit``. The caller
         # controls its order: ``generate`` fills it FCFS, the gateway keeps
         # it policy-ordered (EDF within priority class).
@@ -482,7 +517,8 @@ class ContinuousBatchingEngine:
     def _reset_stats(self):
         self.stats = {"admitted": 0, "prefill_tokens": 0, "cached_tokens": 0,
                       "cow_copies": 0, "admit_seconds": 0.0,
-                      "spec_steps": 0, "spec_emitted": 0}
+                      "spec_steps": 0, "spec_emitted": 0,
+                      "preempted": 0, "resumed": 0}
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -747,10 +783,14 @@ class ContinuousBatchingEngine:
 
     # -- invariants (exercised by tests) -------------------------------------
     def _debug_check_refcounts(self) -> None:
-        """Every physical page's refcount == page-table rows referencing it."""
+        """Every physical page's refcount == page-table rows referencing it
+        (a paused request's pinned pages count as one reference each)."""
         counts = np.zeros(self.num_pages, np.int64)
         for live in self._live.values():
             for p in live.pages:
+                counts[p] += 1
+        for paused in self._paused.values():
+            for p in paused.pages:
                 counts[p] += 1
         if not np.array_equal(counts[1:], self.alloc.refs[1:]):
             bad = np.nonzero(counts[1:] != self.alloc.refs[1:])[0] + 1
@@ -795,8 +835,18 @@ class ContinuousBatchingEngine:
         return len(self._live)
 
     @property
+    def paused(self) -> int:
+        return len(self._paused)
+
+    @property
+    def free_slots(self) -> int:
+        """Physically unoccupied decode slots. Paused requests hold pages but
+        no slot, so this is what ``resume`` needs to be positive."""
+        return int(self.max_slots - np.count_nonzero(self._active))
+
+    @property
     def has_work(self) -> bool:
-        return bool(self._queue or self._live)
+        return bool(self._queue or self._live or self._paused)
 
     @property
     def open_slots(self) -> int:
@@ -809,18 +859,94 @@ class ContinuousBatchingEngine:
         """Per live slot, tokens still to emit — scheduling estimates."""
         return [l.req.max_new - l.emitted for l in self._live.values()]
 
+    def preempt(self, slot: int) -> PausedRequest:
+        """Pause the request in ``slot`` mid-stream and free the slot.
+
+        The request's KV pages stay allocated and **pinned**: their
+        refcounts are untouched, so the allocator can never reallocate them
+        (and eviction-on-realloc can never scrub the prefix-cache entries
+        they anchor) however hard later admissions churn the pool. The
+        cursor, emitted-token tally, write limit and — under speculative
+        decode — the slot's drafting-history row park host-side in the
+        returned :class:`PausedRequest`. ``resume`` undoes all of it with
+        zero re-prefill.
+        """
+        if slot not in self._live:
+            raise KeyError(f"slot {slot} has no live request to preempt")
+        live = self._live.pop(slot)
+        hist = np.array(self._hist[slot]) if self.spec_decode else None
+        paused = PausedRequest(
+            req=live.req, pages=live.pages, emitted=live.emitted,
+            tokens=live.tokens, cur=int(self._cur[slot]),
+            pos=int(self._pos[slot]), limit=int(self._limit[slot]),
+            hist=hist)
+        self._paused[live.req.rid] = paused
+        # Identical to _retire EXCEPT the pages are not released: the slot
+        # idles against the sink page while the paused sequence's KV waits.
+        self._active[slot] = False
+        self._page_table[slot] = 0
+        self._pos[slot] = 0
+        self._cur[slot] = 0
+        self._limit[slot] = 0
+        self.stats["preempted"] += 1
+        return paused
+
+    def resume(self, paused: PausedRequest) -> int:
+        """Re-admit a preempted request into a free slot; returns the slot.
+
+        Zero re-prefill: the parked pages are re-attached through the page
+        table, the cursor/limit/history restored, and decoding continues
+        exactly where :meth:`preempt` stopped it — greedy tokens are
+        identical to a never-paused run. Raises ``RuntimeError`` when every
+        slot is occupied (check :attr:`free_slots` first).
+        """
+        if self._paused.get(paused.req.rid) is not paused:
+            raise KeyError(f"request {paused.req.rid} is not paused on this "
+                           "engine")
+        free = [i for i in range(self.max_slots) if not self._active[i]]
+        if not free:
+            raise RuntimeError("no free slot to resume into")
+        slot = free[0]
+        del self._paused[paused.req.rid]
+        row = np.zeros(self.pages_per_seq, np.int32)
+        row[:len(paused.pages)] = paused.pages
+        self._page_table[slot] = row
+        self._active[slot] = True
+        self._pos[slot] = paused.pos
+        self._cur[slot] = paused.cur
+        self._limit[slot] = paused.limit
+        if self.spec_decode:
+            self._hist = self._hist.at[slot].set(jnp.asarray(paused.hist))
+        self._live[slot] = _Live(paused.req, paused.pages, paused.emitted,
+                                 paused.tokens)
+        self.stats["resumed"] += 1
+        return slot
+
+    def drop_queued(self) -> list[EngineRequest]:
+        """Hand back queued-but-unadmitted requests (e.g. transient page
+        pressure); live and paused requests are untouched."""
+        dropped = list(self._queue)
+        self._queue.clear()
+        return dropped
+
     def abort(self) -> list[EngineRequest]:
-        """Drop all live and queued requests and return them for re-enqueue.
+        """Drop all live, paused and queued requests; return them for
+        re-enqueue.
 
         The spot-revocation path: a revoked replica's requests restart from
         scratch on another replica (greedy decode is deterministic, so the
-        retry emits identical tokens). Pages are released through the normal
-        retire path — refcounts stay exact and cached prefixes survive until
-        reallocated.
+        retry emits identical tokens). Pages — including a paused request's
+        pinned pages — are released through the normal refcount path, so
+        refcounts stay exact and cached prefixes survive until reallocated.
         """
         dropped = [self._live[s].req for s in sorted(self._live)]
         for slot in list(self._live):
             self._retire(slot)
+        for paused in self._paused.values():
+            for p in paused.pages:
+                self.alloc.release(p)
+            dropped.append(paused.req)
+        self._paused.clear()
         dropped.extend(self._queue)
         self._queue.clear()
         return dropped

@@ -23,6 +23,16 @@ replicas, so serve traffic gets exactly what batch analytics got:
   hang), and prices requests against their cost budget with
   :mod:`repro.core.cost` instance rates. The engine's ``_admit_wave``
   consumes this policy-ordered queue verbatim.
+- **Decode preemption** (companion paper's interactive analytics): before
+  an interactive request is shed as infeasible, the policy may nominate
+  the latest-deadline running batch-class request for a lossless pause
+  (:meth:`~repro.serve.admission.DeadlineCostPolicy.plan_preemption`) —
+  its engine slot frees immediately, its KV pages stay pinned, and it
+  resumes with zero re-prefill the moment a slot opens (accepted work
+  completes ahead of new admissions, Kotta's queue-watcher promise).
+  Every pause/resume is a typed audit record (``serve:Preempt`` /
+  ``serve:Resume``) and lands in the gateway stats (``preemptions``,
+  ``resumes``, ``preempt_wait_s``).
 - **Elasticity** (§IV-C): replica count follows queue depth through
   :class:`repro.core.elastic.Provisioner`; spot replicas bid into
   :class:`repro.core.market.SpotMarket` and can be **revoked mid-decode**
@@ -44,17 +54,19 @@ from __future__ import annotations
 
 import itertools
 import math
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.clock import Clock, VirtualClock
 from repro.core.cost import ComputePricing
 from repro.core.elastic import Provisioner, ProvisioningModel, ScalingPolicy
 from repro.core.market import SpotMarket
-from repro.core.security import PolicyEngine, SessionToken
+from repro.core.security import (AuditRecord, PolicyEngine, SessionToken)
 
-from .admission import (AdmissionPolicy, DeadlineCostPolicy, JobState,
+from .admission import (AdmissionPolicy, DeadlineCostPolicy,
+                        DeadlineInfeasible, JobState, PreemptCandidate,
                         ServeJob, ServiceModel)
-from .engine import ContinuousBatchingEngine, EngineRequest
+from .engine import ContinuousBatchingEngine, EngineRequest, PausedRequest
 
 
 class _Replica:
@@ -76,6 +88,16 @@ class _Replica:
         # prefill-token watermark: stats are cumulative per engine, and
         # engines are reused across launches (warm pool).
         self.pt_mark = engine.stats["prefill_tokens"]
+
+
+@dataclass
+class _PausedJob:
+    """A decode-preempted job parked on a replica (pages pinned there)."""
+
+    replica: "_Replica"
+    paused: PausedRequest
+    job: ServeJob
+    since: float                    # pause timestamp: added wait accounting
 
 
 class KottaServeGateway:
@@ -122,10 +144,12 @@ class KottaServeGateway:
         self._rids = itertools.count()
         self._replicas: list[_Replica] = []
         self._standby: list[ContinuousBatchingEngine] = []
+        self._paused: list[_PausedJob] = []
         self.stats = {"rounds": 0, "launches": 0, "terminations": 0,
                       "revocations": 0, "requeues": 0, "shed": 0,
                       "tokens": 0, "cost_usd": 0.0, "replica_seconds": 0.0,
-                      "peak_replicas": 0}
+                      "peak_replicas": 0, "preemptions": 0, "resumes": 0,
+                      "preempt_wait_s": 0.0}
 
         # One engine up front: it validates request shapes at submit time
         # and seeds the warm pool; every replica is factory-identical.
@@ -179,7 +203,8 @@ class KottaServeGateway:
 
     def outstanding(self) -> int:
         return sum(1 for j in self.jobs.values()
-                   if j.status in (JobState.QUEUED, JobState.RUNNING))
+                   if j.status in (JobState.QUEUED, JobState.RUNNING,
+                                   JobState.PAUSED))
 
     def drain(self, max_rounds: int = 20_000) -> None:
         """Step until every submitted job is DONE or SHED."""
@@ -192,8 +217,18 @@ class KottaServeGateway:
 
     # -- one scheduling round --------------------------------------------------
     def step(self) -> None:
-        """One gateway round: activate, revoke, shed/order, dispatch, pump,
-        autoscale, bill, and advance the virtual clock."""
+        """One gateway round: activate, revoke, resume, shed/order (which
+        may preempt), dispatch, pump, autoscale, bill, and advance the
+        virtual clock.
+
+        Resume runs BEFORE shed/dispatch: paused jobs are accepted work and
+        re-take freed slots ahead of new admissions (Kotta §IV-D — accepted
+        work is completed, whatever the market or the burst does). A job
+        preempted in this round's shed phase therefore cannot bounce
+        straight back into the slot its preemptor needs — the interactive
+        request is dispatched later the same round, and the victim resumes
+        no earlier than the next round's slot surplus.
+        """
         now = self.clock.now()
         self.stats["rounds"] += 1
         for r in self._replicas:
@@ -201,6 +236,7 @@ class KottaServeGateway:
                 r.state = "live"
                 r.idle_since = now
         self._check_revocations(now)
+        self._resume_paused(now)
         self._shed_and_order(now)
         self._dispatch()
         work_s = self._pump(now)
@@ -259,8 +295,15 @@ class KottaServeGateway:
         raise KeyError(f"no live replica {replica_id}")
 
     def _revoke(self, r: _Replica) -> None:
-        """Spot reclaim: requests restart elsewhere; none are lost."""
+        """Spot reclaim: requests restart elsewhere; none are lost.
+
+        ``abort`` also surrenders the replica's PAUSED requests (their
+        pinned pages die with the instance), so their jobs re-enter the
+        queue alongside the live ones — exempt from shedding, like any
+        revocation casualty.
+        """
         dropped = r.engine.abort()
+        self._paused = [e for e in self._paused if e.replica is not r]
         self._return_to_queue(r, dropped, requeued=True)
         self.stats["revocations"] += 1
         self._retire_replica(r, terminated=False)
@@ -272,6 +315,7 @@ class KottaServeGateway:
             job.status = JobState.QUEUED
             job.requeued = job.requeued or requeued
             job.tokens = None
+            job.started_at = None       # restarts from scratch: TTFT resets
             job.replica = None
             r.jobs.discard(req.rid)
             self._queue.append(job)
@@ -299,11 +343,72 @@ class KottaServeGateway:
             self._queue, self._slot_horizon(now), now,
             self._price_per_slot_hour(now))
         for job, err in shed:
+            # Last resort before shedding a deadline-infeasible request:
+            # pause a running lower-class request (policy's choice) so the
+            # urgent one starts now. Preemption frees a slot, so the job
+            # goes back into the keep set and dispatches this same round.
+            if isinstance(err, DeadlineInfeasible) \
+                    and self._try_preempt(job, now):
+                keep.append(job)
+                continue
             job.status = JobState.SHED
             job.error = err
             job.finished_at = now
             self.stats["shed"] += 1
-        self._queue = keep
+        self._queue = self.admission.order(keep, now)
+
+    # -- decode preemption -------------------------------------------------------
+    def _try_preempt(self, job: ServeJob, now: float) -> bool:
+        """Pause the policy's victim so ``job`` can start now; False if the
+        policy finds no victim that keeps both deadlines."""
+        cands = []
+        for r in self._replicas:
+            if r.state != "live":
+                continue
+            for slot, live in r.engine._live.items():
+                victim = self.jobs.get(live.req.rid)
+                if victim is None:
+                    continue
+                cands.append(PreemptCandidate(
+                    victim, live.req.max_new - live.emitted, r.id, slot))
+        choice = self.admission.plan_preemption(job, cands, now)
+        if choice is None:
+            return False
+        r = next(x for x in self._replicas if x.id == choice.replica_id)
+        paused = r.engine.preempt(choice.slot)
+        victim = choice.job
+        victim.status = JobState.PAUSED
+        self._paused.append(_PausedJob(r, paused, victim, since=now))
+        self.stats["preemptions"] += 1
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=victim.tenant,
+            role_name="serve-gateway", action="serve:Preempt",
+            resource=self.model_resource, decision="allow",
+            detail=f"job {victim.rid} paused (pages pinned, "
+                   f"{choice.remaining_tokens} tokens remaining) to admit "
+                   f"interactive job {job.rid}"))
+        return True
+
+    def _resume_paused(self, now: float) -> None:
+        """Resume paused jobs into freed slots — ahead of new dispatches."""
+        still: list[_PausedJob] = []
+        for entry in self._paused:
+            r = entry.replica
+            if r.state != "live" or not r.engine.free_slots:
+                still.append(entry)
+                continue
+            r.engine.resume(entry.paused)
+            entry.job.status = JobState.RUNNING
+            wait = now - entry.since
+            self.stats["resumes"] += 1
+            self.stats["preempt_wait_s"] += wait
+            self.security.audit.append(AuditRecord(
+                timestamp=now, principal_id=entry.job.tenant,
+                role_name="serve-gateway", action="serve:Resume",
+                resource=self.model_resource, decision="allow",
+                detail=f"job {entry.job.rid} resumed after {wait:.2f}s "
+                       "paused (zero re-prefill)"))
+        self._paused = still
 
     def _dispatch(self) -> None:
         """Hand policy-ordered queue heads to replicas with open slots."""
@@ -335,6 +440,12 @@ class KottaServeGateway:
                 continue
             r.idle_since = None
             eng.admit()
+            for live in eng._live.values():
+                job = self.jobs.get(live.req.rid)
+                if job is not None and job.started_at is None:
+                    # First decode-slot occupancy: the TTFT clock stops here
+                    # (modelled prefill is charged identically either way).
+                    job.started_at = now
             fresh = eng.stats["prefill_tokens"] - r.pt_mark
             r.pt_mark = eng.stats["prefill_tokens"]
             work = self.model.prefill_s(fresh)
@@ -351,10 +462,13 @@ class KottaServeGateway:
                     self.completed_order.append(req.rid)
                     self.stats["tokens"] += len(toks)
             elif eng.queued:
-                # Admission produced nothing (transient page pressure):
-                # give the requests back to the central queue so another
-                # replica — or a later round here — picks them up.
-                self._return_to_queue(r, eng.abort(), requeued=False)
+                # Admission produced nothing (transient page pressure, e.g.
+                # a paused request's pinned pages): give the QUEUED requests
+                # back to the central queue so another replica — or a later
+                # round here — picks them up. drop_queued, not abort: an
+                # abort would also surrender the paused requests parked on
+                # this replica, releasing the very pages they pin.
+                self._return_to_queue(r, eng.drop_queued(), requeued=False)
             round_s = max(round_s, work)
         return round_s
 
@@ -423,9 +537,21 @@ class KottaServeGateway:
         sim_s = self.clock.now() - self._start_time
         # Nearest-rank percentile: ceil(q*n)-1, not int(q*n) (which would
         # report the single worst latency as p95 for any n <= 20).
-        pct = (lambda q: lat[min(max(math.ceil(q * len(lat)) - 1, 0),
-                                 len(lat) - 1)]) \
-            if lat else (lambda q: 0.0)
+        def _pct(xs):
+            return (lambda q: xs[min(max(math.ceil(q * len(xs)) - 1, 0),
+                                     len(xs) - 1)]) \
+                if xs else (lambda q: 0.0)
+        pct = _pct(lat)
+        # Interactive TTFT: queue wait until the first decode-slot
+        # occupancy (modelled prefill excluded — identical across modes).
+        inter = [j for j in self.jobs.values() if j.priority == 0]
+        ittft = _pct(sorted(j.started_at - j.submitted_at
+                            for j in inter
+                            if j.status is JobState.DONE
+                            and j.started_at is not None))
+        idone = [j for j in inter if j.status is JobState.DONE]
+        ihits = sum(1 for j in idone
+                    if j.deadline is None or j.finished_at <= j.deadline)
         return {
             "jobs": len(self.jobs), "completed": len(done),
             "shed": self.stats["shed"],
@@ -440,6 +566,14 @@ class KottaServeGateway:
             "deadline_hit_rate": hits / len(done) if done else 0.0,
             "sla_rate": hits / len(self.jobs) if self.jobs else 0.0,
             "p50_latency_s": pct(0.50), "p95_latency_s": pct(0.95),
+            "interactive_jobs": len(inter),
+            "interactive_completed": len(idone),
+            "interactive_sla_rate": ihits / len(inter) if inter else 0.0,
+            "interactive_p50_ttft_s": ittft(0.50),
+            "interactive_p99_ttft_s": ittft(0.99),
+            "preemptions": self.stats["preemptions"],
+            "resumes": self.stats["resumes"],
+            "preempt_wait_s": self.stats["preempt_wait_s"],
             "revocations": self.stats["revocations"],
             "requeues": self.stats["requeues"],
             "launches": self.stats["launches"],

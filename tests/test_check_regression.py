@@ -1,0 +1,110 @@
+"""CI regression gate: the committed smoke baselines checked against
+themselves pass; synthetic regressions (a 20% decode-tok/s drop, a deadline
+hit-rate drop, a missing metric, a recorded scenario failure) exit nonzero.
+
+Runs the real CLI in a subprocess — exactly what the CI workflow invokes —
+against candidate JSONs derived from the committed baselines, so the gate's
+metric extractors are validated against the real file schema.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "benchmarks" / "check_regression.py"
+SERVE_BASE = REPO / "BENCH_serve.smoke.json"
+GATEWAY_BASE = REPO / "BENCH_gateway.smoke.json"
+
+
+def _run(args):
+    return subprocess.run([sys.executable, str(SCRIPT), *args],
+                          capture_output=True, text=True, timeout=60)
+
+
+def _candidates(tmp_path, serve_edit=None, gateway_edit=None):
+    serve = json.loads(SERVE_BASE.read_text())
+    gateway = json.loads(GATEWAY_BASE.read_text())
+    if serve_edit:
+        serve_edit(serve)
+    if gateway_edit:
+        gateway_edit(gateway)
+    sp = tmp_path / "serve.json"
+    gp = tmp_path / "gateway.json"
+    sp.write_text(json.dumps(serve))
+    gp.write_text(json.dumps(gateway))
+    return ["--serve", str(sp), "--gateway", str(gp)]
+
+
+@pytest.fixture(autouse=True)
+def _needs_baselines():
+    if not (SERVE_BASE.exists() and GATEWAY_BASE.exists()):
+        pytest.skip("committed smoke baselines missing")
+
+
+def test_baseline_vs_itself_passes(tmp_path):
+    res = _run(_candidates(tmp_path))
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "all metrics within tolerance" in res.stdout
+
+
+def test_synthetic_20pct_decode_drop_fails(tmp_path):
+    """The acceptance bar: a 20% decode-tok/s drop must fail the gate (the
+    checker recomputes the speedup from the raw tok/s fields, so editing
+    only the raw field is caught)."""
+    def drop(serve):
+        serve["decode"][0]["continuous_tok_s"] *= 0.8
+    res = _run(_candidates(tmp_path, serve_edit=drop))
+    assert res.returncode != 0, res.stdout
+    assert "decode.continuous_vs_static_speedup" in res.stdout
+    assert "REGRESSION GATE FAILED" in res.stdout
+
+
+def test_deadline_hit_rate_drop_fails(tmp_path):
+    def drop(gateway):
+        gateway["trace"]["elastic"]["deadline_hit_rate"] *= 0.8
+    res = _run(_candidates(tmp_path, gateway_edit=drop))
+    assert res.returncode != 0
+    assert "deadline_hit_rate" in res.stdout
+
+
+def test_preempt_ttft_inflation_fails(tmp_path):
+    """Losing the preemption win (interactive TTFT back to the wait
+    baseline) fails the gate."""
+    def slow(gateway):
+        ib = gateway["interactive_burst"]
+        ib["preempt"]["interactive_p99_ttft_s"] = \
+            ib["no_preempt_wait"]["interactive_p99_ttft_s"]
+        ib["ttft_reduction_s"] = 0.0
+    res = _run(_candidates(tmp_path, gateway_edit=slow))
+    assert res.returncode != 0
+    assert "interactive_burst" in res.stdout
+
+
+def test_missing_metric_fails(tmp_path):
+    """A half-run bench (scenario JSON section absent) must not pass."""
+    def strip(serve):
+        del serve["spec_decode"]
+    res = _run(_candidates(tmp_path, serve_edit=strip))
+    assert res.returncode != 0
+    assert "spec_decode" in res.stdout
+
+
+def test_recorded_scenario_failure_fails(tmp_path):
+    def taint(serve):
+        serve["failures"] = ["decode: RuntimeError: boom"]
+    res = _run(_candidates(tmp_path, serve_edit=taint))
+    assert res.returncode != 0
+    assert "scenario failures" in res.stdout
+
+
+def test_within_tolerance_noise_passes(tmp_path):
+    """Small same-direction noise (5%) stays green — the gate is a
+    regression check, not an exact-match check."""
+    def jitter(serve):
+        serve["decode"][0]["continuous_tok_s"] *= 0.95
+        serve["spec_decode"]["spec_decode_tok_s"] *= 1.05
+    res = _run(_candidates(tmp_path, serve_edit=jitter))
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -1,7 +1,9 @@
 """Kotta serving gateway: security (authorize + audit), tenant-scoped
 prefix-cache isolation, deadline-ordered (EDF) admission across waves,
 typed load-shed rejections, cost-budget rejection, spot revocation with
-lossless requeue, and queue-driven elastic scaling."""
+lossless requeue, queue-driven elastic scaling, and deadline-aware decode
+preemption (pause the latest-deadline batch slot for an infeasible
+interactive request; lossless resume, EDF order preserved)."""
 import jax
 import numpy as np
 import pytest
@@ -17,7 +19,8 @@ from repro.models.params import init_params
 from repro.serve import (ContinuousBatchingEngine, CostBudgetExceeded,
                          DeadlineCostPolicy, DeadlineInfeasible,
                          EngineRequest, JobState, KottaServeGateway,
-                         ServeEngine, ServiceModel)
+                         PreemptCandidate, ServeEngine, ServeJob,
+                         ServiceModel)
 
 MAX_LEN = 48
 SLOTS = 2
@@ -213,6 +216,160 @@ def test_cost_budget_rejection(model):
     gw.drain()
     with pytest.raises(CostBudgetExceeded):
         gw.result(rid)
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware decode preemption
+# ---------------------------------------------------------------------------
+
+def _mid_decode(gw, n_live):
+    """Step until n_live requests are genuinely mid-decode on replica 0."""
+    for _ in range(200):
+        gw.step()
+        live = gw.replicas()
+        if live and live[0].engine.live == n_live and \
+                all(l.emitted > 0 for l in live[0].engine._live.values()):
+            return live[0].engine
+    pytest.fail("never reached mid-decode state")
+
+
+def test_preemption_admits_infeasible_interactive_then_resumes(
+        model, gold_engine):
+    """An interactive request that is infeasible at full batch occupancy
+    preempts a batch slot, completes within its deadline, and the paused
+    batch job resumes losslessly (oracle tokens, zero re-prefill); every
+    pause/resume is audit-logged."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec, engine_kw={"max_slots": 2, "decode_chunk": 2})
+    t = tok["alice"]
+    rng = np.random.RandomState(50)
+    bprompts = [rng.randint(0, cfg.vocab_size, size=6).tolist()
+                for _ in range(2)]
+    b_rids = [gw.submit(t, p, max_new=24, deadline_s=3600.0, priority=1)
+              for p in bprompts]
+    eng = _mid_decode(gw, 2)
+    pf_mark = eng.stats["prefill_tokens"]
+
+    # 24 steps at 0.05 s/step hold both slots ~1.2 s: a 0.5 s interactive
+    # deadline is infeasible by waiting, feasible with an instant start.
+    iprompt = rng.randint(0, cfg.vocab_size, size=5).tolist()
+    i_rid = gw.submit(t, iprompt, max_new=4, deadline_s=0.5, priority=0)
+    saw_paused = False
+    for _ in range(2_000):
+        if not gw.outstanding():
+            break
+        gw.step()
+        saw_paused = saw_paused or any(j.status is JobState.PAUSED
+                                       for j in gw.jobs.values())
+    m = gw.metrics()
+    assert saw_paused
+    assert m["completed"] == 3 and m["shed"] == 0
+    assert m["preemptions"] == 1 and m["resumes"] == 1
+    assert m["preempt_wait_s"] > 0.0
+    assert m["deadline_hit_rate"] == 1.0
+    assert m["interactive_sla_rate"] == 1.0
+    assert gw.completed_order[0] == i_rid
+    # Lossless: the preempted batch job's tokens match an uninterrupted
+    # run, and its pause cost no re-prefill (only the interactive admission
+    # prefilled anything after the mark).
+    for rid, p in zip(b_rids, bprompts):
+        gold = gold_engine.generate([p], max_new=24).tokens[0]
+        np.testing.assert_array_equal(gold,
+                                      np.asarray(gw.result(rid), np.int32))
+    assert eng.stats["prefill_tokens"] - pf_mark == len(iprompt)
+    # Typed accounting in the audit stream.
+    assert len([r for r in sec.audit.records()
+                if r.action == "serve:Preempt"]) == 1
+    assert len([r for r in sec.audit.records()
+                if r.action == "serve:Resume"]) == 1
+
+
+def test_edf_order_preserved_across_preempt_resume(model):
+    """The LATEST-deadline batch job is the victim, and completion order
+    stays EDF-consistent across the preempt/resume cycle: interactive
+    first, then the earlier-deadline batch job, then the resumed victim."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec, engine_kw={"max_slots": 2, "decode_chunk": 2})
+    t = tok["alice"]
+    p = _prompt(cfg, 6, seed=51)
+    early = gw.submit(t, p, max_new=20, deadline_s=500.0, priority=1)
+    late = gw.submit(t, p, max_new=20, deadline_s=900.0, priority=1)
+    _mid_decode(gw, 2)
+    i_rid = gw.submit(t, _prompt(cfg, 5, seed=52), max_new=4,
+                      deadline_s=0.5, priority=0)
+    paused_rid = None
+    for _ in range(2_000):
+        if not gw.outstanding():
+            break
+        gw.step()
+        for j in gw.jobs.values():
+            if j.status is JobState.PAUSED:
+                paused_rid = j.rid
+    assert paused_rid == late                # latest deadline pays the wait
+    assert gw.completed_order == [i_rid, early, late]
+    m = gw.metrics()
+    assert m["preemptions"] == 1 and m["deadline_hit_rate"] == 1.0
+
+
+def test_preemption_disabled_sheds_instead(model):
+    """DeadlineCostPolicy(preempt=False): the same infeasible interactive
+    request is shed with the typed rejection, and no job is ever paused."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    svc = ServiceModel(decode_step_s=0.05)
+    gw = _gateway(model, sec, engine_kw={"max_slots": 2, "decode_chunk": 2},
+                  service_model=svc,
+                  admission=DeadlineCostPolicy(model=svc, preempt=False))
+    t = tok["alice"]
+    p = _prompt(cfg, 6, seed=53)
+    b_rids = [gw.submit(t, p, max_new=24, deadline_s=3600.0, priority=1)
+              for _ in range(2)]
+    _mid_decode(gw, 2)
+    i_rid = gw.submit(t, _prompt(cfg, 5, seed=54), max_new=4,
+                      deadline_s=0.5, priority=0)
+    gw.drain()
+    assert gw.jobs[i_rid].status is JobState.SHED
+    with pytest.raises(DeadlineInfeasible):
+        gw.result(i_rid)
+    m = gw.metrics()
+    assert m["preemptions"] == 0 and m["resumes"] == 0
+    assert m["completed"] == 2 and m["shed"] == 1
+    assert all(gw.jobs[r].status is JobState.DONE for r in b_rids)
+
+
+def test_plan_preemption_respects_both_deadlines():
+    """Unit: the policy only nominates a victim when the interactive job
+    meets its deadline from an instant start AND the victim still meets its
+    own after a zero-re-prefill resume; the latest-deadline victim wins."""
+    policy = DeadlineCostPolicy(model=ServiceModel(prefill_tok_per_s=1e9,
+                                                   decode_step_s=1.0))
+    now = 100.0
+    job = ServeJob(rid=9, tenant="a", prompt=[1] * 4, max_new=2,
+                   submitted_at=now, deadline=now + 3.0, priority=0)
+
+    def cand(rid, deadline, remaining, priority=1):
+        return PreemptCandidate(
+            ServeJob(rid=rid, tenant="a", prompt=[1], max_new=8,
+                     submitted_at=0.0, deadline=deadline, priority=priority),
+            remaining_tokens=remaining, replica_id=0, slot=rid)
+
+    tight = cand(1, now + 4.0, 5)       # resume at 107 > 104: protected
+    loose = cand(2, now + 100.0, 5)     # resume at 107 < 200: eligible
+    loosest = cand(3, now + 200.0, 5)   # latest deadline: the pick
+    peer = cand(4, None, 5, priority=0)  # same class: never preempted
+    pick = policy.plan_preemption(job, [tight, loose, loosest, peer], now)
+    assert pick is loosest
+    # No eligible victim -> None (shed proceeds).
+    assert policy.plan_preemption(job, [tight, peer], now) is None
+    # Interactive job hopeless even with an instant start -> None.
+    hopeless = ServeJob(rid=10, tenant="a", prompt=[1] * 4, max_new=2,
+                        submitted_at=now, deadline=now + 1.0, priority=0)
+    assert policy.plan_preemption(hopeless, [loosest], now) is None
+    # Knob off -> None.
+    off = DeadlineCostPolicy(model=policy.model, preempt=False)
+    assert off.plan_preemption(job, [loosest], now) is None
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,9 @@
 """Serve-engine lifecycle: paged chunked prefill vs the dense-prefill oracle,
 copy-on-write prefix sharing, same-wave prefix dedup, refcount invariants,
 page reuse across retire/readmit, eviction-on-realloc, exhaustion mid-wave,
-up-front capacity validation, speculative decode token-identity, and the
-one-compile guarantees for the decode/verify/prefill hot paths."""
+up-front capacity validation, speculative decode token-identity, lossless
+decode preemption (pause/resume with pinned pages and zero re-prefill), and
+the one-compile guarantees for the decode/verify/prefill hot paths."""
 import jax
 import numpy as np
 import pytest
@@ -586,6 +587,139 @@ def test_engine_config_bounds_validated_at_construction(model):
     # K=3 -> (K+1)*G = 8: tile fits, construction succeeds.
     mk(cfg.replace(attn_impl="pallas"), enable_spec_decode=True,
        spec_tokens=3)
+
+
+# ---------------------------------------------------------------------------
+# Decode preemption: lossless pause/resume with pinned pages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [False, True])
+def test_preempt_resume_token_identity_zero_reprefill(model, gold_engine,
+                                                      spec):
+    """A paused-then-resumed request emits EXACTLY the tokens of a
+    never-paused run — with and without speculative decode — and resume
+    re-prefills NOTHING (prefill_tokens is asserted flat across it)."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [5, 9, 13], seed=40)
+    gold = _gold(gold_engine, prompts, 10)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=2,
+                                   enable_spec_decode=spec, spec_tokens=4)
+    for rid, p in enumerate(prompts[:2]):
+        eng.enqueue(EngineRequest(rid, list(p), 10))
+    eng.admit()
+    done = {}
+    for req, toks in eng.decode_step():
+        done[req.rid] = toks
+    slot0 = next(s for s, l in eng._live.items() if l.req.rid == 0)
+    paused = eng.preempt(slot0)
+    assert 0 < paused.emitted < 10          # genuinely mid-stream
+    assert eng.free_slots == 1 and eng.paused == 1
+    eng._debug_check_refcounts()            # pinned pages are counted
+
+    # The freed slot admits a new request while rid 0 stays parked.
+    eng.enqueue(EngineRequest(2, list(prompts[2]), 10))
+    eng.admit()
+    assert eng.live == 2
+    pf_mark = eng.stats["prefill_tokens"]
+    resumed = False
+    for _ in range(200):
+        for req, toks in eng.decode_step():
+            done[req.rid] = toks
+        if not resumed and eng.free_slots > 0:
+            eng.resume(paused)
+            resumed = True
+            # Zero re-prefill: resume re-attached pages via the page table.
+            assert eng.stats["prefill_tokens"] == pf_mark
+            assert eng.stats["resumed"] == 1
+        eng._debug_check_refcounts()
+        if len(done) == 3 and not eng.has_work:
+            break
+    assert resumed and len(done) == 3
+    got = np.stack([np.asarray(done[i], np.int32) for i in range(3)])
+    np.testing.assert_array_equal(gold, got)
+    assert eng.alloc.available() == eng.num_pages - 1
+
+
+def test_preempted_pages_pinned_under_eviction_pressure(model, gold_engine):
+    """However hard admissions churn the pool while a request is paused,
+    its pinned pages are never reallocated (refcounts >= 1 throughout) and
+    its cached prefix entries survive while OTHER retired pages are
+    evicted; the resumed request still emits oracle tokens."""
+    cfg, params = model
+    rng = np.random.RandomState(41)
+    donor = rng.randint(0, cfg.vocab_size, size=10).tolist()
+    gold_d = _gold(gold_engine, [donor], 6)
+    # 8 usable pages: donor (10+6 tok) pins 2; each flusher (20/21+4 tok)
+    # takes 3-4, so two flusher rounds must recycle every free page.
+    eng = ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=2,
+                                   num_pages=8, prefill_chunk=8,
+                                   decode_chunk=2)
+    eng.enqueue(EngineRequest("donor", list(donor), 6))
+    eng.admit()
+    eng.decode_step()
+    paused = eng.preempt(next(iter(eng._live)))
+    pinned = list(paused.pages)
+    assert all(eng.alloc.refs[p] == 1 for p in pinned)
+
+    first_flush = None
+    for i in range(3):                      # churn: realloc every free page
+        flush = rng.randint(0, cfg.vocab_size, size=20 + i % 2).tolist()
+        if first_flush is None:
+            first_flush = flush
+        eng.enqueue(EngineRequest(f"flush{i}", flush, 4))
+        eng.admit()
+        while eng.live:
+            eng.decode_step()
+            eng._debug_check_refcounts()
+        assert all(eng.alloc.refs[p] >= 1 for p in pinned)  # still pinned
+    # Eviction pressure was real: the first flusher's retired pages were
+    # reallocated and its cache entries scrubbed ...
+    assert eng.prefix_cache.lookup(first_flush)[1] == 0
+    # ... while the paused donor's pinned pages stayed hittable.
+    assert eng.prefix_cache.lookup(donor)[0] == pinned[:len(
+        eng.prefix_cache.lookup(donor)[0])]
+
+    eng.resume(paused)
+    done = {}
+    while eng.has_work:
+        for req, toks in eng.decode_step():
+            done[req.rid] = toks
+        eng._debug_check_refcounts()
+    np.testing.assert_array_equal(gold_d[0], np.asarray(done["donor"]))
+    assert eng.alloc.available() == eng.num_pages - 1
+
+
+def test_preempt_resume_errors_and_abort_releases_pins(model):
+    """Bad preempt/resume calls fail typed; abort surrenders paused
+    requests and releases their pinned pages."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=2)
+    with pytest.raises(KeyError, match="no live request"):
+        eng.preempt(0)
+    prompts = _prompts(cfg.vocab_size, [6, 9], seed=42)
+    for rid, p in enumerate(prompts):
+        eng.enqueue(EngineRequest(rid, p, 8))
+    eng.admit()
+    eng.decode_step()
+    paused = eng.preempt(0)
+    eng.resume(paused)
+    with pytest.raises(KeyError, match="not paused"):
+        eng.resume(paused)                  # double-resume guard
+    # Re-preempt and fill every slot: resume must refuse, not clobber.
+    paused = eng.preempt(next(iter(eng._live)))
+    eng.enqueue(EngineRequest(2, prompts[0], 8))
+    eng.enqueue(EngineRequest(3, prompts[1], 8))
+    eng.admit()
+    assert eng.free_slots == 0
+    with pytest.raises(RuntimeError, match="no free slot"):
+        eng.resume(paused)
+    dropped = eng.abort()                   # paused req included, pins freed
+    assert any(r.rid == paused.req.rid for r in dropped)
+    assert not eng.has_work and eng.paused == 0
+    assert eng.alloc.available() == eng.num_pages - 1
+    eng._debug_check_refcounts()
 
 
 # ---------------------------------------------------------------------------
