@@ -55,6 +55,26 @@ def _spec_speedup(r: dict) -> float:
     return s["spec_decode_tok_s"] / s["base_decode_tok_s"]
 
 
+def _adaptive_vs_spec(r: dict) -> float:
+    s = r["spec_decode"]
+    return s["adaptive_decode_tok_s"] / s["spec_decode_tok_s"]
+
+
+def _low_accept_adaptive_vs_spec(r: dict) -> float:
+    s = r["spec_low_accept"]
+    return s["adaptive_decode_tok_s"] / s["spec_decode_tok_s"]
+
+
+def _kv_tok_s_ratio(r: dict) -> float:
+    q = r["quantized_kv"]
+    return q["int8_decode_tok_s"] / q["f32_decode_tok_s"]
+
+
+def _kv_capacity_ratio(r: dict) -> float:
+    q = r["quantized_kv"]
+    return q["f32_bytes_per_slot_token"] / q["int8_bytes_per_slot_token"]
+
+
 @dataclass(frozen=True)
 class Metric:
     """One gated metric.
@@ -85,6 +105,19 @@ METRICS = [
            lambda r: r["spec_decode"]["mean_accepted_len"], "higher", 0.35),
     Metric("serve", "shared_prefix.hit_rate",
            lambda r: r["shared_prefix"]["prefix_hit_rate"], "higher", 0.05),
+    # Adaptive speculation must track fixed-K on the high-acceptance
+    # workload and hold its recovery on the adversarial one.
+    Metric("serve", "spec_decode.adaptive_vs_spec", _adaptive_vs_spec,
+           "higher", 0.35),
+    Metric("serve", "spec_low_accept.adaptive_vs_spec",
+           _low_accept_adaptive_vs_spec, "higher", 0.25),
+    # int8 KV: decode-rate ratio is host-noisy (0.35 band); the capacity
+    # ratio is a pure layout property — any drift (dropped scale page,
+    # widened dtype) is a bug, so it gates exactly.
+    Metric("serve", "quantized_kv.tok_s_ratio", _kv_tok_s_ratio,
+           "higher", 0.35),
+    Metric("serve", "quantized_kv.capacity_ratio", _kv_capacity_ratio,
+           "higher", 0.0),
     # -- gateway smoke: virtual-clock, host-independent ---------------------
     Metric("gateway", "trace.cost_ratio_static_over_elastic",
            lambda r: r["trace"]["cost_ratio_static_over_elastic"],

@@ -101,6 +101,21 @@ class ModelConfig:
     decode_chunk_tokens: int = 256   # target slots * decode_chunk product
     decode_chunk_min: int = 8
     decode_chunk_max: int = 32
+    # Paged KV pool storage dtype: "f32" keeps pages in the compute dtype
+    # (the exact baseline path); "int8" stores pages as symmetric per-row
+    # int8 with an f32 scale per (layer, kv-head, page, row) — the paged
+    # attention kernels dequantize inside their K/V tile loads with f32
+    # accumulation, so the pool holds ~3.9x the tokens per HBM byte at
+    # hd=128 while greedy decode stays token-identical on the parity suite
+    # (tests/test_kv_parity.py). Opt-in: "f32" is byte-identical to the
+    # pre-quantization engine.
+    kv_cache_dtype: str = "f32"
+    # Per-slot adaptive speculation: each slot carries an accept-rate EMA
+    # and shrinks/grows its draft window within 1..spec_tokens so verify
+    # FLOPs track acceptance instead of paying K+1 query rows for slots
+    # that accept nothing. Greedy outputs stay token-identical for ANY
+    # window schedule (accepted prefixes are exact greedy matches).
+    spec_adaptive_k: bool = False
 
     # --- modality frontend stub (audio / vlm) ---------------------------------
     frontend: str = ""               # "" | "frame" | "patch"
@@ -126,6 +141,9 @@ class ModelConfig:
         if self.num_heads % max(self.num_kv_heads, 1):
             raise ValueError(f"{self.name}: heads {self.num_heads} not a multiple "
                              f"of kv heads {self.num_kv_heads}")
+        if self.kv_cache_dtype not in ("f32", "int8"):
+            raise ValueError(f"{self.name}: kv_cache_dtype must be 'f32' or "
+                             f"'int8', got {self.kv_cache_dtype!r}")
 
     # -- dtypes -------------------------------------------------------------
     @property

@@ -10,6 +10,7 @@ dispatch is selected by ``ModelConfig.attn_impl="pallas"``.
 from .decode_attention import (flash_decode, paged_decode_attention,
                                paged_decode_reference)
 from .flash_attention import attention_reference, flash_attention
+from .kv_quant import dequantize_rows, quantize_pool, quantize_rows
 from .mamba_scan import mamba_chunk_scan, ssd_reference
 from .prefill_attention import (flash_prefill, paged_prefill_attention,
                                 paged_prefill_reference)
@@ -22,4 +23,5 @@ __all__ = ["flash_attention", "attention_reference", "mamba_chunk_scan",
            "paged_decode_attention", "paged_decode_reference",
            "flash_prefill", "paged_prefill_attention",
            "paged_prefill_reference", "flash_verify",
-           "paged_verify_attention", "paged_verify_reference"]
+           "paged_verify_attention", "paged_verify_reference",
+           "quantize_rows", "dequantize_rows", "quantize_pool"]

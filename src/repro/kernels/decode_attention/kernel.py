@@ -38,9 +38,16 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
-                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                         scale: float, page_size: int, pages_per_split: int):
+def _flash_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         scale: float, page_size: int, pages_per_split: int,
+                         quantized: bool = False):
+    # ``quantized`` prepends per-row scale-page refs (see kernels/kv_quant):
+    # K/V tiles arrive int8 and are dequantized in-register at load, so the
+    # online-softmax body below is shared verbatim between both layouts.
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     pp = pl.program_id(2)          # split index
     pi = pl.program_id(3)          # page-within-split (innermost, sequential)
@@ -60,6 +67,9 @@ def _flash_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, hd)
         k = k_ref[0, 0].astype(jnp.float32)                # (ps, hd)
         v = v_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        if quantized:
+            k = k * ks_ref[0, 0][:, None]                  # f32 dequant
+            v = v * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         pos = start + jax.lax.broadcasted_iota(
@@ -84,9 +94,12 @@ def _flash_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
 
 
 def flash_decode_fwd(q, k_pages, v_pages, page_table, lengths, *,
+                     k_scale=None, v_scale=None,
                      num_splits: int = 1, interpret: bool = False):
     """q: (B,H,hd); k/v_pages: (KV,P,ps,hd); page_table: (B,npages) int32;
-    lengths: (B,) int32 -> (B,H,hd)."""
+    lengths: (B,) int32 -> (B,H,hd). ``k_scale``/``v_scale``: optional
+    (KV,P,ps) f32 per-row scale pages for an int8 pool — the kernel then
+    dequantizes each K/V tile at load (f32 accumulation throughout)."""
     b, h, hd = q.shape
     nkv, _, page_size, _ = k_pages.shape
     g = h // nkv
@@ -95,6 +108,7 @@ def flash_decode_fwd(q, k_pages, v_pages, page_table, lengths, *,
         raise ValueError(f"npages {npages} % num_splits {num_splits}")
     pps = npages // num_splits
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
 
     # Clamp table entries so masked-out pages still DMA a valid physical page.
     pt = jnp.clip(page_table.astype(jnp.int32), 0, k_pages.shape[1] - 1)
@@ -102,20 +116,31 @@ def flash_decode_fwd(q, k_pages, v_pages, page_table, lengths, *,
 
     grid = (b, nkv, num_splits, pps)
     kernel = functools.partial(_flash_decode_kernel, scale=scale,
-                               page_size=page_size, pages_per_split=pps)
+                               page_size=page_size, pages_per_split=pps,
+                               quantized=quantized)
 
     def page_index(bi, kv, sp, pi, pt_ref, len_ref):
         return (kv, pt_ref[bi, sp * pps + pi], 0, 0)
 
+    def scale_index(bi, kv, sp, pi, pt_ref, len_ref):
+        # Scale pages drop the trailing hd axis but share the page map.
+        return (kv, pt_ref[bi, sp * pps + pi], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd),
+                     lambda bi, kv, sp, pi, pt, ln: (bi, kv, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, hd), page_index),
+        pl.BlockSpec((1, 1, page_size, hd), page_index),
+    ]
+    inputs = [qr, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, page_size), scale_index)] * 2
+        inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd),
-                         lambda bi, kv, sp, pi, pt, ln: (bi, kv, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, hd), page_index),
-            pl.BlockSpec((1, 1, page_size, hd), page_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, g, hd),
                          lambda bi, kv, sp, pi, pt, ln: (bi, kv, sp, 0, 0)),
@@ -139,7 +164,7 @@ def flash_decode_fwd(q, k_pages, v_pages, page_table, lengths, *,
             jax.ShapeDtypeStruct((b, nkv, num_splits, g), jnp.float32),
         ],
         interpret=interpret,
-    )(pt, lengths.astype(jnp.int32), qr, k_pages, v_pages)
+    )(pt, lengths.astype(jnp.int32), *inputs)
 
     # Associative split combine (FlashDecoding reduction), fp32.
     m_star = jnp.max(m_part, axis=2, keepdims=True)            # (B,KV,1,G)

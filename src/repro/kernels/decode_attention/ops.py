@@ -18,8 +18,10 @@ from .ref import paged_decode_reference
 
 @partial(jax.jit, static_argnames=("num_splits", "interpret"))
 def flash_decode(q, k_pages, v_pages, page_table, lengths, *,
+                 k_scale=None, v_scale=None,
                  num_splits: int = 1, interpret: bool = False):
     return flash_decode_fwd(q, k_pages, v_pages, page_table, lengths,
+                            k_scale=k_scale, v_scale=v_scale,
                             num_splits=num_splits, interpret=interpret)
 
 
@@ -44,12 +46,20 @@ def default_num_splits(npages: int, target: int = 4, *, batch: int = 0,
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           k_scale=None, v_scale=None,
                            impl: str = "pallas", split_budget: int = 32):
-    """Paged GQA decode attention with backend dispatch (see module doc)."""
+    """Paged GQA decode attention with backend dispatch (see module doc).
+
+    ``k_scale``/``v_scale``: per-row scale pages for an int8 pool; both
+    backends dequantize with identical f32 arithmetic (kernel: per tile
+    load; reference: whole pool up front).
+    """
     if impl == "pallas" and jax.default_backend() == "tpu":
         splits = default_num_splits(page_table.shape[1],
                                     batch=page_table.shape[0],
                                     split_budget=split_budget)
         return flash_decode_fwd(q, k_pages, v_pages, page_table, lengths,
+                                k_scale=k_scale, v_scale=v_scale,
                                 num_splits=splits)
-    return paged_decode_reference(q, k_pages, v_pages, page_table, lengths)
+    return paged_decode_reference(q, k_pages, v_pages, page_table, lengths,
+                                  k_scale=k_scale, v_scale=v_scale)

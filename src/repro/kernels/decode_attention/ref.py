@@ -24,7 +24,19 @@ def gather_pages(pages, page_table):
     return seq.reshape(b, npages * ps, nkv, hd)
 
 
-def paged_decode_reference(q, k_pages, v_pages, page_table, lengths):
+def dequant_pages(pages, scale):
+    """Dequantize an int8 pool up front: (KV,P,ps,hd) int8 * (KV,P,ps) f32.
+
+    This defines the int8 semantics the Pallas kernels must reproduce
+    tightly (they dequantize per K/V tile load instead, with identical
+    arithmetic); the looser int8-vs-f32 output error is governed by the
+    tiered bounds in tests/test_kv_parity.py.
+    """
+    return pages.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def paged_decode_reference(q, k_pages, v_pages, page_table, lengths,
+                           k_scale=None, v_scale=None):
     """Single-step GQA attention over a paged KV cache.
 
     q: (B, H, hd) — the new token's queries.
@@ -33,11 +45,16 @@ def paged_decode_reference(q, k_pages, v_pages, page_table, lengths):
         physical page ``page_table[b, i]``.
     lengths: (B,) int32 — valid KV rows per request (cache slots >= length
         are masked; ragged batches need no host-side padding).
+    k_scale/v_scale: optional (KV, P, page_size) f32 per-row scales for an
+        int8 pool (see :mod:`repro.kernels.kv_quant`).
     Returns (B, H, hd).
     """
     b, h, hd = q.shape
     nkv = k_pages.shape[0]
     g = h // nkv
+    if k_scale is not None:
+        k_pages = dequant_pages(k_pages, k_scale)
+        v_pages = dequant_pages(v_pages, v_scale)
     k = gather_pages(k_pages, page_table)            # (B, T, KV, hd)
     v = gather_pages(v_pages, page_table)
     t = k.shape[1]

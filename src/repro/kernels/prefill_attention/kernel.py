@@ -39,10 +39,16 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_prefill_kernel(pt_ref, qs_ref, q_ref, k_ref, v_ref, o_ref,
-                          m_scr, l_scr, acc_scr, *,
+def _flash_prefill_kernel(pt_ref, qs_ref, q_ref, k_ref, v_ref, *rest,
                           scale: float, page_size: int, group: int,
-                          chunk: int):
+                          chunk: int, quantized: bool = False):
+    # ``quantized`` prepends per-row scale-page refs (see kernels/kv_quant):
+    # K/V tiles arrive int8 and are dequantized in-register at load, so the
+    # online-softmax body below is shared verbatim between both layouts.
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     pi = pl.program_id(2)          # logical page (innermost, sequential)
     start = pi * page_size
@@ -60,6 +66,9 @@ def _flash_prefill_kernel(pt_ref, qs_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale        # (C*G, hd)
         k = k_ref[0, 0].astype(jnp.float32)                # (ps, hd)
         v = v_ref[0, 0].astype(jnp.float32)                # (ps, hd)
+        if quantized:
+            k = k * ks_ref[0, 0][:, None]                  # f32 dequant
+            v = v * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         rows = q.shape[0]
@@ -84,14 +93,17 @@ def _flash_prefill_kernel(pt_ref, qs_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start, *,
-                      interpret: bool = False):
+                      k_scale=None, v_scale=None, interpret: bool = False):
     """q: (B,C,H,hd); k/v_pages: (KV,P,ps,hd); page_table: (B,npages) int32;
-    q_start: (B,) int32 -> (B,C,H,hd)."""
+    q_start: (B,) int32 -> (B,C,H,hd). ``k_scale``/``v_scale``: optional
+    (KV,P,ps) f32 per-row scale pages for an int8 pool — the kernel then
+    dequantizes each K/V tile at load (f32 accumulation throughout)."""
     b, c, h, hd = q.shape
     nkv, _, page_size, _ = k_pages.shape
     g = h // nkv
     npages = page_table.shape[1]
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
 
     # Clamp table entries so skipped pages still DMA a valid physical page.
     pt = jnp.clip(page_table.astype(jnp.int32), 0, k_pages.shape[1] - 1)
@@ -100,20 +112,31 @@ def flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start, *,
 
     grid = (b, nkv, npages)
     kernel = functools.partial(_flash_prefill_kernel, scale=scale,
-                               page_size=page_size, group=g, chunk=c)
+                               page_size=page_size, group=g, chunk=c,
+                               quantized=quantized)
 
     def page_index(bi, kv, pi, pt_ref, qs_ref):
         return (kv, pt_ref[bi, pi], 0, 0)
 
+    def scale_index(bi, kv, pi, pt_ref, qs_ref):
+        # Scale pages drop the trailing hd axis but share the page map.
+        return (kv, pt_ref[bi, pi], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, c * g, hd),
+                     lambda bi, kv, pi, pt, qs: (bi, kv, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, hd), page_index),
+        pl.BlockSpec((1, 1, page_size, hd), page_index),
+    ]
+    inputs = [qr, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, page_size), scale_index)] * 2
+        inputs += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, c * g, hd),
-                         lambda bi, kv, pi, pt, qs: (bi, kv, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, hd), page_index),
-            pl.BlockSpec((1, 1, page_size, hd), page_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, c * g, hd),
                                lambda bi, kv, pi, pt, qs: (bi, kv, 0, 0)),
         scratch_shapes=[
@@ -127,7 +150,7 @@ def flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, c * g, hd), jnp.float32),
         interpret=interpret,
-    )(pt, q_start.astype(jnp.int32), qr, k_pages, v_pages)
+    )(pt, q_start.astype(jnp.int32), *inputs)
 
     out = out.reshape(b, nkv, c, g, hd).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, c, h, hd).astype(q.dtype)

@@ -18,14 +18,22 @@ from .ref import paged_prefill_reference
 
 @partial(jax.jit, static_argnames=("interpret",))
 def flash_prefill(q, k_pages, v_pages, page_table, q_start, *,
-                  interpret: bool = False):
+                  k_scale=None, v_scale=None, interpret: bool = False):
     return flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start,
+                             k_scale=k_scale, v_scale=v_scale,
                              interpret=interpret)
 
 
 def paged_prefill_attention(q, k_pages, v_pages, page_table, q_start, *,
+                            k_scale=None, v_scale=None,
                             impl: str = "pallas"):
-    """Paged chunked-prefill GQA attention with backend dispatch."""
+    """Paged chunked-prefill GQA attention with backend dispatch.
+
+    ``k_scale``/``v_scale``: per-row scale pages for an int8 pool; both
+    backends dequantize with identical f32 arithmetic.
+    """
     if impl == "pallas" and jax.default_backend() == "tpu":
-        return flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start)
-    return paged_prefill_reference(q, k_pages, v_pages, page_table, q_start)
+        return flash_prefill_fwd(q, k_pages, v_pages, page_table, q_start,
+                                 k_scale=k_scale, v_scale=v_scale)
+    return paged_prefill_reference(q, k_pages, v_pages, page_table, q_start,
+                                   k_scale=k_scale, v_scale=v_scale)

@@ -15,12 +15,13 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ref import gather_pages
+from repro.kernels.decode_attention.ref import dequant_pages, gather_pages
 
 MASK_VALUE = -1e30
 
 
-def paged_prefill_reference(q, k_pages, v_pages, page_table, q_start):
+def paged_prefill_reference(q, k_pages, v_pages, page_table, q_start,
+                            k_scale=None, v_scale=None):
     """Chunked-prefill GQA attention over a paged KV cache.
 
     q: (B, C, H, hd) — RoPE'd queries for one chunk of C prompt tokens.
@@ -28,12 +29,17 @@ def paged_prefill_reference(q, k_pages, v_pages, page_table, q_start):
         this chunk's own KV rows already written.
     page_table: (B, npages) int32 — per-request logical->physical page map.
     q_start: (B,) int32 — global position of ``q[:, 0]`` per request.
+    k_scale/v_scale: optional (KV, P, page_size) f32 per-row scales for an
+        int8 pool (see :mod:`repro.kernels.kv_quant`).
     Returns (B, C, H, hd). Rows past a request's real prompt length produce
     garbage (their keys were routed to the sink page); callers discard them.
     """
     b, c, h, hd = q.shape
     nkv = k_pages.shape[0]
     g = h // nkv
+    if k_scale is not None:
+        k_pages = dequant_pages(k_pages, k_scale)
+        v_pages = dequant_pages(v_pages, v_scale)
     k = gather_pages(k_pages, page_table)            # (B, T, KV, hd)
     v = gather_pages(v_pages, page_table)
     t = k.shape[1]

@@ -20,18 +20,27 @@ from .ref import paged_verify_reference
 
 @partial(jax.jit, static_argnames=("num_splits", "interpret"))
 def flash_verify(q, k_pages, v_pages, page_table, pos, *,
+                 k_scale=None, v_scale=None,
                  num_splits: int = 1, interpret: bool = False):
     return flash_verify_fwd(q, k_pages, v_pages, page_table, pos,
+                            k_scale=k_scale, v_scale=v_scale,
                             num_splits=num_splits, interpret=interpret)
 
 
 def paged_verify_attention(q, k_pages, v_pages, page_table, pos, *,
+                           k_scale=None, v_scale=None,
                            impl: str = "pallas", split_budget: int = 32):
-    """Paged multi-query verify GQA attention with backend dispatch."""
+    """Paged multi-query verify GQA attention with backend dispatch.
+
+    ``k_scale``/``v_scale``: per-row scale pages for an int8 pool; both
+    backends dequantize with identical f32 arithmetic.
+    """
     if impl == "pallas" and jax.default_backend() == "tpu":
         splits = default_num_splits(page_table.shape[1],
                                     batch=page_table.shape[0],
                                     split_budget=split_budget)
         return flash_verify_fwd(q, k_pages, v_pages, page_table, pos,
+                                k_scale=k_scale, v_scale=v_scale,
                                 num_splits=splits)
-    return paged_verify_reference(q, k_pages, v_pages, page_table, pos)
+    return paged_verify_reference(q, k_pages, v_pages, page_table, pos,
+                                  k_scale=k_scale, v_scale=v_scale)

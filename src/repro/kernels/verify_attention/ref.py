@@ -19,12 +19,13 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ref import gather_pages
+from repro.kernels.decode_attention.ref import dequant_pages, gather_pages
 
 MASK_VALUE = -1e30
 
 
-def paged_verify_reference(q, k_pages, v_pages, page_table, pos):
+def paged_verify_reference(q, k_pages, v_pages, page_table, pos,
+                           k_scale=None, v_scale=None):
     """Multi-query GQA attention over a paged KV cache (speculative verify).
 
     q: (B, T, H, hd) — RoPE'd queries for the draft window.
@@ -33,12 +34,17 @@ def paged_verify_reference(q, k_pages, v_pages, page_table, pos):
     page_table: (B, npages) int32 — per-request logical->physical page map.
     pos: (B,) int32 — global position of ``q[:, 0]`` per request (the cache
         holds [0, pos) verified rows plus the freshly written draft rows).
+    k_scale/v_scale: optional (KV, P, page_size) f32 per-row scales for an
+        int8 pool (see :mod:`repro.kernels.kv_quant`).
     Returns (B, T, H, hd). Rows whose KV writes were routed to the sink page
     (past a slot's budget) produce garbage; callers discard them.
     """
     b, t, h, hd = q.shape
     nkv = k_pages.shape[0]
     g = h // nkv
+    if k_scale is not None:
+        k_pages = dequant_pages(k_pages, k_scale)
+        v_pages = dequant_pages(v_pages, v_scale)
     k = gather_pages(k_pages, page_table)            # (B, S, KV, hd)
     v = gather_pages(v_pages, page_table)
     s_len = k.shape[1]

@@ -74,7 +74,10 @@ def _run_gateway(cfg, params, args) -> None:
     svc = ServiceModel()
     gw = KottaServeGateway(
         lambda: ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
-                                         enable_spec_decode=args.spec),
+                                         enable_spec_decode=args.spec,
+                                         kv_cache_dtype=args.kv_dtype,
+                                         spec_adaptive_k=args.adaptive_k
+                                         or None),
         sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
         service_model=svc,
         admission=DeadlineCostPolicy(
@@ -118,7 +121,7 @@ def _run_interactive_burst(cfg, params, args) -> None:
         lambda: ContinuousBatchingEngine(
             cfg, params, max_len=args.max_len, max_slots=slots,
             num_pages=2 * slots * (args.max_len // cfg.page_size),
-            decode_chunk=2),
+            decode_chunk=2, kv_cache_dtype=args.kv_dtype),
         sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
         service_model=svc,
         admission=DeadlineCostPolicy(model=svc, preempt=preempt_on))
@@ -176,6 +179,16 @@ def main() -> None:
                     help="self-speculative decode (n-gram drafts verified "
                          "in one multi-query paged pass; greedy outputs "
                          "are unchanged)")
+    ap.add_argument("--kv-dtype", choices=("f32", "int8"), default=None,
+                    help="paged KV pool layout (default: config "
+                         "kv_cache_dtype). int8 stores KV pages quantized "
+                         "with per-row scales — ~4*hd/(hd+4)x the "
+                         "slot-token capacity at a fixed pool budget; "
+                         "greedy outputs are unchanged")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="with --spec: per-slot adaptive speculative "
+                         "window — each slot's accept-rate EMA shrinks/"
+                         "grows its draft window within [1, spec_tokens]")
     ap.add_argument("--gateway", action="store_true",
                     help="serve through the KottaServeGateway: per-tenant "
                          "authorization + audit, tenant-scoped prefix "
@@ -195,6 +208,9 @@ def main() -> None:
                     help="with --interactive-burst: disable preemption to "
                          "watch the burst shed instead")
     args = ap.parse_args()
+    if args.adaptive_k and not args.spec:
+        raise SystemExit("--adaptive-k requires --spec (it governs the "
+                         "speculative draft window)")
 
     cfg = get_reduced_config(args.arch)
     if cfg.encoder_only:
@@ -224,9 +240,16 @@ def main() -> None:
                        else "static")
     if engine_kind == "continuous":
         engine = ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
-                                          enable_spec_decode=args.spec)
+                                          enable_spec_decode=args.spec,
+                                          kv_cache_dtype=args.kv_dtype,
+                                          spec_adaptive_k=args.adaptive_k
+                                          or None)
     elif args.spec:
         raise SystemExit("--spec requires the continuous engine")
+    elif args.kv_dtype == "int8":
+        raise SystemExit("--kv-dtype int8 requires the continuous engine "
+                         "(the static engine keeps a dense unquantized "
+                         "cache)")
     else:
         engine = ServeEngine(cfg, params, max_len=args.max_len)
     prompts = _demo_prompts(cfg, args.batch)

@@ -267,48 +267,77 @@ def attention_block(cfg, p, x, positions, *, cache=None, decode_pos=None):
     return x + y, new_cache
 
 
-def paged_attention_block(cfg, p, x, *, k_pages, v_pages, page_table, pos):
+def _scatter_pool(pool, name, rows, page, off):
+    """Write KV rows into one pool leaf, quantizing when the pool is int8.
+
+    pool: this layer's pool-slice dict — ``{"k","v"}`` plus, for an int8
+    pool, ``{"k_scale","v_scale"}`` per-row scale pages (kernels/kv_quant).
+    rows: (KV, ..., hd) new rows; page/off: matching (...,) index arrays.
+    Quantize-on-scatter keeps writes O(rows): per-ROW symmetric scales mean
+    a louder later row never forces requantizing earlier rows in the page.
+    """
+    scale_name = name + "_scale"
+    if scale_name in pool:
+        from repro.kernels.kv_quant import quantize_rows
+        q8, s = quantize_rows(rows)
+        pool[name] = pool[name].at[:, page, off].set(q8)
+        pool[scale_name] = pool[scale_name].at[:, page, off].set(s)
+    else:
+        pool[name] = pool[name].at[:, page, off].set(
+            rows.astype(pool[name].dtype))
+    return pool
+
+
+def _pool_scales(pool):
+    return dict(k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"))
+
+
+def paged_attention_block(cfg, p, x, *, pool, page_table, pos):
     """Pre-norm attention residual block over a block-paged KV cache.
 
-    x: (B,1,d) new-token activations; k_pages/v_pages: (KV,P,ps,hd) physical
-    pool slices for this layer; page_table: (B,npages) int32; pos: (B,) the
-    new token's position per request (cache holds [0, pos) valid rows).
-    Returns (y, (k_pages', v_pages')) with the new KV row scattered into the
-    pool page ``page_table[b, pos // ps]`` at offset ``pos % ps``.
+    x: (B,1,d) new-token activations; pool: this layer's physical pool
+    slices — ``{"k","v"}`` of shape (KV,P,ps,hd) plus ``{"k_scale",
+    "v_scale"}`` (KV,P,ps) when the pool is int8-quantized; page_table:
+    (B,npages) int32; pos: (B,) the new token's position per request (cache
+    holds [0, pos) valid rows). Returns (y, pool') with the new KV row
+    scattered (quantized, for an int8 pool) into the pool page
+    ``page_table[b, pos // ps]`` at offset ``pos % ps``.
 
     ``attn_impl="pallas"`` dispatches the split-KV flash-decode kernel on TPU
     (see kernels/decode_attention); other impls use the fused-gather oracle.
+    Both dequantize int8 tiles with identical f32 arithmetic.
     """
     from repro.kernels.decode_attention import paged_decode_attention
     dt = cfg.cdtype
     b = x.shape[0]
-    ps = k_pages.shape[2]
+    ps = pool["k"].shape[2]
     q, k, v = _qkv_proj(cfg, p, x, pos[:, None])
 
     bidx = jnp.arange(b)
     page = page_table[bidx, pos // ps]                  # (B,) physical pages
     off = pos % ps
+    pool = dict(pool)
     # (B,1,KV,hd) -> (KV,B,hd) rows written at [kv, page_b, off_b].
-    k_pages = k_pages.at[:, page, off].set(
-        k[:, 0].transpose(1, 0, 2).astype(k_pages.dtype))
-    v_pages = v_pages.at[:, page, off].set(
-        v[:, 0].transpose(1, 0, 2).astype(v_pages.dtype))
+    pool = _scatter_pool(pool, "k", k[:, 0].transpose(1, 0, 2), page, off)
+    pool = _scatter_pool(pool, "v", v[:, 0].transpose(1, 0, 2), page, off)
 
-    o = paged_decode_attention(q[:, 0], k_pages, v_pages, page_table,
-                               pos + 1, impl=cfg.attn_impl,
+    o = paged_decode_attention(q[:, 0], pool["k"], pool["v"], page_table,
+                               pos + 1, **_pool_scales(pool),
+                               impl=cfg.attn_impl,
                                split_budget=cfg.decode_split_budget)
     y = jnp.einsum("bshk,hkd->bsd", o[:, None].astype(dt), p["wo"].astype(dt))
-    return x + y, (k_pages, v_pages)
+    return x + y, pool
 
 
-def paged_verify_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
+def paged_verify_attention_block(cfg, p, x, *, pool, page_table,
                                  pos, write_limit):
     """Pre-norm attention residual block for one speculative-verify window.
 
     x: (B,T,d) activations of the draft window — the already-verified
     current token followed by T-1 drafted candidates, occupying global
-    positions ``pos[b] .. pos[b] + T - 1``; k_pages/v_pages: (KV,P,ps,hd)
-    physical pool slices for this layer; page_table: (B,npages) int32;
+    positions ``pos[b] .. pos[b] + T - 1``; pool: this layer's physical pool
+    slices (``{"k","v"}`` (KV,P,ps,hd) plus int8 scale pages, see
+    ``paged_attention_block``); page_table: (B,npages) int32;
     write_limit: (B,) positions >= write_limit have their KV writes routed
     to the reserved sink page 0 — the engine points it at the slot's token
     budget (prompt_len + max_new), so a draft window running past the
@@ -316,17 +345,17 @@ def paged_verify_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
     pages through the clamped page-table gather, its own or pages aliased
     from a shared prefix.
 
-    The window's KV rows are scattered into the pool *first*; the kernel's
-    positional causal mask (key pos <= query pos) then covers both verified
-    history and the in-window lower triangle. Rows written for drafts that
-    verification later rejects are simply overwritten by the next verify
-    step, which restarts at the first rejected position.
-    Returns (y, (k_pages', v_pages')).
+    The window's KV rows are scattered into the pool *first* (quantized, for
+    an int8 pool); the kernel's positional causal mask (key pos <= query
+    pos) then covers both verified history and the in-window lower triangle.
+    Rows written for drafts that verification later rejects are simply
+    overwritten by the next verify step, which restarts at the first
+    rejected position. Returns (y, pool').
     """
     from repro.kernels.verify_attention import paged_verify_attention
     dt = cfg.cdtype
     b, t, _ = x.shape
-    ps = k_pages.shape[2]
+    ps = pool["k"].shape[2]
     positions = pos[:, None] + jnp.arange(t)[None, :]            # (B, T)
     q, k, v = _qkv_proj(cfg, p, x, positions)
 
@@ -334,39 +363,41 @@ def paged_verify_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
     valid = positions < write_limit[:, None]                     # (B, T)
     page = jnp.where(valid, page_table[bidx, positions // ps], 0)
     off = positions % ps
+    pool = dict(pool)
     # (B,T,KV,hd) -> (KV,B,T,hd) rows written at [kv, page_bt, off_bt].
-    k_pages = k_pages.at[:, page, off].set(
-        k.transpose(2, 0, 1, 3).astype(k_pages.dtype))
-    v_pages = v_pages.at[:, page, off].set(
-        v.transpose(2, 0, 1, 3).astype(v_pages.dtype))
+    pool = _scatter_pool(pool, "k", k.transpose(2, 0, 1, 3), page, off)
+    pool = _scatter_pool(pool, "v", v.transpose(2, 0, 1, 3), page, off)
 
-    o = paged_verify_attention(q, k_pages, v_pages, page_table, pos,
+    o = paged_verify_attention(q, pool["k"], pool["v"], page_table, pos,
+                               **_pool_scales(pool),
                                impl=cfg.attn_impl,
                                split_budget=cfg.decode_split_budget)
     y = jnp.einsum("bshk,hkd->bsd", o.astype(dt), p["wo"].astype(dt))
-    return x + y, (k_pages, v_pages)
+    return x + y, pool
 
 
-def paged_prefill_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
+def paged_prefill_attention_block(cfg, p, x, *, pool, page_table,
                                   q_start, kv_len):
     """Pre-norm attention residual block for one paged-prefill chunk.
 
     x: (B,C,d) chunk activations (C consecutive prompt tokens starting at
-    global position ``q_start[b]``); k_pages/v_pages: (KV,P,ps,hd) physical
-    pool slices for this layer; page_table: (B,npages) int32; kv_len: (B,)
+    global position ``q_start[b]``); pool: this layer's physical pool slices
+    (``{"k","v"}`` (KV,P,ps,hd) plus int8 scale pages, see
+    ``paged_attention_block``); page_table: (B,npages) int32; kv_len: (B,)
     the request's true prompt length — chunk positions >= kv_len are padding
     and their KV writes are routed to the reserved sink page 0, so a partial
     tail chunk can never clobber live pages (its own, or pages aliased from a
     shared prefix).
 
-    The chunk's KV rows are scattered into the pool *first*; the kernel's
-    positional causal mask (key pos <= query pos) then covers both history
-    pages and the in-chunk lower triangle. Returns (y, (k_pages', v_pages')).
+    The chunk's KV rows are scattered into the pool *first* (quantized, for
+    an int8 pool); the kernel's positional causal mask (key pos <= query
+    pos) then covers both history pages and the in-chunk lower triangle.
+    Returns (y, pool').
     """
     from repro.kernels.prefill_attention import paged_prefill_attention
     dt = cfg.cdtype
     b, c, _ = x.shape
-    ps = k_pages.shape[2]
+    ps = pool["k"].shape[2]
     positions = q_start[:, None] + jnp.arange(c)[None, :]        # (B, C)
     q, k, v = _qkv_proj(cfg, p, x, positions)
 
@@ -374,16 +405,15 @@ def paged_prefill_attention_block(cfg, p, x, *, k_pages, v_pages, page_table,
     valid = positions < kv_len[:, None]                          # (B, C)
     page = jnp.where(valid, page_table[bidx, positions // ps], 0)
     off = positions % ps
+    pool = dict(pool)
     # (B,C,KV,hd) -> (KV,B,C,hd) rows written at [kv, page_bc, off_bc].
-    k_pages = k_pages.at[:, page, off].set(
-        k.transpose(2, 0, 1, 3).astype(k_pages.dtype))
-    v_pages = v_pages.at[:, page, off].set(
-        v.transpose(2, 0, 1, 3).astype(v_pages.dtype))
+    pool = _scatter_pool(pool, "k", k.transpose(2, 0, 1, 3), page, off)
+    pool = _scatter_pool(pool, "v", v.transpose(2, 0, 1, 3), page, off)
 
-    o = paged_prefill_attention(q, k_pages, v_pages, page_table, q_start,
-                                impl=cfg.attn_impl)
+    o = paged_prefill_attention(q, pool["k"], pool["v"], page_table, q_start,
+                                **_pool_scales(pool), impl=cfg.attn_impl)
     y = jnp.einsum("bshk,hkd->bsd", o.astype(dt), p["wo"].astype(dt))
-    return x + y, (k_pages, v_pages)
+    return x + y, pool
 
 
 def _scatter_cache(cache, k, v, pos):

@@ -211,7 +211,9 @@ class TransformerFamily:
         to the sink page), page_table (B,npages) int32, logit_idx (B,)
         in-chunk index to read logits at (the engine points it at
         ``prompt_len-1`` for the chunk that contains it; clamped otherwise).
-        pool: {"k": (L,KV,P,ps,hd), "v": ...} — the whole physical pool.
+        pool: {"k": (L,KV,P,ps,hd), "v": ...} — the whole physical pool; an
+        int8 pool adds (L,KV,P,ps) f32 "k_scale"/"v_scale" per-row scale
+        pages and the chunk's KV rows are quantized on scatter.
 
         Unlike ``prefill_ragged`` there is no dense per-request cache to
         re-layout afterwards: KV lands in its final pages chunk by chunk, so
@@ -223,23 +225,23 @@ class TransformerFamily:
 
         def body(carry, xs):
             h = carry
-            layer_params, kp, vp = xs
-            h, (kp, vp) = L.paged_prefill_attention_block(
-                cfg, layer_params["attn"], h, k_pages=kp, v_pages=vp,
+            layer_params, pool_sl = xs
+            h, pool_sl = L.paged_prefill_attention_block(
+                cfg, layer_params["attn"], h, pool=pool_sl,
                 page_table=page_table, q_start=q_start, kv_len=kv_len)
             if cfg.num_experts:
                 h, _ = moe_block(cfg, layer_params["ffn"], h)
             else:
                 h = L.mlp_block(cfg, layer_params["ffn"], h)
-            return h, (kp, vp)
+            return h, pool_sl
 
-        x, (k, v) = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+        x, pool = lax.scan(body, x, (params["layers"], pool))
         x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
         idx = jnp.clip(batch["logit_idx"].astype(jnp.int32), 0,
                        x.shape[1] - 1)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B,1,d)
         logits = L.logits_fn(cfg, params, last)[:, 0]
-        return logits, {"k": k, "v": v}
+        return logits, pool
 
     # -- paged decode (continuous-batching serve path) -------------------------------
     def decode_paged(self, cfg, params, batch, pool):
@@ -248,7 +250,9 @@ class TransformerFamily:
         batch: tokens (B,1), pos (B,), page_table (B,npages) int32.
         pool: {"k": (L,KV,P,ps,hd), "v": ...} — the *whole* physical pool; a
         request touches only the pages its table row names, so finished
-        sequences free pages without any cache compaction or copies.
+        sequences free pages without any cache compaction or copies. An int8
+        pool adds (L,KV,P,ps) f32 "k_scale"/"v_scale" per-row scale pages
+        (see ``paged_pool``) and new rows are quantized on scatter.
         """
         tokens, pos = batch["tokens"], batch["pos"]
         page_table = batch["page_table"]
@@ -256,20 +260,20 @@ class TransformerFamily:
 
         def body(carry, xs):
             h = carry
-            layer_params, kp, vp = xs
-            h, (kp, vp) = L.paged_attention_block(
-                cfg, layer_params["attn"], h, k_pages=kp, v_pages=vp,
+            layer_params, pool_sl = xs
+            h, pool_sl = L.paged_attention_block(
+                cfg, layer_params["attn"], h, pool=pool_sl,
                 page_table=page_table, pos=pos)
             if cfg.num_experts:
                 h, _ = moe_block(cfg, layer_params["ffn"], h)
             else:
                 h = L.mlp_block(cfg, layer_params["ffn"], h)
-            return h, (kp, vp)
+            return h, pool_sl
 
-        x, (k, v) = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+        x, pool = lax.scan(body, x, (params["layers"], pool))
         x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = L.logits_fn(cfg, params, x)[:, 0]
-        return logits, {"k": k, "v": v}
+        return logits, pool
 
     # -- paged speculative verify (multi-token decode) -------------------------------
     def decode_verify(self, cfg, params, batch, pool):
@@ -291,25 +295,49 @@ class TransformerFamily:
 
         def body(carry, xs):
             h = carry
-            layer_params, kp, vp = xs
-            h, (kp, vp) = L.paged_verify_attention_block(
-                cfg, layer_params["attn"], h, k_pages=kp, v_pages=vp,
+            layer_params, pool_sl = xs
+            h, pool_sl = L.paged_verify_attention_block(
+                cfg, layer_params["attn"], h, pool=pool_sl,
                 page_table=page_table, pos=pos, write_limit=write_limit)
             if cfg.num_experts:
                 h, _ = moe_block(cfg, layer_params["ffn"], h)
             else:
                 h = L.mlp_block(cfg, layer_params["ffn"], h)
-            return h, (kp, vp)
+            return h, pool_sl
 
-        x, (k, v) = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+        x, pool = lax.scan(body, x, (params["layers"], pool))
         x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = L.logits_fn(cfg, params, x)
-        return logits, {"k": k, "v": v}
+        return logits, pool
 
     def paged_pool_shape(self, cfg, num_pages: int):
         """Physical pool array shape for ``num_pages`` shared cache pages."""
         return (cfg.num_layers, cfg.num_kv_heads, num_pages, cfg.page_size,
                 cfg.head_dim)
+
+    def paged_pool(self, cfg, num_pages: int, kv_cache_dtype: str | None = None):
+        """Allocate the shared paged KV pool dict.
+
+        ``kv_cache_dtype`` (default ``cfg.kv_cache_dtype``) selects the
+        layout: ``"f32"`` stores K/V rows in ``cfg.dtype``; ``"int8"`` stores
+        them as int8 with per-row f32 scale pages ``k_scale``/``v_scale`` of
+        shape (L,KV,P,ps) — roughly ``4*hd/(hd+4)``x the slot-token capacity
+        at a fixed HBM budget (see kernels/kv_quant). All three paged model
+        paths detect the layout structurally (``"k_scale" in pool``).
+        """
+        shape = self.paged_pool_shape(cfg, num_pages)
+        dtype = kv_cache_dtype or getattr(cfg, "kv_cache_dtype", "f32")
+        if dtype == "int8":
+            pool = {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                    "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+        elif dtype == "f32":
+            pool = {"k": jnp.zeros(shape, cfg.cdtype),
+                    "v": jnp.zeros(shape, cfg.cdtype)}
+        else:
+            raise ValueError(f"unknown kv_cache_dtype {dtype!r}")
+        return pool
 
     # -- abstract cache (dry-run input specs) ----------------------------------------
     def cache_layout(self, cfg, batch: int, cache_len: int):

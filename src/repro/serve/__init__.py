@@ -1,6 +1,7 @@
 from .admission import (AdmissionError, AdmissionPolicy, CostBudgetExceeded,
                         DeadlineCostPolicy, DeadlineInfeasible, FCFSPolicy,
                         JobState, PreemptCandidate, ServeJob, ServiceModel)
+from .drafting import build_ngram_draft
 from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
                      ServeEngine, ServeResult)
 from .gateway import KottaServeGateway
@@ -11,4 +12,4 @@ __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
            "KottaServeGateway", "ServeJob", "JobState", "ServiceModel",
            "AdmissionPolicy", "FCFSPolicy", "DeadlineCostPolicy",
            "PreemptCandidate", "AdmissionError", "DeadlineInfeasible",
-           "CostBudgetExceeded"]
+           "CostBudgetExceeded", "build_ngram_draft"]

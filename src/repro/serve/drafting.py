@@ -1,0 +1,73 @@
+"""Device-side n-gram draft-table lookup for speculative decode.
+
+Extracted from the engine's decode-chunk body so the draft proposal can be
+FUSED with the multi-query verify pass into one jitted step
+(:func:`repro.train.train_step.build_fused_spec_step`): the decode chunk
+then issues exactly one fused dispatch per ``fori_loop`` iteration instead
+of interleaving a separate drafting computation with the verify call. The
+engine injects the built callable (plain function injection — ``serve``
+imports ``train``, never the reverse, so no circular import).
+
+The proposal itself is the PR-3 prompt-lookup scheme: find the latest
+earlier occurrence of the trailing n-gram ending at the current token and
+replay the tokens that followed it. A bad (or absent) match only lowers the
+accept rate — verification restores exactness, so greedy outputs stay
+token-identical to plain decode for ANY draft quality.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def build_ngram_draft(hist_len: int, k_spec: int, ngram: int):
+    """Return ``draft(hist, cur, pos) -> (S, k_spec)`` int32 draft tokens.
+
+    hist: (S, hist_len) per-slot token history, with ``hist[b, :pos[b]+1]``
+    the exact verified stream INCLUDING ``cur`` at position ``pos`` (the
+    caller writes ``cur`` in before drafting); cur/pos: (S,) int32. Pure and
+    trace-friendly: no host syncs, shapes static in ``k_spec``.
+    """
+    if ngram not in (2, 3):
+        raise ValueError(f"ngram must be 2 (bigram) or 3 (trigram), got "
+                         f"{ngram}")
+
+    def draft(hist, cur, pos):
+        s = hist.shape[0]
+        bidx = jnp.arange(s)
+        # Latest earlier occurrence of the trailing bigram
+        # (hist[pos-1], cur); the K tokens that followed it are the draft.
+        prev = hist[bidx, pos - 1]
+        hit = (hist[:, :-1] == prev[:, None]) & \
+              (hist[:, 1:] == cur[:, None])
+        j = jnp.arange(hist_len - 1)
+        # window ends at j+1; only strictly-earlier ends count
+        cand = jnp.where(hit & ((j + 1)[None, :] < pos[:, None]), j, -1)
+        best = cand.max(axis=1)
+        src = jnp.where(best >= 0, best + 2, pos + 1)
+        if ngram == 3:
+            # Trigram keys disambiguate contexts a bigram conflates; no
+            # trigram occurrence (or pos < 2) falls back to the bigram
+            # match above, which itself degenerates to "repeat cur".
+            p2 = hist[bidx, jnp.maximum(pos - 2, 0)]
+            hit3 = (hist[:, :-2] == p2[:, None]) & \
+                   (hist[:, 1:-1] == prev[:, None]) & \
+                   (hist[:, 2:] == cur[:, None])
+            j3 = jnp.arange(hist_len - 2)
+            cand3 = jnp.where(
+                hit3 & ((j3 + 2)[None, :] < pos[:, None])
+                & (pos[:, None] >= 2), j3, -1)
+            best3 = cand3.max(axis=1)
+            src = jnp.where(best3 >= 0, best3 + 3, src)
+        # A recent match reaches past the known history (e.g. a period-1
+        # token run matches at pos-2): extrapolate it periodically by
+        # wrapping indices beyond pos back by the match distance. With no
+        # match this degenerates to period 1 at pos — i.e. draft "repeat
+        # cur", which catches run onsets for free.
+        period = jnp.maximum(pos - (src - 1), 1)
+        q_idx = src[:, None] + jnp.arange(k_spec)[None, :]
+        over = jnp.maximum(q_idx - pos[:, None], 0)
+        wrap = (over + period[:, None] - 1) // period[:, None]
+        didx = q_idx - wrap * period[:, None]
+        return hist[bidx[:, None], jnp.clip(didx, 0, hist_len - 1)]
+
+    return draft

@@ -46,7 +46,22 @@ the provisioned resource:
   path; rejected draft tails roll back by construction (the next step
   re-writes their KV rows) and writes past a slot's token budget are routed
   to the sink page so shared/refcounted pages are never corrupted. The trip
-  count stays static: still one compile, ever.
+  count stays static: still one compile, ever. The draft lookup is FUSED
+  with the verify pass into one jitted step per loop iteration
+  (:func:`repro.train.train_step.build_fused_spec_step` over
+  :mod:`repro.serve.drafting`).
+- **Per-slot adaptive speculation** (``spec_adaptive_k``): each slot's
+  accept-rate EMA governs its own speculative window ``kslot`` in [1, K] —
+  halved when drafts keep getting rejected, re-doubled when acceptance
+  recovers — and each chunk dispatches at the smallest jitted verify-window
+  *bucket* covering the live slots, so low-acceptance workloads stop paying
+  for K verify rows per step. Greedy outputs stay token-identical for any
+  window schedule (accepted prefixes are always exact greedy matches).
+- **int8-quantized KV pages** (``kv_cache_dtype="int8"``): the pool stores
+  K/V rows as int8 with per-row f32 scale pages, quantized on scatter and
+  dequantized inside the attention-kernel tile loads (f32 accumulation) —
+  ~``4*hd/(hd+4)``x the slot-token capacity at a fixed HBM budget, with the
+  f32 layout untouched as the parity baseline (see kernels/kv_quant).
 
 Physical page 0 is reserved as a write sink: idle slots keep ``pos=0`` and an
 all-zero page-table row, and prefill pads route their KV writes there, so
@@ -91,11 +106,12 @@ import numpy as np
 from jax import lax
 
 from repro.models import get_family
-from repro.train.train_step import (build_decode_step, build_paged_decode_step,
+from repro.train.train_step import (build_decode_step, build_fused_spec_step,
+                                    build_paged_decode_step,
                                     build_paged_prefill_step,
-                                    build_paged_verify_step,
                                     build_prefill_step)
 
+from .drafting import build_ngram_draft
 from .paging import PageAllocator, PrefixCache
 
 
@@ -201,6 +217,11 @@ class PausedRequest:
     pos: int
     limit: int
     hist: np.ndarray | None = None
+    # Adaptive-speculation state (spec decode only): the slot's speculative
+    # window and accept-rate EMA survive preemption, so a resumed request
+    # picks its tuned window back up instead of re-warming from K.
+    kslot: int = 0
+    ema: float = 0.0
 
 
 def _next_pow2(n: int) -> int:
@@ -230,11 +251,26 @@ class ContinuousBatchingEngine:
                  enable_prefix_cache: bool | None = None,
                  enable_spec_decode: bool | None = None,
                  spec_tokens: int | None = None,
-                 spec_ngram: int | None = None):
+                 spec_ngram: int | None = None,
+                 kv_cache_dtype: str | None = None,
+                 spec_adaptive_k: bool | None = None):
         if cfg.encoder_only:
             raise ValueError("encoder-only models cannot decode")
         if prefill_mode not in ("paged", "dense"):
             raise ValueError(f"prefill_mode {prefill_mode!r}")
+        self.kv_cache_dtype = cfg.kv_cache_dtype if kv_cache_dtype is None \
+            else kv_cache_dtype
+        if self.kv_cache_dtype not in ("f32", "int8"):
+            raise ValueError(f"kv_cache_dtype must be 'f32' or 'int8', got "
+                             f"{self.kv_cache_dtype!r}")
+        # The dense baseline prefills an unquantized ragged cache and
+        # re-layouts it into whole pages, bypassing quantize-on-scatter; an
+        # explicit request for both is a contradiction, not a default.
+        if self.kv_cache_dtype == "int8" and prefill_mode == "dense":
+            raise ValueError("kv_cache_dtype='int8' requires "
+                             "prefill_mode='paged' (dense prefill re-layouts "
+                             "an unquantized cache into pool pages and "
+                             "bypasses quantize-on-scatter)")
         step = build_paged_decode_step(cfg)   # raises for recurrent families
         self.cfg = cfg
         self.params = params
@@ -253,6 +289,13 @@ class ContinuousBatchingEngine:
             else spec_tokens
         self.spec_ngram = cfg.spec_ngram if spec_ngram is None else spec_ngram
         self.spec_decode = bool(enable_spec_decode)
+        self.spec_adaptive_k = bool(
+            cfg.spec_adaptive_k if spec_adaptive_k is None
+            else spec_adaptive_k)
+        if self.spec_adaptive_k and not self.spec_decode:
+            raise ValueError("spec_adaptive_k=True requires "
+                             "enable_spec_decode=True (the adaptive window "
+                             "governs speculative drafting)")
         if self.spec_decode:
             # Fail here, with the knob named, instead of as a shape error
             # deep inside the verify step / Pallas kernel.
@@ -307,9 +350,10 @@ class ContinuousBatchingEngine:
                              f"{self.prefill_chunk}")
         self.prefill_mode = prefill_mode
 
-        shape = self.family.paged_pool_shape(cfg, self.num_pages)
-        self.pool = {"k": jnp.zeros(shape, cfg.cdtype),
-                     "v": jnp.zeros(shape, cfg.cdtype)}
+        # int8 pools add (L,KV,P,ps) f32 per-row scale pages; all downstream
+        # paths (model scatter, kernels, COW) handle the dict structurally.
+        self.pool = self.family.paged_pool(cfg, self.num_pages,
+                                           self.kv_cache_dtype)
 
         self.alloc = PageAllocator(self.num_pages)
         # Prefix sharing needs paged prefill: the dense path re-writes whole
@@ -334,6 +378,11 @@ class ContinuousBatchingEngine:
         # Per-slot KV write limit (prompt_len + max_new): spec-decode draft
         # windows running past it are routed to the sink page.
         self._limit = np.zeros(s, np.int32)
+        # Per-slot adaptive speculation: current speculative window (1..K,
+        # seeded at K on admit) and accept-rate EMA. Host-side: updated once
+        # per chunk from the chunk's (n_out, n_it) tallies.
+        self._kslot = np.zeros(s, np.int32)
+        self._ema = np.zeros(s, np.float64)
         # Per-slot token history (prompt + verified output) for on-device
         # n-gram drafting; lives in the decode-chunk carry while decoding.
         self.hist_len = self.pages_per_seq * self.page_size
@@ -398,117 +447,110 @@ class ContinuousBatchingEngine:
         self._chunk = jax.jit(decode_chunk_fn, donate_argnums=(6,))
 
         if self.spec_decode:
-            vstep = build_paged_verify_step(cfg)
             k_spec = self.spec_tokens
-            t_spec = k_spec + 1
             hlen = self.hist_len
             ngram = self.spec_ngram
+            group = cfg.num_heads // cfg.num_kv_heads
 
-            def spec_chunk_fn(params, cur, pos, hist, page_table, active,
-                              budget, limit, pool):
-                """Speculative decode chunk: ``decode_chunk`` verify steps.
+            # Verify-window buckets: the adaptive controller shrinks a
+            # slot's speculative window kslot per its accept-rate EMA, and
+            # the host dispatches each chunk at the smallest bucket covering
+            # every live slot's window — a genuinely narrower verify pass
+            # (fewer query rows), not just masked acceptance. Buckets are
+            # pow2 sizes plus K itself, filtered by the Pallas sublane rule
+            # ((b+1)*G % 8 == 0) so every bucket is dispatchable; K always
+            # survives the filter (validated above). Non-adaptive engines
+            # use the single bucket K, keeping one chunk trace ever.
+            if self.spec_adaptive_k:
+                cand = {1 << i for i in range(k_spec.bit_length())}
+                cand.add(k_spec)
+                self._spec_buckets = sorted(
+                    b for b in cand if b <= k_spec
+                    and (cfg.attn_impl != "pallas"
+                         or ((b + 1) * group) % 8 == 0))
+            else:
+                self._spec_buckets = [k_spec]
+            self._spec_chunks: dict[int, object] = {}
 
-                Each step drafts K tokens per live slot by bigram lookup
-                over the slot's own history, verifies all K+1 window
-                positions in one pass, emits the accepted prefix plus the
-                model's correction, and advances pos by the emitted count.
-                Trip count is static; per-slot emission is data-dependent
-                and reported via ``n_out``.
+            def make_spec_chunk(kb: int):
+                """Build + jit the decode chunk for verify-window bucket kb.
+
+                Each ``fori_loop`` step is ONE fused dispatch
+                (:func:`build_fused_spec_step`): n-gram draft lookup, window
+                assembly, KV scatter and the multi-query verify all in the
+                same traced step. Acceptance is additionally masked to the
+                slot's own window ``kslot <= kb``, so two slots in the same
+                chunk can run different effective speculation depths.
                 """
-                self._n_decode_traces += 1
-                out = jnp.zeros((s, self.decode_chunk * t_spec), jnp.int32)
-                n_out = jnp.zeros(s, jnp.int32)
-                n_it = jnp.zeros(s, jnp.int32)
-                bidx = jnp.arange(s)
+                t_spec = kb + 1
+                fstep = build_fused_spec_step(
+                    cfg, build_ngram_draft(hlen, kb, ngram))
 
-                def body(i, carry):
-                    cur, pos, hist, n_out, n_it, pool, out = carry
-                    live = active & (n_out < budget)
-                    # The verified current token enters the history first:
-                    # hist[:pos+1] is now the exact token stream.
-                    hist = hist.at[bidx, pos].set(cur)
-                    # -- n-gram prompt-lookup drafting (device-side) ------
-                    # Latest earlier occurrence of the trailing n-gram
-                    # ending at (.., hist[pos-1], cur); the K tokens that
-                    # followed it are the draft. A bad (or absent) match
-                    # only lowers the accept rate — verification restores
-                    # exactness.
-                    prev = hist[bidx, pos - 1]
-                    hit = (hist[:, :-1] == prev[:, None]) & \
-                          (hist[:, 1:] == cur[:, None])
-                    j = jnp.arange(hlen - 1)
-                    # window ends at j+1; only strictly-earlier ends count
-                    cand = jnp.where(hit & ((j + 1)[None, :] < pos[:, None]),
-                                     j, -1)
-                    best = cand.max(axis=1)
-                    src = jnp.where(best >= 0, best + 2, pos + 1)
-                    if ngram == 3:
-                        # Trigram keys disambiguate contexts a bigram
-                        # conflates; no trigram occurrence (or pos < 2)
-                        # falls back to the bigram match above, which
-                        # itself degenerates to "repeat cur".
-                        p2 = hist[bidx, jnp.maximum(pos - 2, 0)]
-                        hit3 = (hist[:, :-2] == p2[:, None]) & \
-                               (hist[:, 1:-1] == prev[:, None]) & \
-                               (hist[:, 2:] == cur[:, None])
-                        j3 = jnp.arange(hlen - 2)
-                        cand3 = jnp.where(
-                            hit3 & ((j3 + 2)[None, :] < pos[:, None])
-                            & (pos[:, None] >= 2), j3, -1)
-                        best3 = cand3.max(axis=1)
-                        src = jnp.where(best3 >= 0, best3 + 3, src)
-                    # A recent match reaches past the known history (e.g. a
-                    # period-1 token run matches at pos-2): extrapolate it
-                    # periodically by wrapping indices beyond pos back by
-                    # the match distance. With no match this degenerates to
-                    # period 1 at pos — i.e. draft "repeat cur", which
-                    # catches run onsets for free.
-                    period = jnp.maximum(pos - (src - 1), 1)
-                    q_idx = src[:, None] + jnp.arange(k_spec)[None, :]
-                    over = jnp.maximum(q_idx - pos[:, None], 0)
-                    wrap = (over + period[:, None] - 1) // period[:, None]
-                    didx = q_idx - wrap * period[:, None]
-                    drafts = hist[bidx[:, None], jnp.clip(didx, 0, hlen - 1)]
-                    window = jnp.concatenate([cur[:, None], drafts], axis=1)
-                    # Accepted drafts become history; the rejected tail sits
-                    # past the next pos and is re-written before any read.
-                    hidx = pos[:, None] + 1 + jnp.arange(k_spec)[None, :]
-                    hist = hist.at[bidx[:, None], hidx].set(drafts,
-                                                            mode="drop")
-                    # -- one multi-query verify pass over the paged pool --
-                    pt = jnp.where(live[:, None], page_table, 0)
-                    wl = jnp.where(live, limit, 0)
-                    batch = {"tokens": window, "pos": pos, "page_table": pt,
-                             "write_limit": wl}
-                    nxt, _, pool = vstep(params, batch, pool)      # (S, T)
-                    # -- acceptance: longest draft prefix the model agrees
-                    # with; nxt[:, a] is the correction after it ----------
-                    match = (drafts == nxt[:, :k_spec]).astype(jnp.int32)
-                    a = jnp.cumprod(match, axis=1).sum(axis=1)     # (S,)
-                    # -- emit cur + accepted drafts; the tail beyond 1+a is
-                    # overwritten by the next step's emission -------------
-                    base = jnp.where(live, n_out, out.shape[1])
-                    oidx = base[:, None] + jnp.arange(t_spec)[None, :]
-                    out = out.at[bidx[:, None], oidx].set(window, mode="drop")
-                    n_out = n_out + jnp.where(live, 1 + a, 0)
-                    n_it = n_it + live.astype(jnp.int32)
-                    cur = jnp.where(live, nxt[bidx, a], cur)
-                    pos = jnp.where(live, pos + 1 + a, pos)
-                    return cur, pos, hist, n_out, n_it, pool, out
+                def spec_chunk_fn(params, cur, pos, hist, page_table, active,
+                                  budget, limit, kslot, pool):
+                    self._n_decode_traces += 1
+                    out = jnp.zeros((s, self.decode_chunk * t_spec),
+                                    jnp.int32)
+                    n_out = jnp.zeros(s, jnp.int32)
+                    n_it = jnp.zeros(s, jnp.int32)
+                    bidx = jnp.arange(s)
 
-                # Static trip count, exactly like the plain decode chunk:
-                # one compile ever, however the accept rate fluctuates.
-                return lax.fori_loop(0, self.decode_chunk, body,
-                                     (cur, pos, hist, n_out, n_it, pool, out))
+                    def body(i, carry):
+                        cur, pos, hist, n_out, n_it, pool, out = carry
+                        live = active & (n_out < budget)
+                        # The verified current token enters the history
+                        # first: hist[:pos+1] is now the exact token stream
+                        # the fused step's draft lookup reads.
+                        hist = hist.at[bidx, pos].set(cur)
+                        pt = jnp.where(live[:, None], page_table, 0)
+                        wl = jnp.where(live, limit, 0)
+                        batch = {"cur": cur, "pos": pos, "hist": hist,
+                                 "page_table": pt, "write_limit": wl}
+                        window, drafts, nxt, pool = fstep(params, batch,
+                                                          pool)
+                        # Drafted tokens become history; the tail past the
+                        # next pos is re-written before any read.
+                        hidx = pos[:, None] + 1 + jnp.arange(kb)[None, :]
+                        hist = hist.at[bidx[:, None], hidx].set(
+                            drafts, mode="drop")
+                        # -- acceptance: longest draft prefix the model
+                        # agrees with, capped at the slot's own adaptive
+                        # window; nxt[:, a] is the correction after it ----
+                        match = (drafts == nxt[:, :kb]) & \
+                                (jnp.arange(kb)[None, :] < kslot[:, None])
+                        a = jnp.cumprod(match.astype(jnp.int32),
+                                        axis=1).sum(axis=1)        # (S,)
+                        # -- emit cur + accepted drafts; the tail beyond
+                        # 1+a is overwritten by the next step's emission --
+                        base = jnp.where(live, n_out, out.shape[1])
+                        oidx = base[:, None] + jnp.arange(t_spec)[None, :]
+                        out = out.at[bidx[:, None], oidx].set(window,
+                                                              mode="drop")
+                        n_out = n_out + jnp.where(live, 1 + a, 0)
+                        n_it = n_it + live.astype(jnp.int32)
+                        cur = jnp.where(live, nxt[bidx, a], cur)
+                        pos = jnp.where(live, pos + 1 + a, pos)
+                        return cur, pos, hist, n_out, n_it, pool, out
 
-            self._chunk_spec = jax.jit(spec_chunk_fn, donate_argnums=(8,))
+                    # Static trip count, exactly like the plain decode
+                    # chunk: one compile per bucket, however the accept
+                    # rate fluctuates.
+                    return lax.fori_loop(
+                        0, self.decode_chunk, body,
+                        (cur, pos, hist, n_out, n_it, pool, out))
 
-        @partial(jax.jit, donate_argnums=(0, 1))
-        def cow_copy(pool_k, pool_v, src, dst):
+                return jax.jit(spec_chunk_fn, donate_argnums=(9,))
+
+            self._make_spec_chunk = make_spec_chunk
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def cow_copy(pool, src, dst):
             """src/dst: (n,) int32 — one dispatch copies a whole wave's
-            boundary pages; pad pairs are (0, 0), a sink-to-sink no-op."""
-            return (pool_k.at[:, :, dst].set(pool_k[:, :, src]),
-                    pool_v.at[:, :, dst].set(pool_v[:, :, src]))
+            boundary pages; pad pairs are (0, 0), a sink-to-sink no-op.
+            Page axis is 2 for EVERY pool leaf (data and scale pages alike),
+            so the copy is one structural map over the dict."""
+            return {name: leaf.at[:, :, dst].set(leaf[:, :, src])
+                    for name, leaf in pool.items()}
 
         self._cow = cow_copy
         self._writer_cache = {}
@@ -518,7 +560,8 @@ class ContinuousBatchingEngine:
         self.stats = {"admitted": 0, "prefill_tokens": 0, "cached_tokens": 0,
                       "cow_copies": 0, "admit_seconds": 0.0,
                       "spec_steps": 0, "spec_emitted": 0,
-                      "preempted": 0, "resumed": 0}
+                      "preempted": 0, "resumed": 0,
+                      "accept_ema_sum": 0.0, "accept_ema_n": 0}
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -534,6 +577,18 @@ class ContinuousBatchingEngine:
         """
         steps = self.stats["spec_steps"]
         return (self.stats["spec_emitted"] - steps) / steps if steps else 0.0
+
+    @property
+    def mean_accept_ema(self) -> float:
+        """Mean final per-slot accept-rate EMA over retired requests."""
+        n = self.stats["accept_ema_n"]
+        return self.stats["accept_ema_sum"] / n if n else 0.0
+
+    def slot_spec_state(self) -> dict[int, dict[str, float]]:
+        """Live per-slot adaptive-speculation state (bench introspection)."""
+        return {slot: {"kslot": int(self._kslot[slot]),
+                       "accept_ema": float(self._ema[slot])}
+                for slot in sorted(self._live)}
 
     # -- legacy dense page writer (prompt KV -> pool), per (pad, group) ------
     def _write_pages(self, k, v, pages):
@@ -676,9 +731,7 @@ class ContinuousBatchingEngine:
         dst = np.zeros(n, np.int32)
         for i, (s_, d_) in enumerate(cow_pairs):
             src[i], dst[i] = s_, d_
-        self.pool["k"], self.pool["v"] = self._cow(
-            self.pool["k"], self.pool["v"], jnp.asarray(src),
-            jnp.asarray(dst))
+        self.pool = self._cow(self.pool, jnp.asarray(src), jnp.asarray(dst))
         for s_, _ in cow_pairs:
             self.alloc.release(s_)              # pin no longer needed
 
@@ -690,6 +743,10 @@ class ContinuousBatchingEngine:
             rows[i, :len(a.req.prompt)] = a.req.prompt
             slots[i] = a.slot
             self._limit[a.slot] = len(a.req.prompt) + a.req.max_new
+            # Speculation starts wide open; the per-chunk EMA update shrinks
+            # the window if this request's drafts keep getting rejected.
+            self._kslot[a.slot] = self.spec_tokens
+            self._ema[a.slot] = 0.0
         self._hist = self._hist.at[jnp.asarray(slots)].set(jnp.asarray(rows))
 
     # -- paged chunked prefill (default admission path) ----------------------
@@ -779,6 +836,13 @@ class ContinuousBatchingEngine:
         self._pos[slot] = 0
         self._cur[slot] = 0
         self._limit[slot] = 0               # spec writes masked until re-seeded
+        if self.spec_decode:
+            # Fold the request's final accept-rate EMA into the run stats
+            # (serve_bench reports the mean) before clearing the slot.
+            self.stats["accept_ema_sum"] += float(self._ema[slot])
+            self.stats["accept_ema_n"] += 1
+            self._kslot[slot] = 0
+            self._ema[slot] = 0.0
         return live
 
     # -- invariants (exercised by tests) -------------------------------------
@@ -879,7 +943,8 @@ class ContinuousBatchingEngine:
             req=live.req, pages=live.pages, emitted=live.emitted,
             tokens=live.tokens, cur=int(self._cur[slot]),
             pos=int(self._pos[slot]), limit=int(self._limit[slot]),
-            hist=hist)
+            hist=hist, kslot=int(self._kslot[slot]),
+            ema=float(self._ema[slot]))
         self._paused[live.req.rid] = paused
         # Identical to _retire EXCEPT the pages are not released: the slot
         # idles against the sink page while the paused sequence's KV waits.
@@ -888,6 +953,8 @@ class ContinuousBatchingEngine:
         self._pos[slot] = 0
         self._cur[slot] = 0
         self._limit[slot] = 0
+        self._kslot[slot] = 0
+        self._ema[slot] = 0.0
         self.stats["preempted"] += 1
         return paused
 
@@ -917,6 +984,10 @@ class ContinuousBatchingEngine:
         self._limit[slot] = paused.limit
         if self.spec_decode:
             self._hist = self._hist.at[slot].set(jnp.asarray(paused.hist))
+            # Restore the tuned speculation window (0 = paused before this
+            # engine tracked it; re-warm from K).
+            self._kslot[slot] = paused.kslot or self.spec_tokens
+            self._ema[slot] = paused.ema
         self._live[slot] = _Live(paused.req, paused.pages, paused.emitted,
                                  paused.tokens)
         self.stats["resumed"] += 1
@@ -971,15 +1042,45 @@ class ContinuousBatchingEngine:
             budget[slot] = live.req.max_new - live.emitted
         t0 = time.perf_counter()
         if self.spec_decode:
-            cur, pos, self._hist, n_out, n_it, self.pool, out = \
-                self._chunk_spec(
-                    self.params, jnp.asarray(self._cur),
-                    jnp.asarray(self._pos), self._hist,
-                    jnp.asarray(self._page_table),
-                    jnp.asarray(self._active), jnp.asarray(budget),
-                    jnp.asarray(self._limit), self.pool)
+            # Smallest verify bucket covering every live slot's adaptive
+            # window: a chunk full of low-acceptance slots dispatches a
+            # genuinely narrower verify pass. Chunks are jitted lazily per
+            # bucket; non-adaptive engines always land on bucket K.
+            kslot = np.maximum(np.where(self._active, self._kslot, 1), 1)
+            kmax = int(kslot[self._active].max())
+            kb = min(b for b in self._spec_buckets if b >= kmax)
+            chunk = self._spec_chunks.get(kb)
+            if chunk is None:
+                chunk = self._spec_chunks[kb] = self._make_spec_chunk(kb)
+            cur, pos, self._hist, n_out, n_it, self.pool, out = chunk(
+                self.params, jnp.asarray(self._cur),
+                jnp.asarray(self._pos), self._hist,
+                jnp.asarray(self._page_table),
+                jnp.asarray(self._active), jnp.asarray(budget),
+                jnp.asarray(self._limit),
+                jnp.asarray(kslot.astype(np.int32)), self.pool)
             n_out_host = np.asarray(n_out)
-            self.stats["spec_steps"] += int(np.asarray(n_it).sum())
+            n_it_host = np.asarray(n_it)
+            self.stats["spec_steps"] += int(n_it_host.sum())
+            # -- per-slot accept-rate EMA + adaptive window control -------
+            # rate = accepted drafts / drafted tokens this chunk; EMA with
+            # alpha=0.5 reacts within a couple of chunks. High acceptance
+            # re-opens the window (x2, capped at K), low acceptance halves
+            # it (floor 1) so near-random content stops paying for K-token
+            # verify rows it never accepts.
+            for slot in self._live:
+                it = int(n_it_host[slot])
+                if not it:
+                    continue
+                rate = (int(n_out_host[slot]) - it) / (it * int(kslot[slot]))
+                self._ema[slot] = 0.5 * self._ema[slot] + 0.5 * rate
+                if self.spec_adaptive_k:
+                    if self._ema[slot] > 0.8:
+                        self._kslot[slot] = min(2 * int(self._kslot[slot]),
+                                                self.spec_tokens)
+                    elif self._ema[slot] < 0.3:
+                        self._kslot[slot] = max(int(self._kslot[slot]) // 2,
+                                                1)
         else:
             cur, pos, self.pool, out = self._chunk(
                 self.params, jnp.asarray(self._cur),

@@ -154,6 +154,40 @@ def build_paged_verify_step(cfg) -> Callable:
     return paged_verify_step
 
 
+def build_fused_spec_step(cfg, draft_fn) -> Callable:
+    """Fused draft + multi-query verify step (speculative decode).
+
+    ``draft_fn(hist, cur, pos) -> (S, K)`` is an injected pure draft
+    proposal (e.g. :func:`repro.serve.drafting.build_ngram_draft`); fusing
+    it with the verify pass here means the serve engine's decode chunk
+    issues ONE step call per ``fori_loop`` iteration — draft lookup, window
+    assembly, KV scatter and verify all land in the same traced dispatch.
+
+    batch: cur (S,), pos (S,), hist (S, hlen), page_table (S, npages),
+    write_limit (S,). Returns ``(window, drafts, next_tokens, pool)`` where
+    window = [cur | drafts] is what was scored, and next_tokens[:, i] is the
+    model's greedy token after window prefix [:, :i+1] — acceptance and
+    history bookkeeping stay with the caller, which owns the chunk carry.
+    """
+    family = get_family(cfg)
+    if not hasattr(family, "decode_verify"):
+        raise ValueError(f"{cfg.name}: family {family.name!r} has no paged "
+                         "verify path (recurrent-state families keep their "
+                         "per-slot states dense)")
+
+    def fused_spec_step(params, batch, pool):
+        drafts = draft_fn(batch["hist"], batch["cur"], batch["pos"])
+        window = jnp.concatenate([batch["cur"][:, None], drafts], axis=1)
+        vbatch = {"tokens": window, "pos": batch["pos"],
+                  "page_table": batch["page_table"],
+                  "write_limit": batch["write_limit"]}
+        logits, pool = family.decode_verify(cfg, params, vbatch, pool)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return window, drafts, next_tokens, pool
+
+    return fused_spec_step
+
+
 def build_encode_step(cfg) -> Callable:
     """Encoder-only serve step (HuBERT): frames -> per-frame logits."""
     family = get_family(cfg)

@@ -83,6 +83,27 @@ def test_preempt_ttft_inflation_fails(tmp_path):
     assert "interactive_burst" in res.stdout
 
 
+def test_kv_capacity_ratio_drop_fails(tmp_path):
+    """The int8 capacity ratio gates at ZERO tolerance — any layout drift
+    (widened scale dtype, dropped scale page changing the byte math) must
+    fail, and the checker recomputes the ratio from the raw byte fields."""
+    def widen(serve):
+        serve["quantized_kv"]["int8_bytes_per_slot_token"] *= 1.5
+    res = _run(_candidates(tmp_path, serve_edit=widen))
+    assert res.returncode != 0
+    assert "capacity_ratio" in res.stdout
+
+
+def test_adaptive_low_accept_collapse_fails(tmp_path):
+    """Losing the adaptive-K recovery on the adversarial workload (adaptive
+    tok/s back to half the fixed-K rate) fails the gate."""
+    def collapse(serve):
+        serve["spec_low_accept"]["adaptive_decode_tok_s"] *= 0.5
+    res = _run(_candidates(tmp_path, serve_edit=collapse))
+    assert res.returncode != 0
+    assert "spec_low_accept.adaptive_vs_spec" in res.stdout
+
+
 def test_missing_metric_fails(tmp_path):
     """A half-run bench (scenario JSON section absent) must not pass."""
     def strip(serve):

@@ -1,15 +1,22 @@
 """Paged flash-decode kernel vs oracle (interpret mode) + engine equivalence:
 continuous batching must reproduce the static-batch engine token-for-token."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_reduced_config
-from repro.kernels import flash_decode, paged_decode_reference
+from repro.kernels import flash_decode, paged_decode_reference, quantize_pool
 from repro.models import get_family
 from repro.models.params import init_params
 from repro.serve import ContinuousBatchingEngine, ServeEngine
+
+# CI runs the kernels lane under both KV-pool layouts (see ci.yml): the
+# engine-level fixtures below build their pool from this, so the int8 lane
+# exercises quantize-on-scatter + in-kernel dequant through the whole engine.
+KV_DTYPE = os.environ.get("REPRO_KV_CACHE_DTYPE", "f32")
 
 
 def _tol(dtype):
@@ -73,6 +80,32 @@ def test_flash_decode_ragged_lengths():
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("b,h,kv,hd", [
+    (2, 4, 4, 32),     # MHA
+    (3, 8, 2, 32),     # GQA group=4
+    (2, 4, 1, 64),     # MQA
+])
+def test_flash_decode_int8_parity(b, h, kv, hd):
+    """Tiered int8 parity. Tier 1 (tight): the kernel's in-tile dequant is
+    the same arithmetic as the int8 oracle, so they agree at f32-path
+    tolerance. Tier 2 (loose): both sit inside the quantization error band
+    of exact f32 attention — per-row symmetric int8 bounds each element's
+    pre-softmax error by amax(row)/254."""
+    ps, npages = 8, 4
+    q, kp, vp, pt, lengths = _paged_case(
+        jax.random.PRNGKey(5), b, h, kv, hd, ps, npages, 32, jnp.float32)
+    qp = quantize_pool({"k": kp, "v": vp})
+    scales = dict(k_scale=qp["k_scale"], v_scale=qp["v_scale"])
+    out = flash_decode(q, qp["k"], qp["v"], pt, lengths, num_splits=2,
+                       interpret=True, **scales)
+    ref = paged_decode_reference(q, qp["k"], qp["v"], pt, lengths, **scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+    exact = paged_decode_reference(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               rtol=5e-2, atol=5e-2)
+
+
 def test_default_num_splits_occupancy_adaptive():
     """Split-KV fills idle cores at low occupancy; at high occupancy the
     batch axis already covers the chip (batch * splits ~ budget)."""
@@ -89,6 +122,7 @@ def test_default_num_splits_occupancy_adaptive():
 # ---------------------------------------------------------------------------
 
 def _make(arch="yi-6b", **kw):
+    kw.setdefault("kv_cache_dtype", KV_DTYPE)
     cfg = get_reduced_config(arch).replace(dtype="float32", page_size=8, **kw)
     fam = get_family(cfg)
     params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),

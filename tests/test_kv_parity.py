@@ -1,0 +1,220 @@
+"""int8 KV-pool parity: greedy serving over the quantized pool must be
+TOKEN-IDENTICAL to the f32 pool on this suite's workloads — plain continuous
+decode, speculative decode (fixed and adaptive window), and pause/resume —
+plus the quantization round-trip error bound, the int8 pool layout/capacity
+contract, the adaptive-window controller's shrink/grow behavior, and the
+constructor/config validation for the new knobs.
+
+Token identity is a strong check but the right one: per-row symmetric int8
+perturbs logits by well under typical greedy margins at these scales, and a
+layout or dequant bug (wrong scale row, transposed page axis) corrupts
+logits far past any margin — so the assertion is exact, not toleranced.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.kernels import dequantize_rows, quantize_rows
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import ContinuousBatchingEngine, EngineRequest
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced_config("yi-6b").replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _prompts(vocab, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, size=n).tolist() for n in lens]
+
+
+def _engine(cfg, params, dtype, **kw):
+    kw.setdefault("max_len", 64)
+    kw.setdefault("max_slots", 4)
+    return ContinuousBatchingEngine(cfg, params, kv_cache_dtype=dtype, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Token identity: int8 pool vs f32 pool
+# ---------------------------------------------------------------------------
+
+def test_int8_plain_decode_token_identity(model):
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [5, 9, 12, 7], seed=60)
+    gold = _engine(cfg, params, "f32").generate(prompts, max_new=12).tokens
+    got = _engine(cfg, params, "int8").generate(prompts, max_new=12).tokens
+    np.testing.assert_array_equal(gold, got)
+
+
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_int8_spec_decode_token_identity(model, adaptive):
+    """Speculative decode over the int8 pool — fixed-K and adaptive-K —
+    emits the plain f32 greedy tokens. Identity holds for ANY per-slot
+    window schedule: accepted draft prefixes are exact greedy matches, so
+    the adaptive controller can only change how fast tokens arrive."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [4, 11, 8, 6], seed=61)
+    gold = _engine(cfg, params, "f32").generate(prompts, max_new=12).tokens
+    got = _engine(cfg, params, "int8", decode_chunk=2,
+                  enable_spec_decode=True, spec_tokens=4,
+                  spec_adaptive_k=adaptive).generate(
+                      prompts, max_new=12).tokens
+    np.testing.assert_array_equal(gold, got)
+
+
+def test_int8_preempt_resume_token_identity(model):
+    """Pause/resume over the int8 pool is lossless: pinned pages keep their
+    quantized rows AND scale rows, so the resumed request emits exactly the
+    tokens of a never-paused f32 run."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [5, 9, 13], seed=62)
+    gold = _engine(cfg, params, "f32", max_slots=3).generate(
+        prompts, max_new=10).tokens
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   prefill_chunk=8, decode_chunk=2,
+                                   kv_cache_dtype="int8")
+    for rid, p in enumerate(prompts[:2]):
+        eng.enqueue(EngineRequest(rid, list(p), 10))
+    eng.admit()
+    done = {}
+    for req, toks in eng.decode_step():
+        done[req.rid] = toks
+    slot0 = next(s for s, l in eng._live.items() if l.req.rid == 0)
+    paused = eng.preempt(slot0)
+    assert 0 < paused.emitted < 10          # genuinely mid-stream
+    eng.enqueue(EngineRequest(2, list(prompts[2]), 10))
+    eng.admit()
+    resumed = False
+    for _ in range(200):
+        for req, toks in eng.decode_step():
+            done[req.rid] = toks
+        if not resumed and eng.free_slots > 0:
+            eng.resume(paused)
+            resumed = True
+        if len(done) == 3 and not eng.has_work:
+            break
+    assert resumed and len(done) == 3
+    got = np.stack([np.asarray(done[i], np.int32) for i in range(3)])
+    np.testing.assert_array_equal(gold, got)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-window controller behavior
+# ---------------------------------------------------------------------------
+
+def test_adaptive_k_shrinks_on_low_acceptance(model):
+    """Full-vocab random content: the drafter accepts ~nothing, so every
+    slot's window must shrink below K (and the engine dispatch drop to a
+    smaller verify bucket) within a few chunks."""
+    cfg, params = model
+    prompts = _prompts(cfg.vocab_size, [8, 6], seed=63)
+    eng = ContinuousBatchingEngine(cfg, params, max_len=64, max_slots=2,
+                                   decode_chunk=2, enable_spec_decode=True,
+                                   spec_tokens=4, spec_adaptive_k=True)
+    for rid, p in enumerate(prompts):
+        eng.enqueue(EngineRequest(rid, list(p), 16))
+    eng.admit()
+    assert all(st["kslot"] == 4 for st in eng.slot_spec_state().values())
+    seen = set()
+    while eng.has_work:
+        eng.decode_step()
+        seen.update(st["kslot"] for st in eng.slot_spec_state().values())
+    assert min(seen) < 4                    # windows shrank
+    assert len(eng._spec_chunks) > 1        # a smaller verify bucket traced
+
+
+def test_adaptive_k_grows_on_high_acceptance(model):
+    """Repetitive small-vocab content self-seeded with the model's own
+    greedy prefix: acceptance ~1, so a window knocked down to 1 must grow
+    back once the accept-rate EMA clears the threshold."""
+    cfg, params = model
+    scfg = cfg.replace(vocab_size=4)
+    fam = get_family(scfg)
+    sparams = init_params(fam.layout(scfg), jax.random.PRNGKey(0),
+                          scfg.param_dtype)
+    head = [0, 1, 2, 3] * 4
+    seed = ContinuousBatchingEngine(
+        scfg, sparams, max_len=96, max_slots=1).generate(
+            [head], max_new=24).tokens[0].tolist()
+    eng = ContinuousBatchingEngine(scfg, sparams, max_len=96, max_slots=1,
+                                   decode_chunk=2, enable_spec_decode=True,
+                                   spec_tokens=4, spec_adaptive_k=True)
+    eng.enqueue(EngineRequest(0, head + seed, 24))
+    eng.admit()
+    slot = next(iter(eng._live))
+    eng._kslot[slot] = 1                    # start from a collapsed window
+    grown = 1
+    while eng.has_work:
+        eng.decode_step()
+        for st in eng.slot_spec_state().values():
+            grown = max(grown, st["kslot"])
+    assert grown > 1
+    assert eng.mean_accept_ema > 0.5
+
+
+# ---------------------------------------------------------------------------
+# Quantization numerics and pool layout
+# ---------------------------------------------------------------------------
+
+def test_quantize_round_trip_error_bound():
+    """Per-row symmetric int8: |round-trip error| <= amax(row)/254 per
+    element (scale = amax/127, round-to-nearest), across 3 decades of row
+    magnitude; all-zero rows survive exactly (scale floor, no 0/0)."""
+    rng = np.random.RandomState(0)
+    x = (rng.randn(64, 32) * rng.uniform(1e-2, 10.0, size=(64, 1))) \
+        .astype(np.float32)
+    q, s = quantize_rows(x)
+    back = np.asarray(dequantize_rows(q, s))
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    assert np.all(np.abs(back - x) <= amax / 254 + 1e-7)
+    qz, sz = quantize_rows(np.zeros((4, 8), np.float32))
+    assert not np.asarray(qz).any()
+    assert not np.asarray(dequantize_rows(qz, sz)).any()
+
+
+def test_int8_pool_layout_and_capacity(model):
+    """Scale pages mirror data pages minus the head_dim axis, and the int8
+    layout's bytes-per-row advantage is exactly 4*hd/(hd+4)."""
+    cfg, params = model
+    fam = get_family(cfg)
+    pool = fam.paged_pool(cfg, 8, "int8")
+    assert set(pool) == {"k", "v", "k_scale", "v_scale"}
+    assert pool["k"].dtype == np.int8
+    assert pool["k_scale"].dtype == np.float32
+    assert pool["k_scale"].shape == pool["k"].shape[:-1]
+    f32 = fam.paged_pool(cfg, 8, "f32")
+    assert set(f32) == {"k", "v"}
+    ratio = (sum(leaf.nbytes for leaf in f32.values())
+             / sum(leaf.nbytes for leaf in pool.values()))
+    hd = pool["k"].shape[-1]
+    assert ratio == pytest.approx(4 * hd / (hd + 4))
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_kv_cache_dtype_validated():
+    with pytest.raises(ValueError, match="kv_cache_dtype"):
+        get_reduced_config("yi-6b").replace(kv_cache_dtype="fp8")
+
+
+def test_int8_requires_paged_prefill(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=1,
+                                 prefill_mode="dense", kv_cache_dtype="int8")
+
+
+def test_adaptive_requires_spec_decode(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="enable_spec_decode"):
+        ContinuousBatchingEngine(cfg, params, max_len=32, max_slots=1,
+                                 spec_adaptive_k=True)

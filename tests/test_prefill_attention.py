@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_prefill, paged_prefill_reference
+from repro.kernels import flash_prefill, paged_prefill_reference, quantize_pool
 from repro.kernels.decode_attention.ref import gather_pages
 from repro.models.layers import dense_attention
 
@@ -53,6 +53,30 @@ def test_flash_prefill_chunk_sizes(c):
     ref = paged_prefill_reference(q, kp, vp, pt, qs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,h,kv,hd", [
+    (2, 4, 4, 32),     # MHA
+    (3, 8, 2, 32),     # GQA group=4
+    (2, 4, 1, 64),     # MQA
+])
+def test_flash_prefill_int8_parity(b, h, kv, hd):
+    """Tiered int8 parity (see test_flash_decode_int8_parity): tier 1 pins
+    the kernel's in-tile dequant to the int8 oracle at f32-path tolerance;
+    tier 2 bounds both against exact f32 attention by the per-row
+    quantization error band."""
+    c, ps, npages = 8, 8, 4
+    q, kp, vp, pt, qs = _case(
+        jax.random.PRNGKey(6), b, c, h, kv, hd, ps, npages, 32, jnp.float32)
+    qp = quantize_pool({"k": kp, "v": vp})
+    scales = dict(k_scale=qp["k_scale"], v_scale=qp["v_scale"])
+    out = flash_prefill(q, qp["k"], qp["v"], pt, qs, interpret=True, **scales)
+    ref = paged_prefill_reference(q, qp["k"], qp["v"], pt, qs, **scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+    exact = paged_prefill_reference(q, kp, vp, pt, qs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               rtol=5e-2, atol=5e-2)
 
 
 def test_flash_prefill_chunk_offsets():

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import (flash_verify, paged_decode_reference,
-                           paged_verify_reference)
+                           paged_verify_reference, quantize_pool)
 from repro.kernels.decode_attention.ref import gather_pages
 from repro.models.layers import dense_attention
 
@@ -82,6 +82,31 @@ def test_verify_window_positions():
     ref = paged_verify_reference(q, kp, vp, pt, pos)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,h,kv,hd", [
+    (2, 4, 4, 32),     # MHA
+    (3, 8, 2, 32),     # GQA group=4
+    (2, 4, 1, 64),     # MQA
+])
+def test_flash_verify_int8_parity(b, h, kv, hd):
+    """Tiered int8 parity (see test_flash_decode_int8_parity): tier 1 pins
+    the kernel's in-tile dequant to the int8 oracle at f32-path tolerance;
+    tier 2 bounds both against exact f32 attention by the per-row
+    quantization error band."""
+    t, ps, npages = 5, 8, 4
+    q, kp, vp, pt, pos = _case(
+        jax.random.PRNGKey(6), b, t, h, kv, hd, ps, npages, 32, jnp.float32)
+    qp = quantize_pool({"k": kp, "v": vp})
+    scales = dict(k_scale=qp["k_scale"], v_scale=qp["v_scale"])
+    out = flash_verify(q, qp["k"], qp["v"], pt, pos, num_splits=2,
+                       interpret=True, **scales)
+    ref = paged_verify_reference(q, qp["k"], qp["v"], pt, pos, **scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+    exact = paged_verify_reference(q, kp, vp, pt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               rtol=5e-2, atol=5e-2)
 
 
 def test_verify_reference_degenerates_to_decode():
