@@ -65,6 +65,17 @@ def _low_accept_adaptive_vs_spec(r: dict) -> float:
     return s["adaptive_decode_tok_s"] / s["spec_decode_tok_s"]
 
 
+def _fleet_tok_ratio(r: dict) -> float:
+    f = r["fleet_routing"]
+    return f["affinity"]["tok_per_sim_s"] / f["blind"]["tok_per_sim_s"]
+
+
+def _fleet_ttft_ratio(r: dict) -> float:
+    f = r["fleet_routing"]
+    return (f["blind"]["interactive_p99_ttft_s"]
+            / f["affinity"]["interactive_p99_ttft_s"])
+
+
 def _kv_tok_s_ratio(r: dict) -> float:
     q = r["quantized_kv"]
     return q["int8_decode_tok_s"] / q["f32_decode_tok_s"]
@@ -135,6 +146,18 @@ METRICS = [
     Metric("gateway", "interactive_burst.preempt.interactive_sla_rate",
            lambda r: r["interactive_burst"]["preempt"]
            ["interactive_sla_rate"], "higher", 0.0),
+    # Fleet routing: affinity must keep beating blind on the same trace.
+    # Both ratios recomputed from the raw per-mode fields (virtual clock,
+    # host-independent); page-ship bytes are a pure KV-layout constant —
+    # any drift (dropped scale page, widened dtype, extra pages shipped)
+    # is a bug, so they gate exactly.
+    Metric("gateway", "fleet_routing.tok_ratio_affinity_over_blind",
+           _fleet_tok_ratio, "higher", 0.10),
+    Metric("gateway", "fleet_routing.ttft_p99_ratio_blind_over_affinity",
+           _fleet_ttft_ratio, "higher", 0.25),
+    Metric("gateway", "fleet_routing.page_ship_bytes_per_request",
+           lambda r: r["fleet_routing"]["page_ship_bytes_per_request"],
+           "lower", 0.0),
 ]
 
 

@@ -30,6 +30,18 @@ provisioning: makespan / cost / wait) plus its §VI isolation guarantees:
    interactive TTFT with preemption vs. the wait baseline is the headline;
    the shed count of ``no_preempt`` shows the only alternative under real
    deadlines.
+4. ``fleet_routing``: a Zipf-skewed multi-tenant backlog over a static
+   3-replica fleet, run under **affinity** routing (replicas advertise
+   radix fingerprints of their prefix caches; the router places each
+   request where its prefix is already resident) and **blind** round-robin
+   on the identical trace. The page pool is tighter than every tenant's
+   prefix on every replica, so blind churns the caches while affinity
+   partitions tenants into stable residency — fleet tok/sim-s and p99 TTFT
+   ratios are the headline. A third run (**disagg**) splits the fleet into
+   1 prefill-specialized + 2 decode replicas: admission prefill happens on
+   the prefill replica, finished KV pages ship to a decode replica
+   (``export_pages``/``import_pages``), and the per-request shipping bytes
+   are recorded (and exactly gated — they are a pure layout constant).
 
 Results land in ``BENCH_gateway.json`` alongside the CSV rows that
 ``benchmarks/run.py`` prints. ``--smoke`` runs a one-burst subset for CI
@@ -83,10 +95,12 @@ def _build():
     return cfg, params
 
 
-def _factory(cfg, params):
-    return lambda: ContinuousBatchingEngine(
-        cfg, params, max_len=MAX_LEN, max_slots=SLOTS, prefill_chunk=8,
-        decode_chunk=4)
+def _factory(cfg, params, **kw):
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_chunk", 4)
+    return lambda: ContinuousBatchingEngine(cfg, params, **kw)
 
 
 def _security():
@@ -335,6 +349,166 @@ def _bench_interactive_burst(cfg, params, verbose, results):
              f"speedup={results['interactive_burst']['ttft_speedup']:.2f}x")]
 
 
+FLEET_TENANTS = tuple(f"tenant{i}" for i in range(6))
+FLEET_PREFIX_LEN = 32           # per-tenant hot system prompt (4 pages)
+FLEET_REPLICAS = 3
+FLEET_MAX_NEW = 8
+FLEET_ZIPF_ALPHA = 1.1          # tenant popularity skew
+FLEET_JOBS = 60
+FLEET_SMOKE_JOBS = 24
+FLEET_ARRIVAL_GAP_S = 0.1       # near-saturation: routing decides who queues
+# One decode slot per replica and a page pool that durably caches ~2
+# tenants' prefixes, not all 6: placement is an actual choice (an affinity
+# winner may be busy) and residency is contended (blind round-robin smears
+# all 6 prefixes over every replica and churns them out).
+FLEET_SLOTS = 1
+FLEET_NUM_PAGES = 24
+# Prefill-heavy service point: a fresh 32-token prefix costs 0.5 sim-s
+# against an 0.08 sim-s decode, so WHERE a request lands (cached prefix or
+# not) dominates fleet throughput — the regime prefix-affinity routing is
+# for. Decode-biased workloads are covered by the ``trace`` scenario.
+FLEET_SERVICE = ServiceModel(prefill_tok_per_s=64.0, decode_step_s=0.01)
+
+
+def _fleet_security():
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = {t: provision_tenant(sec, t, f"pw-{t}", data_zones=("public",))
+              for t in FLEET_TENANTS}
+    return sec, tokens
+
+
+def _fleet_trace(cfg, jobs: int):
+    """(tenant, prompt) rows: Zipf-skewed tenant choice, per-tenant hot
+    prefix + small unique tail. Arrivals are paced every
+    ``FLEET_ARRIVAL_GAP_S`` sim-seconds — near the fleet's warm-cache
+    service rate, so bad placement (fresh prefill where a cached copy
+    exists elsewhere) is what builds queues."""
+    rng = np.random.RandomState(1234)
+    prefixes = {t: rng.randint(0, cfg.vocab_size,
+                               size=FLEET_PREFIX_LEN).tolist()
+                for t in FLEET_TENANTS}
+    w = 1.0 / np.arange(1, len(FLEET_TENANTS) + 1) ** FLEET_ZIPF_ALPHA
+    w /= w.sum()
+    rows = []
+    for i in range(jobs):
+        tenant = FLEET_TENANTS[rng.choice(len(FLEET_TENANTS), p=w)]
+        tail = rng.randint(0, cfg.vocab_size, size=2 + i % 5).tolist()
+        rows.append((tenant, prefixes[tenant] + tail))
+    return rows
+
+
+def _bench_fleet_routing(cfg, params, verbose, results,
+                         jobs: int = FLEET_JOBS):
+    """Prefix-affinity routing vs blind round-robin on a Zipf-skewed
+    multi-tenant backlog, plus a disaggregated prefill/decode fleet.
+
+    ``affinity`` and ``blind`` run the IDENTICAL trace on identical static
+    3-replica fleets; only the router differs. The per-replica page pool is
+    deliberately smaller than 6 tenants' hot prefixes plus the active
+    working set, so blind round-robin — which smears every tenant across
+    every replica — churns the caches while affinity partitions tenants
+    into stable residency. ``disagg`` reruns affinity with a 1-prefill +
+    2-decode split fleet and reports the KV page-shipping bill per request
+    (a pure layout constant: the regression gate pins it exactly).
+    """
+    trace = _fleet_trace(cfg, jobs)
+    out = {}
+
+    def run_mode(mode):
+        sec, tokens = _fleet_security()
+        kw = dict(max_slots=FLEET_SLOTS, num_pages=FLEET_NUM_PAGES)
+        if mode == "disagg":
+            gw = KottaServeGateway(
+                _factory(cfg, params, role="decode", **kw), sec,
+                scaling=ScalingPolicy.none(FLEET_REPLICAS - 1,
+                                           market="on_demand"),
+                service_model=FLEET_SERVICE, routing="affinity",
+                prefill_replicas=1,
+                prefill_engine_factory=_factory(cfg, params, role="prefill",
+                                                prefill_chunk=16, **kw))
+        else:
+            gw = KottaServeGateway(
+                _factory(cfg, params, **kw), sec,
+                scaling=ScalingPolicy.none(FLEET_REPLICAS,
+                                           market="on_demand"),
+                service_model=FLEET_SERVICE, routing=mode)
+        rids = []
+        rounds = 0
+        for i, (tenant, prompt) in enumerate(trace):
+            while gw.clock.now() < i * FLEET_ARRIVAL_GAP_S:
+                gw.step()
+                rounds += 1
+                if rounds > 50_000:
+                    raise RuntimeError(f"fleet[{mode}] stalled before "
+                                       f"arrival {i}")
+            rids.append(gw.submit(tokens[tenant], prompt,
+                                  max_new=FLEET_MAX_NEW, priority=0,
+                                  data_zone="public"))
+        gw.drain()
+        m = gw.metrics()
+        engs = [gw.replica_engine(e["replica"]) for e in m["per_replica"]]
+        cached = sum(e.stats["cached_tokens"] for e in engs)
+        fresh = sum(e.stats["prefill_tokens"] for e in engs)
+        m["fleet_prefix_hit_rate"] = cached / max(cached + fresh, 1)
+        m["fresh_prefill_tokens"] = int(fresh)
+        m["page_ship_bytes_per_request"] = (
+            m["page_ship_bytes"] / max(m["completed"], 1))
+        m["all_done"] = all(gw.jobs[r].status is JobState.DONE for r in rids)
+        return m
+
+    for mode in ("affinity", "blind", "disagg"):
+        out[mode] = run_mode(mode)
+        assert out[mode]["all_done"], f"fleet[{mode}]: not all jobs finished"
+
+    tok_ratio = (out["affinity"]["tok_per_sim_s"]
+                 / max(out["blind"]["tok_per_sim_s"], 1e-12))
+    ttft_ratio = (out["blind"]["interactive_p99_ttft_s"]
+                  / max(out["affinity"]["interactive_p99_ttft_s"], 1e-3))
+    results["fleet_routing"] = {
+        "jobs": jobs, "tenants": len(FLEET_TENANTS),
+        "replicas": FLEET_REPLICAS, "zipf_alpha": FLEET_ZIPF_ALPHA,
+        "prefix_len": FLEET_PREFIX_LEN,
+        "affinity": out["affinity"], "blind": out["blind"],
+        "disagg": out["disagg"],
+        "tok_ratio_affinity_over_blind": tok_ratio,
+        "ttft_p99_ratio_blind_over_affinity": ttft_ratio,
+        "page_ship_bytes_per_request":
+            out["disagg"]["page_ship_bytes_per_request"]}
+    if verbose:
+        print(f"\n== gateway: prefix-affinity fleet routing ({jobs} jobs, "
+              f"{len(FLEET_TENANTS)} tenants Zipf {FLEET_ZIPF_ALPHA}, "
+              f"{FLEET_REPLICAS} replicas) ==")
+        print(f"{'mode':<10}{'tok/sim-s':>11}{'p99 TTFT':>10}{'hit%':>7}"
+              f"{'fresh tok':>11}{'ships':>7}{'MB/req':>8}")
+        for mode in ("affinity", "blind", "disagg"):
+            m = out[mode]
+            print(f"{mode:<10}{m['tok_per_sim_s']:>11.1f}"
+                  f"{m['interactive_p99_ttft_s']:>9.2f}s"
+                  f"{100 * m['fleet_prefix_hit_rate']:>6.1f}%"
+                  f"{m['fresh_prefill_tokens']:>11}"
+                  f"{m['page_ships']:>7}"
+                  f"{m['page_ship_bytes_per_request'] / 1e6:>8.2f}")
+        print(f"headline: affinity/blind fleet tok/s = {tok_ratio:.2f}x, "
+              f"blind/affinity p99 TTFT = {ttft_ratio:.2f}x; disagg ships "
+              f"{out['disagg']['page_ship_bytes_per_request'] / 1e6:.2f} "
+              f"MB/request")
+    return [("gateway.fleet.affinity",
+             out["affinity"]["interactive_p99_ttft_s"] * 1e6,
+             f"tok_sim_s={out['affinity']['tok_per_sim_s']:.1f};"
+             f"hit={out['affinity']['fleet_prefix_hit_rate']:.2f};"
+             f"tok_ratio_vs_blind={tok_ratio:.2f}x"),
+            ("gateway.fleet.blind",
+             out["blind"]["interactive_p99_ttft_s"] * 1e6,
+             f"tok_sim_s={out['blind']['tok_per_sim_s']:.1f};"
+             f"hit={out['blind']['fleet_prefix_hit_rate']:.2f}"),
+            ("gateway.fleet.disagg",
+             out["disagg"]["interactive_p99_ttft_s"] * 1e6,
+             f"tok_sim_s={out['disagg']['tok_per_sim_s']:.1f};"
+             f"ships={out['disagg']['page_ships']};"
+             f"mb_per_req="
+             f"{out['disagg']['page_ship_bytes_per_request'] / 1e6:.2f}")]
+
+
 def _bench_isolation(cfg, params, verbose, results):
     """Tenant-scoped prefix cache: same prompt, zero cross-tenant hits."""
     sec, tokens = _security()
@@ -391,6 +565,9 @@ def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
     scenarios += [
         ("interactive_burst", lambda: _bench_interactive_burst(
             cfg, params, verbose, results)),
+        ("fleet_routing", lambda: _bench_fleet_routing(
+            cfg, params, verbose, results,
+            jobs=FLEET_SMOKE_JOBS if smoke else FLEET_JOBS)),
         ("isolation", lambda: _bench_isolation(cfg, params, verbose,
                                                results)),
     ]

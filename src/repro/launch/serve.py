@@ -24,6 +24,14 @@ scheduled Kotta job:
   (reported, not hung).
 - ``--replicas R`` sizes a static on-demand replica fleet (elastic spot
   autoscaling is exercised in ``benchmarks/gateway_bench.py``).
+- ``--routing affinity|least-loaded|blind`` picks the fleet placement
+  policy (prefix-affinity over replica radix fingerprints is the
+  default); passing it explicitly also gives every tenant a hot shared
+  prefix so the affinity/hit-rate numbers have something to show.
+- ``--disaggregate N_PREFILL:N_DECODE`` splits the fleet into
+  prefill-specialized and decode-specialized replicas: admission prefill
+  runs on a prefill replica and the finished KV pages ship to a decode
+  replica per request (the summary prints ships and bytes/ship).
 - ``--interactive-burst`` (implies ``--gateway``) demos deadline-aware
   decode preemption: long batch-class jobs occupy every decode slot, then a
   burst of tight-deadline interactive requests arrives. Each infeasible
@@ -72,23 +80,61 @@ def _run_gateway(cfg, params, args) -> None:
     # config knob decides whether infeasible interactive requests may pause
     # a batch-class slot instead of being shed.
     svc = ServiceModel()
-    gw = KottaServeGateway(
-        lambda: ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
-                                         enable_spec_decode=args.spec,
-                                         kv_cache_dtype=args.kv_dtype,
-                                         spec_adaptive_k=args.adaptive_k
-                                         or None),
-        sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
-        service_model=svc,
-        admission=DeadlineCostPolicy(
-            model=svc, preempt=cfg.enable_decode_preemption))
+    routing = (args.routing or "affinity").replace("-", "_")
+
+    def factory(**kw):
+        kw.setdefault("max_len", args.max_len)
+        return lambda: ContinuousBatchingEngine(
+            cfg, params, enable_spec_decode=args.spec,
+            kv_cache_dtype=args.kv_dtype,
+            spec_adaptive_k=args.adaptive_k or None, **kw)
+
+    if args.disaggregate:
+        n_prefill, n_decode = args.disaggregate
+        gw = KottaServeGateway(
+            factory(role="decode"), sec,
+            scaling=ScalingPolicy.none(n_decode, market="on_demand"),
+            service_model=svc, routing=routing,
+            prefill_replicas=n_prefill,
+            prefill_engine_factory=factory(role="prefill"),
+            admission=DeadlineCostPolicy(
+                model=svc, preempt=cfg.enable_decode_preemption))
+        fleet_desc = f"{n_prefill} prefill + {n_decode} decode replica(s)"
+    else:
+        gw = KottaServeGateway(
+            factory(), sec,
+            scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
+            service_model=svc, routing=routing,
+            admission=DeadlineCostPolicy(
+                model=svc, preempt=cfg.enable_decode_preemption))
+        fleet_desc = f"{args.replicas} static replica(s)"
     prompts = _demo_prompts(cfg, args.batch)
-    rids = [gw.submit(tokens[i % len(tokens)], p, max_new=args.max_new,
-                      deadline_s=args.deadline_s, data_zone="public")
-            for i, p in enumerate(prompts)]
-    gw.drain()
-    print(f"engine: gateway ({args.replicas} static replica(s), "
-          f"{args.tenants} tenant(s))")
+    if args.routing is not None or args.disaggregate:
+        # Give each tenant a hot 2-page prefix so the routing/shipping
+        # demo has cache residency to exploit (and to show in the stats).
+        ps = cfg.page_size
+        prompts = [[(17 + 31 * (i % len(tokens)) + j) % cfg.vocab_size
+                    for j in range(2 * ps)] + p
+                   for i, p in enumerate(prompts)]
+    rids = []
+    if args.routing is not None or args.disaggregate:
+        # Two waves: the first warms each tenant's prefix onto a replica,
+        # then the router places the rest against live fingerprints —
+        # submitted all at once, nothing would have residency to hit.
+        for wave in (prompts[:len(tokens)], prompts[len(tokens):]):
+            rids += [gw.submit(tokens[(len(rids) + i) % len(tokens)], p,
+                               max_new=args.max_new,
+                               deadline_s=args.deadline_s,
+                               data_zone="public")
+                     for i, p in enumerate(wave)]
+            gw.drain()
+    else:
+        rids = [gw.submit(tokens[i % len(tokens)], p, max_new=args.max_new,
+                          deadline_s=args.deadline_s, data_zone="public")
+                for i, p in enumerate(prompts)]
+        gw.drain()
+    print(f"engine: gateway ({fleet_desc}, "
+          f"{args.tenants} tenant(s), routing={routing})")
     for i, (p, rid) in enumerate(zip(prompts, rids)):
         job = gw.jobs[rid]
         if job.status is JobState.DONE:
@@ -101,6 +147,15 @@ def _run_gateway(cfg, params, args) -> None:
     print(f"deadline hit rate {m['deadline_hit_rate']:.2f}   shed "
           f"{m['shed']}   audit: {len(audit.records(decision='allow'))} "
           f"allows / {len(audit.records(decision='deny'))} denies")
+    if args.routing is not None or args.disaggregate:
+        print(f"routing decisions: {m['routing']}")
+        if m["page_ships"]:
+            print(f"page shipping: {m['page_ships']} ships, "
+                  f"{m['page_ship_bytes_per_ship'] / 1e6:.2f} MB/ship")
+        for e in m["per_replica"]:
+            print(f"  replica {e['replica']} ({e['role']}): dispatched "
+                  f"{e['dispatched']}, prefix hit rate "
+                  f"{e['prefix_hit_rate']:.1%}")
 
 
 def _run_interactive_burst(cfg, params, args) -> None:
@@ -167,6 +222,18 @@ def _run_interactive_burst(cfg, params, args) -> None:
           f" resume records")
 
 
+def _disaggregate_spec(spec: str) -> tuple[int, int]:
+    try:
+        n_prefill, n_decode = (int(x) for x in spec.split(":"))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"want N_PREFILL:N_DECODE, got {spec!r}")
+    if n_prefill < 1 or n_decode < 1:
+        raise argparse.ArgumentTypeError(
+            "need at least one prefill and one decode replica")
+    return n_prefill, n_decode
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_NAMES), default="yi-6b")
@@ -200,6 +267,20 @@ def main() -> None:
                          "infeasible requests are shed, typed)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="gateway: static on-demand replica count")
+    ap.add_argument("--routing", default=None,
+                    choices=("affinity", "least-loaded", "blind"),
+                    help="gateway: fleet placement policy (default "
+                         "affinity: requests land where their prefix is "
+                         "already cached, least-loaded fallback, "
+                         "load-imbalance capped). Passing the flag also "
+                         "gives tenants hot shared prefixes so the demo "
+                         "has residency to route on")
+    ap.add_argument("--disaggregate", default=None,
+                    metavar="N_PREFILL:N_DECODE", type=_disaggregate_spec,
+                    help="gateway: split the fleet into prefill-specialized"
+                         " and decode-specialized replicas (e.g. 1:2); "
+                         "finished KV pages ship prefill -> decode per "
+                         "request")
     ap.add_argument("--interactive-burst", action="store_true",
                     help="gateway demo: batch jobs hold every decode slot, "
                          "a tight-deadline interactive burst preempts them "
@@ -211,6 +292,8 @@ def main() -> None:
     if args.adaptive_k and not args.spec:
         raise SystemExit("--adaptive-k requires --spec (it governs the "
                          "speculative draft window)")
+    if (args.routing or args.disaggregate) and not args.gateway:
+        args.gateway = True      # routing flags only make sense fleet-wide
 
     cfg = get_reduced_config(args.arch)
     if cfg.encoder_only:

@@ -8,6 +8,7 @@ and are consumed by ``lax.scan``.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -64,7 +65,11 @@ def init_params(layout, key, param_dtype="float32"):
     def go(node, path):
         if isinstance(node, ParamSpec):
             dt = _leaf_dtype(node, param_dtype)
-            sub = jax.random.fold_in(key, hash(path) % (2**31))
+            # crc32, NOT hash(): str hashes are salted per process
+            # (PYTHONHASHSEED), which would give every process different
+            # "deterministic" weights — and turn any cross-engine
+            # token-identity test into a lottery on near-tie logits.
+            sub = jax.random.fold_in(key, zlib.crc32(path.encode()))
             if node.init == "zeros":
                 return jnp.zeros(node.shape, dt)
             if node.init == "ones":

@@ -3,13 +3,15 @@ from .admission import (AdmissionError, AdmissionPolicy, CostBudgetExceeded,
                         JobState, PreemptCandidate, ServeJob, ServiceModel)
 from .drafting import build_ngram_draft
 from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
-                     ServeEngine, ServeResult)
+                     ServeEngine, ServeResult, ShippedKV)
 from .gateway import KottaServeGateway
-from .paging import PageAllocator, PrefixCache
+from .paging import PageAllocator, PrefixCache, chain_hashes
+from .routing import FleetRouter, ReplicaView, RouteDecision
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
-           "PausedRequest", "ServeResult", "PageAllocator", "PrefixCache",
-           "KottaServeGateway", "ServeJob", "JobState", "ServiceModel",
-           "AdmissionPolicy", "FCFSPolicy", "DeadlineCostPolicy",
-           "PreemptCandidate", "AdmissionError", "DeadlineInfeasible",
-           "CostBudgetExceeded", "build_ngram_draft"]
+           "PausedRequest", "ServeResult", "ShippedKV", "PageAllocator",
+           "PrefixCache", "chain_hashes", "FleetRouter", "ReplicaView",
+           "RouteDecision", "KottaServeGateway", "ServeJob", "JobState",
+           "ServiceModel", "AdmissionPolicy", "FCFSPolicy",
+           "DeadlineCostPolicy", "PreemptCandidate", "AdmissionError",
+           "DeadlineInfeasible", "CostBudgetExceeded", "build_ngram_draft"]

@@ -128,12 +128,24 @@ class ServiceModel:
 
     prefill_tok_per_s: float = 4096.0
     decode_step_s: float = 0.05      # one lockstep token row across slots
+    # Page-shipping bandwidth for disaggregated prefill->decode handoffs
+    # (host/interconnect copy of the finished KV pages).
+    kv_ship_bytes_per_s: float = 8e9
 
     def prefill_s(self, n_tokens: int) -> float:
         return n_tokens / self.prefill_tok_per_s
 
-    def service_s(self, prompt_len: int, max_new: int) -> float:
-        return self.prefill_s(prompt_len) + max_new * self.decode_step_s
+    def ship_s(self, nbytes: int) -> float:
+        return nbytes / self.kv_ship_bytes_per_s
+
+    def service_s(self, prompt_len: int, max_new: int,
+                  cached_tokens: int = 0) -> float:
+        """End-to-end service estimate; ``cached_tokens`` is the prompt
+        prefix the target replica already holds (routing-aware feasibility:
+        an affinity hit shrinks the prefill bill, never below the one
+        always-recomputed token)."""
+        fresh = max(prompt_len - max(cached_tokens, 0), 1)
+        return self.prefill_s(fresh) + max_new * self.decode_step_s
 
 
 class AdmissionPolicy:
@@ -145,10 +157,16 @@ class AdmissionPolicy:
         return sorted(jobs, key=lambda j: (j.submitted_at, j.rid))
 
     def plan(self, jobs: list[ServeJob], slot_free_s: list[float],
-             now: float, price_per_slot_hour: float,
+             now: float, price_per_slot_hour: float, *,
+             cached_tokens: dict[int, int] | None = None,
              ) -> tuple[list[ServeJob], list[tuple[ServeJob,
                                                    AdmissionError]]]:
-        """Return (keep_ordered, shed) — FCFS keeps everything."""
+        """Return (keep_ordered, shed) — FCFS keeps everything.
+
+        ``cached_tokens`` maps job rid -> prompt tokens the routing tier
+        expects the chosen replica to serve from its prefix cache (ignored
+        by FCFS, which does no feasibility math).
+        """
         return self.order(jobs, now), []
 
     def plan_preemption(self, job: ServeJob,
@@ -188,14 +206,21 @@ class DeadlineCostPolicy(AdmissionPolicy):
             j.deadline if j.deadline is not None else math.inf,
             j.submitted_at, j.rid))
 
-    def plan(self, jobs, slot_free_s, now, price_per_slot_hour):
+    def plan(self, jobs, slot_free_s, now, price_per_slot_hour, *,
+             cached_tokens=None):
         ordered = self.order(jobs, now)
         keep: list[ServeJob] = []
         shed: list[tuple[ServeJob, AdmissionError]] = []
         horizon = list(slot_free_s)
         heapq.heapify(horizon)
         for job in ordered:
-            svc = self.model.service_s(len(job.prompt), job.max_new)
+            # Routing-aware feasibility: prompt tokens the router expects
+            # the affinity target to serve from cache don't bill prefill
+            # time, so a request that is only feasible ON its warm replica
+            # is kept instead of shed.
+            cached = 0 if cached_tokens is None \
+                else cached_tokens.get(job.rid, 0)
+            svc = self.model.service_s(len(job.prompt), job.max_new, cached)
             if not job.requeued and job.cost_budget is not None:
                 est_cost = svc / 3600.0 * price_per_slot_hour
                 if est_cost > job.cost_budget:

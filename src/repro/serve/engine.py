@@ -224,6 +224,45 @@ class PausedRequest:
     ema: float = 0.0
 
 
+@dataclass
+class ShippedKV:
+    """A request's finished KV pages in flight between engines.
+
+    The disaggregated-serving handoff payload: a prefill-role replica runs
+    admission prefill, ``export_pages`` snapshots the request's *content*
+    pages (the ``ceil(pos / page_size)`` pages actually holding KV rows —
+    trailing decode-budget pages are empty and never ship) into host arrays,
+    and ``import_pages`` on a decode-role replica re-registers everything:
+    fresh pages from the destination allocator, a page-table row, the
+    destination's radix prefix cache (so the shipped prefix stays shareable
+    after the hop), and the decode cursor exactly where the source stopped.
+    Greedy decode continues token-identically to a never-shipped run.
+
+    ``content`` maps every pool leaf name to a ``(L, KV, n_content,
+    page_size[, hd])`` host array — for int8 pools that is the int8 data
+    pages AND their f32 ``k_scale``/``v_scale`` pages, so dequantization
+    state travels with the data.
+    """
+    req: EngineRequest
+    emitted: int
+    tokens: list[int]
+    cur: int                    # next token to emit (seeds dest decode)
+    pos: int                    # == len(prompt) + emitted
+    content: dict[str, np.ndarray]
+    kv_cache_dtype: str
+    page_size: int
+    hist: np.ndarray | None = None     # spec-decode drafting history, if any
+
+    @property
+    def n_content(self) -> int:
+        return next(iter(self.content.values())).shape[2]
+
+    @property
+    def nbytes(self) -> int:
+        """Wire size of the shipped pages (data + scale pages alike)."""
+        return sum(a.nbytes for a in self.content.values())
+
+
 def _next_pow2(n: int) -> int:
     """Bucket size for wave-shaped device calls: a handful of jit
     signatures (1, 2, 4, ...) instead of one per wave width."""
@@ -253,11 +292,25 @@ class ContinuousBatchingEngine:
                  spec_tokens: int | None = None,
                  spec_ngram: int | None = None,
                  kv_cache_dtype: str | None = None,
-                 spec_adaptive_k: bool | None = None):
+                 spec_adaptive_k: bool | None = None,
+                 role: str = "unified"):
         if cfg.encoder_only:
             raise ValueError("encoder-only models cannot decode")
         if prefill_mode not in ("paged", "dense"):
             raise ValueError(f"prefill_mode {prefill_mode!r}")
+        if role not in ("unified", "prefill", "decode"):
+            raise ValueError(f"role must be 'unified', 'prefill' or "
+                             f"'decode', got {role!r}")
+        self.role = role
+        if role == "prefill":
+            # A prefill-specialized replica only runs admission prefill and
+            # ships the finished pages out (export_pages); it never decodes,
+            # so speculation has nothing to govern there.
+            if enable_spec_decode:
+                raise ValueError("role='prefill' engines never decode; "
+                                 "enable_spec_decode is meaningless there")
+            enable_spec_decode = False
+            spec_adaptive_k = False
         self.kv_cache_dtype = cfg.kv_cache_dtype if kv_cache_dtype is None \
             else kv_cache_dtype
         if self.kv_cache_dtype not in ("f32", "int8"):
@@ -554,6 +607,10 @@ class ContinuousBatchingEngine:
 
         self._cow = cow_copy
         self._writer_cache = {}
+        # Page-shipping gather/scatter, jitted lazily per pow2 page-count
+        # bucket (page axis 2 on every pool leaf, like _cow).
+        self._ship_gather_cache = {}
+        self._ship_scatter_cache = {}
 
     # -- stats ---------------------------------------------------------------
     def _reset_stats(self):
@@ -561,6 +618,7 @@ class ContinuousBatchingEngine:
                       "cow_copies": 0, "admit_seconds": 0.0,
                       "spec_steps": 0, "spec_emitted": 0,
                       "preempted": 0, "resumed": 0,
+                      "page_exports": 0, "page_imports": 0,
                       "accept_ema_sum": 0.0, "accept_ema_n": 0}
 
     @property
@@ -993,6 +1051,144 @@ class ContinuousBatchingEngine:
         self.stats["resumed"] += 1
         return slot
 
+    # -- page shipping (disaggregated prefill/decode) ------------------------
+    def export_pages(self, slot: int) -> ShippedKV:
+        """Ship the request in ``slot`` out of this engine as a
+        :class:`ShippedKV` payload and free the slot.
+
+        Only *content* pages travel — the ``ceil(pos / page_size)`` pages
+        holding prefilled (and already-decoded) KV rows; trailing pages
+        allocated against the decode budget are empty and are simply
+        released. Aliased prefix pages are gathered like any other page, so
+        the payload is always a self-contained private copy. The slot is
+        retired through the normal refcount path afterwards: this engine's
+        prefix-cache entries survive, keeping a prefill replica a valid
+        affinity target for the next request with the same prefix.
+        """
+        if slot not in self._live:
+            raise KeyError(f"slot {slot} has no live request to export")
+        live = self._live[slot]
+        pos = int(self._pos[slot])
+        ps = self.page_size
+        n_content = math.ceil(pos / ps)
+        nb = _next_pow2(max(1, n_content))
+        idx = np.zeros(nb, np.int32)            # pads gather the sink page
+        idx[:n_content] = live.pages[:n_content]
+        gather = self._ship_gather_cache.get(nb)
+        if gather is None:
+            def gather_fn(pool, idx):
+                return {name: leaf[:, :, idx] for name, leaf in pool.items()}
+            gather = self._ship_gather_cache[nb] = jax.jit(gather_fn)
+        gathered = gather(self.pool, jnp.asarray(idx))
+        content = {name: np.ascontiguousarray(
+                       np.asarray(a)[:, :, :n_content])
+                   for name, a in gathered.items()}
+        hist = np.array(self._hist[slot]) if self.spec_decode else None
+        payload = ShippedKV(
+            req=live.req, emitted=live.emitted, tokens=list(live.tokens),
+            cur=int(self._cur[slot]), pos=pos, content=content,
+            kv_cache_dtype=self.kv_cache_dtype, page_size=ps, hist=hist)
+        self._retire(slot)
+        self.stats["page_exports"] += 1
+        return payload
+
+    def import_pages(self, payload: ShippedKV) -> int:
+        """Re-register a :class:`ShippedKV` payload here; returns the slot.
+
+        Fresh pages come from THIS engine's allocator (the full
+        prompt+budget span, not just the shipped content pages), the
+        page-table row re-attaches them, the prompt re-registers in this
+        engine's radix prefix cache (existing entries win, exactly like
+        admission), and the decode cursor resumes where the source stopped —
+        greedy tokens are identical to a run that never hopped. Raises
+        ``ValueError`` on a layout mismatch and ``RuntimeError`` when no
+        slot or not enough pages are free (the caller retries later).
+        """
+        if payload.kv_cache_dtype != self.kv_cache_dtype:
+            raise ValueError(
+                f"shipped pages are {payload.kv_cache_dtype!r} but this "
+                f"engine's pool is {self.kv_cache_dtype!r}")
+        if payload.page_size != self.page_size:
+            raise ValueError(
+                f"shipped page_size {payload.page_size} != engine "
+                f"page_size {self.page_size}")
+        if set(payload.content) != set(self.pool):
+            raise ValueError(
+                f"shipped pool leaves {sorted(payload.content)} != engine "
+                f"pool leaves {sorted(self.pool)}")
+        req = payload.req
+        self._validate_request(req)
+        if payload.pos != len(req.prompt) + payload.emitted:
+            raise ValueError(
+                f"inconsistent payload for request {req.rid}: pos "
+                f"{payload.pos} != prompt {len(req.prompt)} + emitted "
+                f"{payload.emitted}")
+        free = [i for i in range(self.max_slots) if not self._active[i]]
+        if not free:
+            raise RuntimeError("no free slot to import into")
+        ps = self.page_size
+        need_total = math.ceil((len(req.prompt) + req.max_new) / ps)
+        n_content = payload.n_content
+        if n_content > need_total:
+            raise ValueError(
+                f"payload ships {n_content} content pages but request "
+                f"{req.rid} spans only {need_total}")
+        if self.alloc.available() < need_total:
+            raise RuntimeError(
+                f"insufficient free pages to import request {req.rid}: "
+                f"need {need_total}, have {self.alloc.available()}")
+        slot = free[0]
+        pages = [self.alloc.alloc() for _ in range(need_total)]
+        nb = _next_pow2(max(1, n_content))
+        dst = np.zeros(nb, np.int32)            # pads scatter into the sink
+        dst[:n_content] = pages[:n_content]
+        scatter = self._ship_scatter_cache.get(nb)
+        if scatter is None:
+            @partial(jax.jit, donate_argnums=(0,))
+            def scatter_fn(pool, content, dst):
+                return {name: pool[name].at[:, :, dst].set(
+                            content[name].astype(pool[name].dtype))
+                        for name in pool}
+            scatter = self._ship_scatter_cache[nb] = scatter_fn
+        padded = {}
+        for name, a in payload.content.items():
+            buf = np.zeros(a.shape[:2] + (nb,) + a.shape[3:], a.dtype)
+            buf[:, :, :n_content] = a
+            padded[name] = jnp.asarray(buf)
+        self.pool = scatter(self.pool, padded, jnp.asarray(dst))
+        row = np.zeros(self.pages_per_seq, np.int32)
+        row[:need_total] = pages
+        self._page_table[slot] = row
+        self._active[slot] = True
+        self._pos[slot] = payload.pos
+        self._cur[slot] = payload.cur
+        self._limit[slot] = len(req.prompt) + req.max_new
+        if self.spec_decode:
+            # Seed the drafting history: the parked row if the source ran
+            # spec decode too, else reconstructed from prompt + emitted
+            # tokens (identical content — draft tails past pos are always
+            # re-written before any read).
+            if payload.hist is not None and \
+                    len(payload.hist) == self.hist_len:
+                hrow = np.asarray(payload.hist, np.int32)
+            else:
+                hrow = np.zeros(self.hist_len, np.int32)
+                hrow[:len(req.prompt)] = req.prompt
+                hrow[len(req.prompt):payload.pos] = payload.tokens[
+                    :payload.pos - len(req.prompt)]
+            self._hist = self._hist.at[slot].set(jnp.asarray(hrow))
+            self._kslot[slot] = self.spec_tokens
+            self._ema[slot] = 0.0
+        if self.prefix_cache is not None:
+            # The shipped prefix stays shareable after the hop: later
+            # requests on THIS engine alias these pages instead of
+            # re-prefilling (existing entries win, exactly like admission).
+            self.prefix_cache.register(req.prompt, pages, req.namespace)
+        self._live[slot] = _Live(req, pages, payload.emitted,
+                                 list(payload.tokens))
+        self.stats["page_imports"] += 1
+        return slot
+
     def drop_queued(self) -> list[EngineRequest]:
         """Hand back queued-but-unadmitted requests (e.g. transient page
         pressure); live and paused requests are untouched."""
@@ -1035,6 +1231,10 @@ class ContinuousBatchingEngine:
         emits 1..spec_tokens+1 tokens per slot, so ``seconds / steps`` is
         per-VERIFY-step latency there.
         """
+        if self.role == "prefill":
+            raise RuntimeError("decode_step on a prefill-role engine: "
+                               "export_pages its admitted slots to a "
+                               "decode-role replica instead")
         if not self._live:
             return []
         budget = np.zeros(self.max_slots, np.int32)

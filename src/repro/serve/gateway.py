@@ -43,12 +43,34 @@ replicas, so serve traffic gets exactly what batch analytics got:
   engines park in a standby pool (a warm pool: jit caches survive
   relaunch).
 
+- **Placement** (§IV, execution near the data): dispatch goes through a
+  :class:`~repro.serve.routing.FleetRouter`. Each replica advertises a
+  radix **fingerprint** of its prefix cache
+  (:meth:`~repro.serve.paging.PrefixCache.fingerprint`) and the router
+  scores every queued request against every live replica — matched prefix
+  pages x page_size is prefill work the fleet skips — dispatching to the
+  best-affinity replica with a least-loaded fallback and a load-imbalance
+  cap (``routing="affinity" | "least_loaded" | "blind"``). Affinity
+  estimates also feed admission feasibility: a request that is only
+  deadline-feasible on its warm replica is kept, not shed.
+- **Disaggregated prefill/decode** (``prefill_replicas > 0``): dedicated
+  prefill-role replicas (wide chunks, never decode) run admission prefill
+  and ship each request's finished KV pages to a decode-role replica
+  through the engine page-shipping interface
+  (:meth:`~repro.serve.engine.ContinuousBatchingEngine.export_pages` /
+  ``import_pages``). Handoffs re-register the shipped prefix in the
+  destination's radix cache, so it stays shareable after the hop; greedy
+  tokens are identical to a never-shipped run. Ship time is billed at
+  ``ServiceModel.kv_ship_bytes_per_s`` and the wire bytes land in
+  ``page_ship_bytes``.
+
 Time is a :class:`repro.core.clock.VirtualClock` driven by a
 :class:`~repro.serve.admission.ServiceModel` — decode/prefill seconds are
 modelled, so per-token and per-replica-second **cost accounting** is
 deterministic and comparable across hosts, exactly like the Table VII-C
 discrete-event reproduction. ``benchmarks/gateway_bench.py`` reports the
-elastic-spot gateway against a static on-demand fleet.
+elastic-spot gateway against a static on-demand fleet, and affinity
+routing against blind dispatch on a Zipf-skewed tenant trace.
 """
 from __future__ import annotations
 
@@ -66,7 +88,9 @@ from repro.core.security import (AuditRecord, PolicyEngine, SessionToken)
 from .admission import (AdmissionPolicy, DeadlineCostPolicy,
                         DeadlineInfeasible, JobState, PreemptCandidate,
                         ServeJob, ServiceModel)
-from .engine import ContinuousBatchingEngine, EngineRequest, PausedRequest
+from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
+                     ShippedKV)
+from .routing import FleetRouter, ReplicaView
 
 
 class _Replica:
@@ -78,6 +102,7 @@ class _Replica:
                  bid: float, ready_at: float):
         self.id = next(self._ids)
         self.engine = engine
+        self.role = engine.role         # "unified" | "prefill" | "decode"
         self.zone = zone
         self.market = market            # "spot" | "on_demand"
         self.bid = bid                  # $/h; spot revokes when price > bid
@@ -85,6 +110,7 @@ class _Replica:
         self.state = "provisioning"     # -> "live" -> "retired"
         self.idle_since: Optional[float] = None
         self.jobs: set[int] = set()
+        self.dispatched = 0             # requests routed here, lifetime
         # prefill-token watermark: stats are cumulative per engine, and
         # engines are reused across launches (warm pool).
         self.pt_mark = engine.stats["prefill_tokens"]
@@ -115,11 +141,18 @@ class KottaServeGateway:
                  service_model: ServiceModel | None = None,
                  clock: Clock | None = None,
                  idle_tick_s: float = 1.0,
+                 routing: str | FleetRouter = "affinity",
+                 imbalance_cap: int = 4,
+                 prefill_replicas: int = 0,
+                 prefill_engine_factory:
+                     Callable[[], ContinuousBatchingEngine] | None = None,
                  seed: int = 0):
         self._engine_factory = engine_factory
         self.security = security
         self.model_resource = model_resource
         self.model = service_model or ServiceModel()
+        self.router = routing if isinstance(routing, FleetRouter) \
+            else FleetRouter(routing, imbalance_cap=imbalance_cap)
         # The default policy estimates with the SAME service model the
         # gateway bills with — shed decisions and accounting must agree.
         self.admission = admission or DeadlineCostPolicy(model=self.model)
@@ -145,20 +178,46 @@ class KottaServeGateway:
         self._replicas: list[_Replica] = []
         self._standby: list[ContinuousBatchingEngine] = []
         self._paused: list[_PausedJob] = []
+        # Disaggregation: KV payloads in flight prefill -> decode, FIFO.
+        self._handoffs: list[tuple[ShippedKV, int]] = []   # (payload, job rid)
         self.stats = {"rounds": 0, "launches": 0, "terminations": 0,
                       "revocations": 0, "requeues": 0, "shed": 0,
                       "tokens": 0, "cost_usd": 0.0, "replica_seconds": 0.0,
                       "peak_replicas": 0, "preemptions": 0, "resumes": 0,
-                      "preempt_wait_s": 0.0}
+                      "preempt_wait_s": 0.0,
+                      "page_ships": 0, "page_ship_bytes": 0}
 
         # One engine up front: it validates request shapes at submit time
-        # and seeds the warm pool; every replica is factory-identical.
+        # and seeds the warm pool; every autoscaled replica is
+        # factory-identical (and never prefill-role — those never decode).
         self._standby.append(engine_factory())
+        if self._standby[0].role == "prefill":
+            raise ValueError(
+                "engine_factory must build decode-capable engines "
+                "(role 'unified' or 'decode'); pass prefill-role engines "
+                "through prefill_engine_factory")
         self._slots_per_replica = self._standby[0].max_slots
         # Pre-provision the floor, ready immediately — the paper's dev pool
         # always holds >= min reliable nodes (static baselines start hot).
         now = self.clock.now()
         self._start_time = now
+        # Prefill-role replicas are static infrastructure: launched hot,
+        # on-demand (never spot-revoked), never idle-terminated — they are
+        # the fleet's admission front end, not elastic decode capacity.
+        if prefill_replicas > 0 and prefill_engine_factory is None:
+            raise ValueError("prefill_replicas > 0 requires a "
+                             "prefill_engine_factory")
+        for _ in range(prefill_replicas):
+            eng = prefill_engine_factory()
+            if eng.role != "prefill":
+                raise ValueError("prefill_engine_factory must build "
+                                 f"role='prefill' engines, got {eng.role!r}")
+            r = _Replica(eng, None, "on_demand", 0.0, ready_at=now)
+            r.state = "live"
+            r.idle_since = now
+            self._replicas.append(r)
+            self.stats["launches"] += 1
+        self._disaggregated = prefill_replicas > 0
         for _ in range(self.scaling.min_nodes):
             self._launch(now, ready_now=True)
 
@@ -185,9 +244,15 @@ class KottaServeGateway:
             deadline=None if deadline_s is None else now + deadline_s,
             priority=priority, cost_budget=cost_budget,
             namespace=(token.principal_id, data_zone))
-        # Fail fast on shapes that can never fit a replica's pool.
-        self._probe_engine()._validate_request(
-            EngineRequest(rid, job.prompt, job.max_new, job.namespace))
+        # Fail fast on shapes that can never fit a replica's pool — checked
+        # against a decode-capable engine AND, when disaggregated, a
+        # prefill-role engine (both pools must hold the request).
+        er = EngineRequest(rid, job.prompt, job.max_new, job.namespace)
+        self._validation_engine()._validate_request(er)
+        for r in self._replicas:
+            if r.role == "prefill":
+                r.engine._validate_request(er)
+                break
         self.jobs[rid] = job
         self._queue.append(job)
         return rid
@@ -245,11 +310,31 @@ class KottaServeGateway:
         self._accrue(now, tick)
         self.clock.advance(tick)
 
-    # -- security/market helpers ----------------------------------------------
-    def _probe_engine(self) -> ContinuousBatchingEngine:
+    # -- replica accessors ------------------------------------------------------
+    def replica_engine(self, replica_id: int) -> ContinuousBatchingEngine:
+        """The engine behind a specific (non-retired) replica id.
+
+        The explicit accessor for a heterogeneous fleet — there is no
+        "the" engine once replicas differ by role, so callers must say
+        which one they mean. Raises ``KeyError`` for an unknown id.
+        """
+        for r in self._replicas:
+            if r.id == replica_id:
+                return r.engine
+        raise KeyError(f"no replica {replica_id}")
+
+    def _validation_engine(self) -> ContinuousBatchingEngine:
+        """A decode-capable engine for submit-time shape validation (the
+        warm standby when one exists — every autoscaled replica is
+        factory-identical to it)."""
         if self._standby:
             return self._standby[-1]
-        return self._replicas[0].engine
+        for r in self._replicas:
+            if r.role != "prefill":
+                return r.engine
+        raise RuntimeError("no decode-capable engine to validate against")
+
+    # -- security/market helpers ----------------------------------------------
 
     def _od_price(self) -> float:
         return self.pricing.on_demand_per_hour[self.instance_type]
@@ -324,24 +409,40 @@ class KottaServeGateway:
 
     # -- admission ---------------------------------------------------------------
     def _slot_horizon(self, now: float) -> list[float]:
-        """When does each decode slot (live or provisioning) next free?"""
+        """When does each decode slot (live or provisioning) next free?
+
+        Prefill-role replicas contribute nothing: they hold no decode
+        capacity (their slots turn over within the admission round), so
+        feasibility must be argued entirely from decode-capable slots.
+        """
         horizon: list[float] = []
         step_s = self.model.decode_step_s
         for r in self._replicas:
+            if r.role == "prefill":
+                continue
             if r.state == "live":
                 remaining = r.engine.remaining_tokens()
                 horizon.extend(now + rem * step_s for rem in remaining)
                 horizon.extend([now] * max(
-                    self._slots_per_replica - len(remaining)
+                    r.engine.max_slots - len(remaining)
                     - r.engine.queued, 0))
             elif r.state == "provisioning":
-                horizon.extend([r.ready_at] * self._slots_per_replica)
+                horizon.extend([r.ready_at] * r.engine.max_slots)
         return horizon
 
     def _shed_and_order(self, now: float) -> None:
+        # Routing-aware feasibility: under affinity routing, tell admission
+        # how many prompt tokens the best-matching dispatch target would
+        # serve from its prefix cache — those tokens bill no prefill time.
+        cached: dict[int, int] | None = None
+        if self.router.mode == "affinity" and self._queue:
+            views = self._target_views()
+            cached = {job.rid: self.router.best_match_tokens(
+                          job.prompt, job.namespace, views)
+                      for job in self._queue}
         keep, shed = self.admission.plan(
             self._queue, self._slot_horizon(now), now,
-            self._price_per_slot_hour(now))
+            self._price_per_slot_hour(now), cached_tokens=cached)
         for job, err in shed:
             # Last resort before shedding a deadline-infeasible request:
             # pause a running lower-class request (policy's choice) so the
@@ -410,26 +511,162 @@ class KottaServeGateway:
                        "paused (zero re-prefill)"))
         self._paused = still
 
-    def _dispatch(self) -> None:
-        """Hand policy-ordered queue heads to replicas with open slots."""
-        live = [r for r in self._replicas if r.state == "live"]
-        while self._queue:
-            r = max(live, key=lambda x: x.engine.open_slots, default=None)
-            if r is None or r.engine.open_slots <= 0:
+    def _dispatch_targets(self) -> list[_Replica]:
+        """Replicas the router may place new requests on: the prefill fleet
+        when disaggregated (decode replicas only take handoffs), every
+        decode-capable live replica otherwise."""
+        want = "prefill" if self._disaggregated else None
+        return [r for r in self._replicas if r.state == "live"
+                and (r.role == "prefill") == (want == "prefill")]
+
+    def _target_views(self) -> list[ReplicaView]:
+        """Router-side snapshots of the current dispatch targets.
+
+        Fingerprints are collected only under affinity routing (the other
+        modes never read them); they are stable within a round — admission,
+        which registers new prefixes, runs later, in ``_pump``.
+        """
+        views = []
+        for r in self._dispatch_targets():
+            eng = r.engine
+            fp = frozenset()
+            if self.router.mode == "affinity" and eng.prefix_cache is not None:
+                fp = eng.prefix_cache.fingerprint()
+            views.append(ReplicaView(
+                r.id, eng.open_slots, load=eng.live + eng.queued,
+                page_size=eng.page_size, fingerprint=fp))
+        return views
+
+    def _affinity_window(self) -> int:
+        """Queue prefix the router may reorder within: the run of jobs
+        sharing the head's (priority, deadline), capped at ``window``.
+
+        Jobs with identical priority AND deadline are SLA-interchangeable —
+        EDF ordered them by (submit, rid) only — so picking the one whose
+        prefix is resident on the open capacity costs nothing in deadline
+        terms. The window never crosses an EDF boundary: a tighter-deadline
+        or higher-class head can NEVER be bypassed by an affinity hit
+        behind it.
+        """
+        head = self._queue[0]
+        n = 1
+        for job in self._queue[1:self.router.window]:
+            if (job.priority, job.deadline) != (head.priority,
+                                                head.deadline):
                 break
-            job = self._queue.pop(0)
+            n += 1
+        return n
+
+    def _dispatch(self) -> None:
+        """Route queued jobs to replicas with open slots.
+
+        The queue's policy order governs WHO runs first up to affinity
+        lookahead: within the head's SLA-interchangeable window
+        (:meth:`_affinity_window`) the router may dispatch a job whose
+        prefix is resident on the free capacity ahead of a head that would
+        cold-prefill there — under backlog, routing the head alone
+        degenerates to blind placement, because the head rarely matches
+        whichever slot happens to be free. Across EDF boundaries order is
+        absolute. Each placement bumps the chosen view's load so one
+        round's decisions see each other. When disaggregated, new work
+        lands exclusively on prefill replicas, throttled by downstream
+        decode capacity (free decode slots minus handoffs already in
+        flight) so finished KV payloads can't pile up faster than decode
+        replicas drain them.
+        """
+        targets = {r.id: r for r in self._dispatch_targets()}
+        views = self._target_views()
+        budget = None
+        if self._disaggregated:
+            budget = sum(r.engine.open_slots for r in self._replicas
+                         if r.state == "live" and r.role != "prefill") \
+                - len(self._handoffs)
+        while self._queue:
+            if budget is not None and budget <= 0:
+                break
+            pick = 0
+            if self.router.mode == "affinity" and len(self._queue) > 1:
+                # Best matched tokens within the window wins; policy order
+                # breaks ties, so zero-match backlogs stay exactly FIFO.
+                # Score only against views with an open slot: a match on a
+                # busy replica can't be dispatched to this round.
+                free = [v for v in views if v.open_slots > 0]
+                best = 0
+                for i in range(self._affinity_window()):
+                    j = self._queue[i]
+                    m = self.router.best_match_tokens(j.prompt, j.namespace,
+                                                      free)
+                    if m > best:
+                        best, pick = m, i
+            job = self._queue[pick]
+            decision = self.router.route(job.prompt, job.namespace, views)
+            if decision is None:
+                break
+            self._queue.pop(pick)
+            r = targets[decision.replica_id]
             r.engine.enqueue(EngineRequest(job.rid, job.prompt, job.max_new,
                                            job.namespace))
             job.status = JobState.RUNNING
             job.replica = r.id
             r.jobs.add(job.rid)
+            r.dispatched += 1
+            for v in views:
+                if v.replica_id == r.id:
+                    v.open_slots -= 1
+                    v.load += 1
+            if budget is not None:
+                budget -= 1
 
     # -- the data plane -----------------------------------------------------------
+    def _deliver_handoffs(self, now: float) -> float:
+        """Import in-flight KV payloads into decode-capable replicas.
+
+        FIFO over the handoff queue; a payload that no replica can take
+        this round (no free slot, or not enough free pages) stays queued
+        and retries next round. Returns the round's ship seconds (max
+        across deliveries — the copies run in parallel).
+        """
+        if not self._handoffs:
+            return 0.0
+        ship_s = 0.0
+        dests = [r for r in self._replicas
+                 if r.state == "live" and r.role != "prefill"]
+        still: list[tuple[ShippedKV, int]] = []
+        for payload, rid in self._handoffs:
+            job = self.jobs[rid]
+            placed = False
+            # Least-loaded decode replica first: handoff placement balances
+            # the decode fleet the way least-loaded dispatch would.
+            for r in sorted(dests, key=lambda x: (x.engine.live
+                                                  + x.engine.queued, x.id)):
+                if not r.engine.free_slots:
+                    continue
+                try:
+                    r.engine.import_pages(payload)
+                except RuntimeError:
+                    continue            # out of pages here: try the next
+                job.replica = r.id
+                r.jobs.add(rid)
+                r.idle_since = None
+                if job.started_at is None:
+                    # TTFT stops at first DECODE-slot occupancy — the
+                    # disaggregated analogue of the unified admit stamp.
+                    job.started_at = now
+                ship_s = max(ship_s, self.model.ship_s(payload.nbytes))
+                placed = True
+                break
+            if not placed:
+                still.append((payload, rid))
+        self._handoffs = still
+        return ship_s
+
     def _pump(self, now: float) -> float:
         """Admit + decode one chunk on every live replica; returns the
         round's simulated seconds (max across replicas — they run in
-        parallel)."""
-        round_s = 0.0
+        parallel). Disaggregated fleets first deliver in-flight KV
+        handoffs (so this round's decode includes them), then the prefill
+        replicas admit-and-export a fresh batch for the next round."""
+        round_s = self._deliver_handoffs(now)
         for r in self._replicas:
             if r.state != "live":
                 continue
@@ -439,17 +676,35 @@ class KottaServeGateway:
                     r.idle_since = now
                 continue
             r.idle_since = None
-            eng.admit()
-            for live in eng._live.values():
-                job = self.jobs.get(live.req.rid)
-                if job is not None and job.started_at is None:
-                    # First decode-slot occupancy: the TTFT clock stops here
-                    # (modelled prefill is charged identically either way).
-                    job.started_at = now
+            admitted = eng.admit()
             fresh = eng.stats["prefill_tokens"] - r.pt_mark
             r.pt_mark = eng.stats["prefill_tokens"]
             work = self.model.prefill_s(fresh)
-            if eng.live:
+            if r.role == "prefill":
+                # Prefill replicas never decode: every admitted request's
+                # finished pages ship out immediately, freeing the slot for
+                # the next admission wave. The source's prefix cache keeps
+                # the registered entries, so the NEXT request with this
+                # prefix pays only its fresh suffix here.
+                for slot in sorted(eng._live):
+                    rid = eng._live[slot].req.rid
+                    payload = eng.export_pages(slot)
+                    self._handoffs.append((payload, rid))
+                    self.jobs[rid].replica = None     # in flight
+                    r.jobs.discard(rid)
+                    self.stats["page_ships"] += 1
+                    self.stats["page_ship_bytes"] += payload.nbytes
+                if not admitted and eng.queued:
+                    self._return_to_queue(r, eng.drop_queued(),
+                                          requeued=False)
+            elif eng.live:
+                for live in eng._live.values():
+                    job = self.jobs.get(live.req.rid)
+                    if job is not None and job.started_at is None:
+                        # First decode-slot occupancy: the TTFT clock stops
+                        # here (modelled prefill is charged identically
+                        # either way).
+                        job.started_at = now
                 finished = eng.decode_step()
                 work += eng.decode_chunk * self.model.decode_step_s
                 for req, toks in finished:
@@ -474,7 +729,11 @@ class KottaServeGateway:
 
     # -- elasticity ----------------------------------------------------------------
     def _autoscale(self, now: float) -> None:
-        live = [r for r in self._replicas if r.state == "live"]
+        # Elasticity governs DECODE capacity only: prefill-role replicas
+        # are the static admission front end — never counted, launched, or
+        # idle-terminated here.
+        live = [r for r in self._replicas
+                if r.state == "live" and r.role != "prefill"]
         provisioning = sum(1 for r in self._replicas
                            if r.state == "provisioning")
         idle = sum(1 for r in live if not r.engine.has_work)
@@ -485,7 +744,8 @@ class KottaServeGateway:
         for r in live:
             if r.engine.has_work or r.jobs or r.idle_since is None:
                 continue
-            total = sum(1 for x in self._replicas if x.state == "live")
+            total = sum(1 for x in self._replicas
+                        if x.state == "live" and x.role != "prefill")
             if self.provisioner.should_terminate(now - r.idle_since, total):
                 self._retire_replica(r, terminated=True)
 
@@ -552,6 +812,23 @@ class KottaServeGateway:
         idone = [j for j in inter if j.status is JobState.DONE]
         ihits = sum(1 for j in idone
                     if j.deadline is None or j.finished_at <= j.deadline)
+        # Per-replica observability: the routing tier's decisions must be
+        # auditable from the outside — who got the work, how full each
+        # replica is, and whether affinity is actually landing cache hits.
+        per_replica = []
+        for r in sorted(self._replicas, key=lambda x: x.id):
+            if r.state == "retired":
+                continue
+            eng = r.engine
+            per_replica.append({
+                "replica": r.id, "role": r.role, "state": r.state,
+                "live": eng.live, "queued": eng.queued,
+                "open_slots": eng.open_slots,
+                "occupancy": eng.live / eng.max_slots,
+                "prefix_hit_rate": eng.prefix_hit_rate,
+                "dispatched": r.dispatched,
+            })
+        ships = self.stats["page_ships"]
         return {
             "jobs": len(self.jobs), "completed": len(done),
             "shed": self.stats["shed"],
@@ -578,4 +855,13 @@ class KottaServeGateway:
             "requeues": self.stats["requeues"],
             "launches": self.stats["launches"],
             "terminations": self.stats["terminations"],
+            "routing_mode": self.router.mode,
+            "routing": dict(self.router.stats),
+            "queue_depth": len(self._queue),
+            "page_ships": ships,
+            "page_ship_bytes": self.stats["page_ship_bytes"],
+            "page_ship_bytes_per_ship": (self.stats["page_ship_bytes"]
+                                         / ships if ships else 0.0),
+            "handoffs_in_flight": len(self._handoffs),
+            "per_replica": per_replica,
         }

@@ -27,10 +27,43 @@ The allocator's ``on_alloc`` hook evicts a page's index entries the moment
 the page is repurposed, and recursively scrubs the subtree it anchored:
 physical page ids are the radix parents, so entries must never outlive the
 page contents they describe.
+
+For fleet routing, ``PrefixCache.fingerprint`` summarises the whole index as
+a flat set of namespace-salted **chain hashes** (:func:`chain_hashes`): one
+hash per fully cached page-granular prefix, rolling from the namespace root
+down the radix chain. A router can score "how many prefix pages of THIS
+prompt does THAT replica already hold" from the fingerprint alone — no token
+content crosses the wire, and a (vanishingly unlikely) hash collision can
+only misroute a request, never alias pages: real admission still walks the
+namespace-scoped radix tree.
 """
 from __future__ import annotations
 
 import numpy as np
+
+_FP_SALT = "kotta-prefix-fp"
+
+
+def chain_hashes(prompt, page_size: int, namespace=None) -> list[int]:
+    """Rolling chain hash of every full-page prefix of ``prompt``.
+
+    ``out[i]`` identifies the (namespace, first ``(i+1)*page_size`` tokens)
+    prefix; it extends ``out[i-1]``, so a replica fingerprint containing
+    ``out[i]`` implies the whole chain up to page ``i`` is cached there
+    (fingerprints are prefix-closed: eviction scrubs subtrees rootward-in).
+    The namespace salts the seed, so identical token content under two
+    (tenant, data-zone) namespaces never produces matching hashes — the
+    router inherits the cache's isolation for free.
+    """
+    h = hash((_FP_SALT, namespace))
+    out = []
+    for i in range(len(prompt) // page_size):
+        h = hash((h, tuple(prompt[i * page_size:(i + 1) * page_size])))
+        out.append(h)
+    return out
+
+
+_ALL_NAMESPACES = object()
 
 
 class PageAllocator:
@@ -195,3 +228,40 @@ class PrefixCache:
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:
         return len(self._full) + sum(len(v) for v in self._partial.values())
+
+    def fingerprint(self, namespace=_ALL_NAMESPACES) -> frozenset:
+        """Compact advertisement of every fully cached page-granular prefix.
+
+        Returns the set of :func:`chain_hashes` values reachable from the
+        namespace root(s): one hash per cached full page, chained through
+        its radix ancestry. The set is *prefix-closed* — registration adds
+        every depth along the chain and eviction scrubs subtrees rootward-in
+        — so a router can score a prompt by counting consecutive hits of its
+        own ``chain_hashes`` against this set (stop at the first miss).
+        Partial (sub-page) entries are deliberately excluded: they only save
+        a copy-on-write, not prefill FLOPs, so they don't move routing.
+
+        By default all namespaces are merged (the router scores a request
+        with the request's OWN namespace salt, so cross-namespace hashes
+        can't collide by construction); pass ``namespace=`` to advertise a
+        single domain.
+        """
+        fp = set()
+        if namespace is _ALL_NAMESPACES:
+            roots = [r for r in self._kids
+                     if isinstance(r, tuple) and r[0] == "root"]
+        else:
+            roots = [self._root(namespace)]
+        for root in roots:
+            seed = hash((_FP_SALT, root[1]))
+            stack = [(root, seed)]
+            while stack:
+                parent, h = stack.pop()
+                for key in self._kids.get(parent, ()):
+                    page = self._full.get(key)
+                    if page is None:
+                        continue
+                    ch = hash((h, key[1]))
+                    fp.add(ch)
+                    stack.append((page, ch))
+        return frozenset(fp)

@@ -1,0 +1,142 @@
+"""Prefix-affinity fleet routing over the gateway's replica pool.
+
+Cloud Kotta's execution model moves work to where the data already is
+(PAPER.md §IV) — here the "data" is KV-cache pages. Each replica
+advertises a radix fingerprint of its :class:`~repro.serve.paging.PrefixCache`
+(``PrefixCache.fingerprint()``, a set of namespace-salted chain hashes, one
+per cached page-granular prefix) and the router scores every queued request
+against every live replica: matched prefix pages × page_size is the prefill
+token count the fleet would NOT have to recompute if the request lands
+there. Dispatch picks the best-affinity replica, falling back to
+least-loaded when nothing matches, with a **load-imbalance cap** so a hot
+tenant's affinity can't starve one replica while the rest idle.
+
+The router never sees token content — only hashes — and a hash collision
+can at worst misroute a request (a perf wobble): page aliasing is decided
+by the replica's own namespace-scoped radix walk at admission, never here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .paging import chain_hashes
+
+
+@dataclass
+class ReplicaView:
+    """Router-side snapshot of one dispatch target for a scoring round.
+
+    ``load`` counts committed work (live + queued-this-round) and is bumped
+    by the caller after each dispatch so one round's decisions see each
+    other; ``fingerprint`` is immutable within a round (registration only
+    happens later, at admission).
+    """
+
+    replica_id: int
+    open_slots: int
+    load: int
+    page_size: int
+    fingerprint: frozenset = field(default_factory=frozenset)
+
+
+@dataclass(frozen=True)
+class RouteDecision:
+    replica_id: int
+    matched_tokens: int
+    reason: str     # "affinity" | "least_loaded" | "imbalance_cap" | "blind"
+
+
+class FleetRouter:
+    """Scores queued requests against replica fingerprints.
+
+    Modes:
+      - ``affinity``: best matched-prefix-token replica among those within
+        ``imbalance_cap`` of the least-loaded; least-loaded when no replica
+        matches any prefix page.
+      - ``least_loaded``: most open slots (the pre-router gateway behavior).
+      - ``blind``: round-robin, ignoring both cache state and load — the
+        bench baseline for what affinity buys.
+
+    ``window`` bounds the gateway's affinity lookahead: how many
+    SLA-interchangeable jobs at the queue head it may scan for one whose
+    prefix is resident on the currently-free capacity (the router itself
+    is stateless per call; the gateway owns the queue scan).
+    """
+
+    MODES = ("affinity", "least_loaded", "blind")
+
+    def __init__(self, mode: str = "affinity", imbalance_cap: int = 4,
+                 window: int = 8):
+        if mode not in self.MODES:
+            raise ValueError(f"routing mode must be one of {self.MODES}, got {mode!r}")
+        if imbalance_cap < 1:
+            raise ValueError(f"imbalance_cap must be >= 1, got {imbalance_cap}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.mode = mode
+        self.imbalance_cap = imbalance_cap
+        self.window = window
+        self._rr = 0
+        self.stats = {"affinity": 0, "least_loaded": 0, "blind": 0,
+                      "imbalance_cap": 0, "matched_tokens": 0}
+
+    # -- scoring -------------------------------------------------------------
+    @staticmethod
+    def _match_tokens(prompt, namespace, view: ReplicaView) -> int:
+        """Prefill tokens ``view``'s cache already holds for this prompt:
+        consecutive chain-hash hits from the root (the fingerprint is
+        prefix-closed, so the first miss ends the cached chain)."""
+        hits = 0
+        for h in chain_hashes(prompt, view.page_size, namespace):
+            if h not in view.fingerprint:
+                break
+            hits += 1
+        return hits * view.page_size
+
+    def best_match_tokens(self, prompt, namespace, views) -> int:
+        """Best cached-token count across the fleet (admission feasibility
+        wants "what will the winner skip", not who the winner is)."""
+        return max((self._match_tokens(prompt, namespace, v) for v in views),
+                   default=0)
+
+    # -- routing -------------------------------------------------------------
+    def route(self, prompt, namespace, views) -> RouteDecision | None:
+        """Pick a dispatch target among ``views`` (replicas with an open
+        slot). Returns None when ``views`` is empty."""
+        views = [v for v in views if v.open_slots > 0]
+        if not views:
+            return None
+
+        if self.mode == "blind":
+            v = views[self._rr % len(views)]
+            self._rr += 1
+            self.stats["blind"] += 1
+            return RouteDecision(v.replica_id, 0, "blind")
+
+        least = min(views, key=lambda v: (v.load, v.replica_id))
+        if self.mode == "least_loaded":
+            self.stats["least_loaded"] += 1
+            return RouteDecision(least.replica_id, 0, "least_loaded")
+
+        # affinity: best matched tokens, load-capped against the minimum.
+        min_load = least.load
+        scored = [(self._match_tokens(prompt, namespace, v), v) for v in views]
+        best_tokens, best = max(scored, key=lambda t: (t[0], -t[1].load,
+                                                       -t[1].replica_id))
+        if best_tokens <= 0:
+            self.stats["least_loaded"] += 1
+            return RouteDecision(least.replica_id, 0, "least_loaded")
+        if best.load - min_load > self.imbalance_cap:
+            # The affinity winner is already carrying imbalance_cap more
+            # work than the idlest replica: spill to the best-matching
+            # replica that is still within the cap (possibly zero match).
+            capped = [(t, v) for t, v in scored
+                      if v.load - min_load <= self.imbalance_cap]
+            cap_tokens, cap_v = max(capped, key=lambda t: (t[0], -t[1].load,
+                                                           -t[1].replica_id))
+            self.stats["imbalance_cap"] += 1
+            self.stats["matched_tokens"] += cap_tokens
+            return RouteDecision(cap_v.replica_id, cap_tokens, "imbalance_cap")
+        self.stats["affinity"] += 1
+        self.stats["matched_tokens"] += best_tokens
+        return RouteDecision(best.replica_id, best_tokens, "affinity")

@@ -121,6 +121,41 @@ def test_recorded_scenario_failure_fails(tmp_path):
     assert "scenario failures" in res.stdout
 
 
+def test_fleet_affinity_advantage_collapse_fails(tmp_path):
+    """Losing the affinity win (affinity fleet tok/s down to blind's rate)
+    fails the gate — the checker recomputes the ratio from the raw per-mode
+    tok_per_sim_s fields, so editing only the stored convenience ratio is
+    not enough to sneak past."""
+    def collapse(gateway):
+        f = gateway["fleet_routing"]
+        f["affinity"]["tok_per_sim_s"] = f["blind"]["tok_per_sim_s"]
+    res = _run(_candidates(tmp_path, gateway_edit=collapse))
+    assert res.returncode != 0
+    assert "fleet_routing.tok_ratio_affinity_over_blind" in res.stdout
+
+
+def test_fleet_ttft_advantage_collapse_fails(tmp_path):
+    """Affinity's p99 TTFT inflating back to blind's fails the gate."""
+    def inflate(gateway):
+        f = gateway["fleet_routing"]
+        f["affinity"]["interactive_p99_ttft_s"] = \
+            f["blind"]["interactive_p99_ttft_s"]
+    res = _run(_candidates(tmp_path, gateway_edit=inflate))
+    assert res.returncode != 0
+    assert "fleet_routing.ttft_p99_ratio_blind_over_affinity" in res.stdout
+
+
+def test_fleet_ship_bytes_inflation_fails(tmp_path):
+    """Page-ship bytes/request gate at ZERO tolerance — shipping even one
+    extra page per request (layout drift in the KV handoff payload) must
+    fail."""
+    def inflate(gateway):
+        gateway["fleet_routing"]["page_ship_bytes_per_request"] *= 1.1
+    res = _run(_candidates(tmp_path, gateway_edit=inflate))
+    assert res.returncode != 0
+    assert "page_ship_bytes_per_request" in res.stdout
+
+
 def test_within_tolerance_noise_passes(tmp_path):
     """Small same-direction noise (5%) stays green — the gate is a
     regression check, not an exact-match check."""

@@ -1,0 +1,493 @@
+"""Fleet routing + disaggregated prefill/decode: radix fingerprints,
+prefix-affinity dispatch (with least-loaded fallback and the load-imbalance
+cap), the page-shipping handoff (greedy token identity across
+prefill -> ship -> decode, f32 and int8; radix re-registration on the
+destination), role-typed engine validation, and the gateway's per-replica
+routing observability."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.clock import VirtualClock
+from repro.core.elastic import ProvisioningModel, ScalingPolicy
+from repro.core.security import PolicyEngine, provision_tenant
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import (ContinuousBatchingEngine, EngineRequest, FleetRouter,
+                         JobState, KottaServeGateway, PrefixCache,
+                         ReplicaView, ServeEngine, ServiceModel, chain_hashes)
+
+MAX_LEN = 48
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced_config("yi-6b").replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gold_engine(model):
+    cfg, params = model
+    return ServeEngine(cfg, params, max_len=MAX_LEN)
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_chunk", 4)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _factory(model, **kw):
+    return lambda: _engine(model, **kw)
+
+
+def _security(*tenants):
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = {t: provision_tenant(sec, t, f"pw-{t}",
+                                  data_zones=("public", t))
+              for t in tenants}
+    return sec, tokens
+
+
+def _gateway(model, sec, *, scaling=None, engine_kw=None, **kw):
+    kw.setdefault("provisioning",
+                  ProvisioningModel(base_delay_s=5.0, jitter_s=0.0,
+                                    volatility_prob=0.0))
+    kw.setdefault("service_model", ServiceModel(decode_step_s=0.05))
+    return KottaServeGateway(_factory(model, **(engine_kw or {})), sec,
+                             scaling=scaling or ScalingPolicy.none(
+                                 1, market="on_demand"),
+                             **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.RandomState(seed).randint(
+        0, cfg.vocab_size, size=n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_advertises_registered_prefixes():
+    """fingerprint() holds exactly the chain hashes of every fully cached
+    page-granular prefix — scoring a prompt against it by consecutive hits
+    reproduces the radix walk's full-page match count."""
+    pc = PrefixCache(4)
+    prompt = list(range(10))                    # 2 full pages + 2-token tail
+    pc.register(prompt, [3, 4, 5], namespace="a")
+    fp = pc.fingerprint()
+    hashes = chain_hashes(prompt, 4, namespace="a")
+    assert len(hashes) == 2                     # one per FULL page only
+    assert set(hashes) <= fp
+    assert len(fp) == 2                         # the partial tail never ships
+    # Consecutive-hit scoring == the cache's own full-page match count.
+    hits = 0
+    for h in chain_hashes(prompt + [99], 4, namespace="a"):
+        if h not in fp:
+            break
+        hits += 1
+    assert hits == 2
+    # A diverging second page scores exactly the shared first page.
+    other = prompt[:4] + [55, 56, 57, 58]
+    assert chain_hashes(other, 4, "a")[0] in fp
+    assert chain_hashes(other, 4, "a")[1] not in fp
+    # Per-namespace view matches the union for a single-tenant cache.
+    assert pc.fingerprint(namespace="a") == fp
+    assert pc.fingerprint(namespace="b") == frozenset()
+
+
+def test_fingerprint_namespace_salting_and_eviction():
+    """Identical token content under two namespaces never produces matching
+    hashes, and eviction shrinks the advertisement (prefix-closed: a shallow
+    eviction takes its whole subtree)."""
+    pc = PrefixCache(4)
+    prompt = list(range(8))
+    pc.register(prompt, [3, 4], namespace="tenant-a")
+    pc.register(prompt, [5, 6], namespace="tenant-b")
+    fp = pc.fingerprint()
+    assert len(fp) == 4                         # 2 depths x 2 namespaces
+    ha = chain_hashes(prompt, 4, "tenant-a")
+    hb = chain_hashes(prompt, 4, "tenant-b")
+    assert not set(ha) & set(hb)                # salt keeps tenants apart
+    pc.evict(3)                                 # tenant-a's root page
+    fp2 = pc.fingerprint()
+    assert fp2 == frozenset(hb)                 # a's whole chain gone
+    assert pc.fingerprint(namespace="tenant-a") == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter units
+# ---------------------------------------------------------------------------
+
+def _view(rid, prompt, ns=None, ps=4, load=0, open_slots=2):
+    fp = frozenset(chain_hashes(prompt, ps, ns)) if prompt else frozenset()
+    return ReplicaView(rid, open_slots, load, ps, fp)
+
+
+def test_router_affinity_picks_matching_replica():
+    warm = list(range(12))                      # 3 pages cached on replica 1
+    router = FleetRouter("affinity")
+    views = [_view(0, None, load=0), _view(1, warm, load=1)]
+    d = router.route(warm + [99], None, views)
+    assert (d.replica_id, d.matched_tokens, d.reason) == (1, 12, "affinity")
+    assert router.stats["affinity"] == 1
+    assert router.stats["matched_tokens"] == 12
+    # Zero match anywhere: least-loaded fallback (replica 0 is idler).
+    d = router.route([777] * 8, None, views)
+    assert (d.replica_id, d.reason) == (0, "least_loaded")
+    # Namespace mismatch scores zero even on identical tokens.
+    d = router.route(warm + [99], "other-tenant", views)
+    assert d.reason == "least_loaded"
+    # No open slots anywhere -> None.
+    assert router.route(warm, None,
+                        [_view(0, warm, open_slots=0)]) is None
+
+
+def test_router_imbalance_cap_spills_hot_prefix():
+    """When the affinity winner is already imbalance_cap ahead of the
+    idlest replica, the request spills to the best match within the cap."""
+    warm = list(range(8))
+    router = FleetRouter("affinity", imbalance_cap=2)
+    views = [_view(0, None, load=0), _view(1, warm, load=3)]
+    d = router.route(warm, None, views)
+    assert (d.replica_id, d.reason) == (0, "imbalance_cap")
+    assert d.matched_tokens == 0
+    assert router.stats["imbalance_cap"] == 1
+    # Within the cap the warm replica keeps winning.
+    views = [_view(0, None, load=0), _view(1, warm, load=2)]
+    assert router.route(warm, None, views).replica_id == 1
+
+
+def test_router_blind_round_robins_and_validates():
+    router = FleetRouter("blind")
+    views = [_view(0, None), _view(1, None), _view(2, None)]
+    picks = [router.route([1, 2], None, views).replica_id for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+    assert router.stats["blind"] == 6
+    with pytest.raises(ValueError, match="routing mode"):
+        FleetRouter("random")
+    with pytest.raises(ValueError, match="imbalance_cap"):
+        FleetRouter("affinity", imbalance_cap=0)
+
+
+def test_router_best_match_tokens_for_admission():
+    warm = list(range(12))
+    router = FleetRouter("affinity")
+    views = [_view(0, None), _view(1, warm)]
+    assert router.best_match_tokens(warm + [5], None, views) == 12
+    assert router.best_match_tokens([9] * 8, None, views) == 0
+    assert router.best_match_tokens(warm, None, []) == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine roles + page shipping
+# ---------------------------------------------------------------------------
+
+def test_role_validation(model):
+    with pytest.raises(ValueError, match="role"):
+        _engine(model, role="router")
+    with pytest.raises(ValueError, match="never decode"):
+        _engine(model, role="prefill", enable_spec_decode=True)
+    pre = _engine(model, role="prefill")
+    assert not pre.spec_decode                  # forced off, even via cfg
+    with pytest.raises(RuntimeError, match="prefill-role"):
+        pre.decode_step()
+
+
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8"])
+def test_ship_token_identity(model, gold_engine, kv_dtype):
+    """prefill-role admit -> export -> import into a decode-role engine ->
+    decode: greedy tokens identical to a never-shipped run, both pool
+    layouts (int8 ships its scale pages alongside the data pages)."""
+    cfg, params = model
+    prompts = [_prompt(cfg, 13, seed=21), _prompt(cfg, 8, seed=22)]
+    max_new = 12
+    gold = _engine(model, kv_cache_dtype=kv_dtype).generate(
+        prompts, max_new=max_new).tokens
+
+    pre = _engine(model, role="prefill", kv_cache_dtype=kv_dtype,
+                  prefill_chunk=16)
+    dec = _engine(model, role="decode", kv_cache_dtype=kv_dtype)
+    for i, p in enumerate(prompts):
+        pre.enqueue(EngineRequest(i, p, max_new))
+    assert pre.admit() == 2
+    payloads = [pre.export_pages(s) for s in sorted(pre._live)]
+    assert pre.live == 0 and pre.stats["page_exports"] == 2
+    assert pre.alloc.available() == pre.num_pages - 1   # all pages released
+    pre._debug_check_refcounts()
+    for pl, p in zip(payloads, prompts):
+        assert pl.emitted == 0 and pl.pos == len(p)
+        assert pl.n_content == -(-len(p) // cfg.page_size)
+        assert pl.nbytes == sum(a.nbytes for a in pl.content.values()) > 0
+        if kv_dtype == "int8":
+            assert {"k", "v", "k_scale", "v_scale"} == set(pl.content)
+        else:
+            assert {"k", "v"} == set(pl.content)
+        dec.import_pages(pl)
+    assert dec.live == 2 and dec.stats["page_imports"] == 2
+    assert dec.stats["prefill_tokens"] == 0     # decode side never prefills
+    dec._debug_check_refcounts()
+    done = {}
+    while dec.live:
+        for req, toks in dec.decode_step():
+            done[req.rid] = toks
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(gold[i],
+                                      np.asarray(done[i], np.int32))
+    assert pre._n_decode_traces == 0
+
+
+def test_ship_into_spec_decode_engine(model):
+    """A payload from a (non-speculative) prefill engine lands in a
+    speculative decode engine: the reconstructed drafting history yields
+    the same greedy tokens as a unified speculative run."""
+    cfg, params = model
+    # A repetitive prompt so speculation genuinely accepts drafts.
+    prompt = ([5, 6, 7, 8] * 5)[:18]
+    max_new = 14
+    gold = _engine(model, enable_spec_decode=True, spec_tokens=4).generate(
+        [prompt], max_new=max_new).tokens[0]
+    pre = _engine(model, role="prefill")
+    dec = _engine(model, role="decode", enable_spec_decode=True,
+                  spec_tokens=4)
+    pre.enqueue(EngineRequest(0, prompt, max_new))
+    pre.admit()
+    dec.import_pages(pre.export_pages(list(pre._live)[0]))
+    done = {}
+    while dec.live:
+        for req, toks in dec.decode_step():
+            done[req.rid] = toks
+    np.testing.assert_array_equal(gold, np.asarray(done[0], np.int32))
+    assert dec.stats["spec_steps"] > 0
+
+
+def test_import_reregisters_prefix_in_destination_cache(model):
+    """Shipped pages re-enter the destination's radix cache: the NEXT
+    request with the same prefix aliases them instead of re-prefilling."""
+    cfg, params = model
+    prompt = _prompt(cfg, 16, seed=30)          # 2 full pages
+    pre = _engine(model, role="prefill")
+    dec = _engine(model, role="decode")
+    pre.enqueue(EngineRequest(0, prompt, 8))
+    pre.admit()
+    payload = pre.export_pages(list(pre._live)[0])
+    dec.import_pages(payload)
+    chain, match = dec.prefix_cache.lookup(prompt)
+    assert match == 16 and len(chain) == 2
+    # Source cache survives the export too (prefill replica stays warm).
+    assert pre.prefix_cache.lookup(prompt)[1] == 16
+    # A second request for the same prompt on the destination: admission
+    # serves the prefix from the imported pages, zero fresh prefill pages.
+    dec.enqueue(EngineRequest(1, prompt, 8))
+    dec.admit()
+    assert dec.stats["cached_tokens"] == 15     # plen-1 cap: last tok redone
+    dec._debug_check_refcounts()
+
+
+def test_import_validates_layout_and_capacity(model):
+    cfg, params = model
+    prompt = _prompt(cfg, 9, seed=31)
+    pre = _engine(model, role="prefill")
+    pre.enqueue(EngineRequest(0, prompt, 4))
+    pre.admit()
+    payload = pre.export_pages(list(pre._live)[0])
+    with pytest.raises(ValueError, match="int8"):
+        _engine(model, kv_cache_dtype="int8").import_pages(payload)
+    # A destination pool too small for the request fails loudly.
+    tiny = _engine(model, max_slots=1, num_pages=1)
+    with pytest.raises(ValueError, match="pages"):
+        tiny.import_pages(payload)
+    # No free pages right now (transient): RuntimeError, payload reusable.
+    dec = _engine(model, max_slots=2, num_pages=3)
+    dec.enqueue(EngineRequest(7, _prompt(cfg, 9, seed=32), 4))
+    dec.admit()                                 # 2 of 3 pages now occupied
+    with pytest.raises(RuntimeError, match="insufficient free pages"):
+        dec.import_pages(payload)
+    ok = _engine(model)
+    ok.import_pages(payload)
+    assert ok.live == 1
+
+
+# ---------------------------------------------------------------------------
+# Gateway: affinity routing end to end
+# ---------------------------------------------------------------------------
+
+def _placement(gw, rid):
+    """Step until job rid is dispatched; return its replica id."""
+    for _ in range(200):
+        if gw.jobs[rid].replica is not None:
+            return gw.jobs[rid].replica
+        if gw.jobs[rid].status is JobState.DONE:
+            pytest.fail("job finished before placement was observed")
+        gw.step()
+    pytest.fail("job never dispatched")
+
+
+def test_affinity_routes_repeat_prefix_to_warm_replica(model):
+    """Two static replicas, two tenants with hot 16-token prefixes: after
+    the cold first round, every repeat lands on the tenant's warm replica
+    and admission serves the prefix from cache."""
+    cfg, _ = model
+    sec, tok = _security("a", "b")
+    gw = _gateway(model, sec, routing="affinity",
+                  scaling=ScalingPolicy.none(2, market="on_demand"))
+    hot = {t: _prompt(cfg, 16, seed=40 + i)
+           for i, t in enumerate(("a", "b"))}
+
+    def job(tenant, tail_seed):
+        # max_new=8 spans two decode chunks, so the job is still live (and
+        # its placement observable) after the step that dispatched it.
+        tail = _prompt(cfg, 4, seed=900 + tail_seed)
+        return gw.submit(tok[tenant], hot[tenant] + tail, max_new=8,
+                         data_zone="public")
+
+    first = {t: _placement(gw, job(t, i)) for i, t in enumerate(("a", "b"))}
+    gw.drain()
+    # Cold start spread the two tenants across the two replicas.
+    assert first["a"] != first["b"]
+    for i in range(3):
+        for t in ("a", "b"):
+            assert _placement(gw, job(t, 10 + 2 * i + (t == "b"))) == first[t]
+            gw.drain()
+    m = gw.metrics()
+    assert m["routing_mode"] == "affinity"
+    assert m["routing"]["affinity"] >= 6
+    assert m["routing"]["matched_tokens"] >= 6 * 16
+    per = {e["replica"]: e for e in m["per_replica"]}
+    assert len(per) == 2
+    # Both replicas served warm repeats: prefix hits on each, and the
+    # dispatch counters account for every placement.
+    assert all(e["prefix_hit_rate"] > 0 for e in per.values())
+    assert sum(e["dispatched"] for e in per.values()) == 8
+    # The accessor satellite: per-replica engines are addressable by id.
+    for rid_, e in per.items():
+        eng = gw.replica_engine(rid_)
+        assert eng.prefix_hit_rate == e["prefix_hit_rate"]
+    with pytest.raises(KeyError):
+        gw.replica_engine(10_000)
+
+
+def test_blind_routing_ignores_affinity(model):
+    """Same trace under routing='blind': round-robin placement alternates
+    replicas, so the hot tenant's repeats re-prefill from scratch roughly
+    half the time — strictly more fresh prefill than affinity pays."""
+    cfg, _ = model
+    sec, tok = _security("a")
+    hot = _prompt(cfg, 16, seed=44)
+
+    def run(mode):
+        gw = _gateway(model, sec, routing=mode,
+                      scaling=ScalingPolicy.none(2, market="on_demand"))
+        for i in range(6):
+            gw.submit(tok["a"], hot + _prompt(cfg, 4, seed=700 + i),
+                      max_new=4, data_zone="public")
+            gw.drain()
+        m = gw.metrics()
+        fresh = sum(gw.replica_engine(e["replica"]).stats["prefill_tokens"]
+                    for e in m["per_replica"])
+        return m, fresh
+
+    m_blind, fresh_blind = run("blind")
+    m_aff, fresh_aff = run("affinity")
+    assert m_blind["routing"]["blind"] == 6
+    assert m_blind["routing"]["matched_tokens"] == 0
+    assert fresh_aff < fresh_blind
+
+
+# ---------------------------------------------------------------------------
+# Gateway: disaggregated prefill/decode
+# ---------------------------------------------------------------------------
+
+def test_disaggregated_gateway_token_identity(model, gold_engine):
+    """1 prefill + 2 decode replicas: every request flows admission ->
+    export -> ship -> import -> decode, tokens oracle-identical; the
+    prefill engine never decodes and the decode engines never prefill."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(
+        model, sec, routing="affinity",
+        scaling=ScalingPolicy.none(2, market="on_demand"),
+        engine_kw={"role": "decode"},
+        prefill_replicas=1,
+        prefill_engine_factory=_factory(model, role="prefill",
+                                        prefill_chunk=16))
+    rng = np.random.RandomState(60)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+               for n in (6, 13, 16, 9)]
+    rids = [gw.submit(tok["alice"], p, max_new=10, data_zone="public")
+            for p in prompts]
+    gw.drain()
+    for rid, p in zip(rids, prompts):
+        gold = gold_engine.generate([p], max_new=10).tokens[0]
+        np.testing.assert_array_equal(gold,
+                                      np.asarray(gw.result(rid), np.int32))
+    m = gw.metrics()
+    assert m["completed"] == 4 and m["shed"] == 0
+    assert m["page_ships"] == 4
+    assert m["page_ship_bytes"] > 0 and m["page_ship_bytes_per_ship"] > 0
+    assert m["handoffs_in_flight"] == 0
+    roles = {e["replica"]: e["role"] for e in m["per_replica"]}
+    assert sorted(roles.values()) == ["decode", "decode", "prefill"]
+    for rid_, role in roles.items():
+        eng = gw.replica_engine(rid_)
+        if role == "prefill":
+            assert eng._n_decode_traces == 0
+            assert eng.stats["prefill_tokens"] > 0
+        else:
+            assert eng.stats["prefill_tokens"] == 0
+            assert eng.stats["page_imports"] > 0
+    # New work was dispatched exclusively to the prefill front end.
+    pre_id = next(r for r, ro in roles.items() if ro == "prefill")
+    assert {e["replica"]: e["dispatched"]
+            for e in m["per_replica"]}[pre_id] == 4
+
+
+def test_disaggregated_shipped_prefix_stays_shareable(model):
+    """Two same-tenant requests sharing a 16-token prefix through the
+    disaggregated path: the prefill replica prefills the shared prefix
+    once, and the shipped pages re-register on the decode side."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(
+        model, sec, routing="affinity",
+        scaling=ScalingPolicy.none(1, market="on_demand"),
+        engine_kw={"role": "decode"},
+        prefill_replicas=1,
+        prefill_engine_factory=_factory(model, role="prefill"))
+    hot = _prompt(cfg, 16, seed=70)
+    r1 = gw.submit(tok["alice"], hot + _prompt(cfg, 3, seed=71),
+                   max_new=6, data_zone="public")
+    gw.drain()
+    r2 = gw.submit(tok["alice"], hot + _prompt(cfg, 5, seed=72),
+                   max_new=6, data_zone="public")
+    gw.drain()
+    assert gw.jobs[r1].status is JobState.DONE
+    assert gw.jobs[r2].status is JobState.DONE
+    m = gw.metrics()
+    pre = next(e for e in m["per_replica"] if e["role"] == "prefill")
+    dec = next(e for e in m["per_replica"] if e["role"] == "decode")
+    # Second request's 16-token prefix came from the prefill replica's
+    # cache (hit rate > 0 there); the decode replica's cache holds the
+    # imported prefix for future COW sharing.
+    assert pre["prefix_hit_rate"] > 0
+    eng = gw.replica_engine(dec["replica"])
+    assert eng.prefix_cache.lookup(hot, ("alice", "public"))[1] == 16
+
+    # Gateway-level validation of factory roles.
+    with pytest.raises(ValueError, match="prefill_engine_factory"):
+        _gateway(model, sec, prefill_replicas=1)
+    with pytest.raises(ValueError, match="role='prefill'"):
+        _gateway(model, sec, prefill_replicas=1,
+                 prefill_engine_factory=_factory(model))
+    with pytest.raises(ValueError, match="decode-capable"):
+        _gateway(model, sec, engine_kw={"role": "prefill"})

@@ -785,3 +785,61 @@ def test_prefix_cache_existing_entries_win():
     assert chain == [3, 4]
     pc.evict(5)                                 # duplicate pages never indexed
     assert pc.lookup(list(range(8)))[0] == [3, 4]
+
+
+def test_prefix_cache_lookup_at_exact_page_boundaries():
+    """Longest-prefix lookup lands exactly on page edges: a prompt that is
+    a whole number of pages matches fully with no partial entry, a query
+    one token past the boundary gains nothing, and one token short drops a
+    whole page (full pages only — no sub-page credit without a partial)."""
+    pc = PrefixCache(4)
+    prompt = list(range(12))                    # exactly 3 pages
+    pc.register(prompt, [5, 6, 7])
+    assert pc.lookup(prompt) == ([5, 6, 7], 12)
+    assert len(pc) == 3                         # no partial entry created
+    # One past the boundary: the extra token is uncached, match stays 12.
+    assert pc.lookup(prompt + [99]) == ([5, 6, 7], 12)
+    # One short of the boundary: page 3 can't fully match, and with no
+    # partial registered the 3 matching tokens earn nothing.
+    assert pc.lookup(prompt[:11]) == ([5, 6], 8)
+    assert pc.lookup(prompt[:8]) == ([5, 6], 8)
+    assert pc.lookup(prompt[:4]) == ([5], 4)
+    assert pc.lookup(prompt[:3]) == ([], 0)
+    # A partial tail registers only when its page exists: now an 11-token
+    # register adds a partial under page 6, and the boundary query walks
+    # full pages first, then the partial (copy-on-write source).
+    pc.register(prompt[:11], [5, 6, 8])
+    chain, match = pc.lookup(prompt[:11])
+    assert (chain, match) == ([5, 6, 8], 11)
+    assert pc.lookup(prompt) == ([5, 6, 7], 12)  # full chain still preferred
+
+
+def test_prefix_cache_eviction_on_realloc_under_namespace_churn():
+    """The allocator's on_alloc hook scrubs cache entries the moment their
+    page is handed out again — churning registrations across namespaces
+    never lets a stale entry alias a reused page's new contents."""
+    al = PageAllocator(5)                       # pages 1..4
+    pc = PrefixCache(4)
+    al.on_alloc = pc.evict
+    prompt = list(range(8))
+    pa = [al.alloc(), al.alloc()]
+    pc.register(prompt, pa, namespace="tenant-a")
+    pb = [al.alloc(), al.alloc()]
+    pc.register(prompt, pb, namespace="tenant-b")
+    for p in reversed(pa):                      # tenant-a's request retires
+        al.release(p)
+    # Still hittable while free (revivable), until someone takes the pages.
+    assert pc.lookup(prompt, namespace="tenant-a") == (pa, 8)
+    pc2 = al.alloc()                            # tenant-a's root reused...
+    assert pc2 == pa[0]                         # (LIFO free list)
+    assert pc.lookup(prompt, namespace="tenant-a") == ([], 0)   # whole chain
+    assert pc.lookup(prompt, namespace="tenant-b") == (pb, 8)   # b untouched
+    # Churn: register the reused pages under a THIRD namespace (the evicted
+    # subtree left them clean), release and realloc again — only the latest
+    # owner's entry ever resolves.
+    pc.register(prompt, [pc2, pa[1]], namespace="tenant-c")
+    assert pc.lookup(prompt, namespace="tenant-c") == ([pc2, pa[1]], 8)
+    al.release(pc2)
+    assert al.alloc() == pc2
+    assert pc.lookup(prompt, namespace="tenant-c") == ([], 0)
+    assert pc.lookup(prompt, namespace="tenant-b") == (pb, 8)
