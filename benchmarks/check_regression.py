@@ -86,6 +86,18 @@ def _kv_capacity_ratio(r: dict) -> float:
     return q["f32_bytes_per_slot_token"] / q["int8_bytes_per_slot_token"]
 
 
+def _fault_ttft_ratio(r: dict) -> float:
+    f = r["fault_recovery"]
+    return (f["requeue"]["recovered_ttft_mean_s"]
+            / f["evacuate"]["recovered_ttft_mean_s"])
+
+
+def _fault_goodput_ratio(r: dict) -> float:
+    f = r["fault_recovery"]
+    return (f["evacuate"]["tok_per_sim_s"]
+            / f["requeue"]["tok_per_sim_s"])
+
+
 @dataclass(frozen=True)
 class Metric:
     """One gated metric.
@@ -158,6 +170,23 @@ METRICS = [
     Metric("gateway", "fleet_routing.page_ship_bytes_per_request",
            lambda r: r["fleet_routing"]["page_ship_bytes_per_request"],
            "lower", 0.0),
+    # Fault recovery: evacuation must keep beating abort-and-requeue on the
+    # same scripted fault schedule. Both ratios recomputed from the raw
+    # per-mode fields (virtual clock, host-independent). Token identity
+    # across recovery modes is binary — any divergence is a correctness
+    # bug — and an evacuation count of zero means the graceful path never
+    # ran, so both gate exactly.
+    Metric("gateway",
+           "fault_recovery.recovered_ttft_ratio_requeue_over_evacuate",
+           _fault_ttft_ratio, "higher", 0.30),
+    Metric("gateway", "fault_recovery.goodput_ratio_evacuate_over_requeue",
+           _fault_goodput_ratio, "higher", 0.10),
+    Metric("gateway", "fault_recovery.token_identity",
+           lambda r: 1.0 if r["fault_recovery"]["token_identity"] else 0.0,
+           "higher", 0.0),
+    Metric("gateway", "fault_recovery.evacuate.evacuations",
+           lambda r: r["fault_recovery"]["evacuate"]["evacuations"],
+           "higher", 0.0),
 ]
 
 

@@ -43,6 +43,15 @@ provisioning: makespan / cost / wait) plus its §VI isolation guarantees:
    (``export_pages``/``import_pages``), and the per-request shipping bytes
    are recorded (and exactly gated — they are a pure layout constant).
 
+5. ``fault_recovery``: three on-demand replicas under an identical scripted
+   fault schedule (two revocation notices + one no-warning crash), run as
+   **baseline** (no faults — the token-identity oracle), **evacuate**
+   (notice-window KV evacuation: noticed replicas ship live/paused KV
+   mid-decode to survivors) and **requeue** (evacuation off: notice expires
+   into a hard revoke, requests restart from the prompt with backoff).
+   Recovered-TTFT ratio requeue/evacuate and goodput ratio evacuate/requeue
+   are the headlines; tokens must be identical across all three modes.
+
 Results land in ``BENCH_gateway.json`` alongside the CSV rows that
 ``benchmarks/run.py`` prints. ``--smoke`` runs a one-burst subset for CI
 (control-plane breakage, not numbers). Any scenario failure is recorded in
@@ -69,7 +78,8 @@ from repro.core.clock import VirtualClock
 from repro.models import get_family
 from repro.models.params import init_params
 from repro.serve import (ContinuousBatchingEngine, DeadlineCostPolicy,
-                         JobState, KottaServeGateway, ServiceModel)
+                         FaultEvent, FaultInjector, JobState,
+                         KottaServeGateway, ServiceModel)
 
 ARCH = "yi-6b"
 TENANTS = ("alice", "bob", "carol")
@@ -550,6 +560,157 @@ def _bench_isolation(cfg, params, verbose, results):
              f"same_tenant_hits={same};cross_tenant_hits={cross}")]
 
 
+FR_REPLICAS = 3
+FR_PREFIX_LEN = 32              # per-tenant hot prefix (4 pages)
+FR_MAX_NEW = 24                 # long enough that faults land mid-decode
+FR_JOBS = 12
+FR_SMOKE_JOBS = 9
+FR_ARRIVAL_GAP_S = 0.1
+FR_NOTICE_S = 0.5               # scaled-down 2-minute warning: ~1 round
+FR_PROVISION_DELAY_S = 2.0
+# Prefill-heavy service point (same regime as fleet_routing): restarting a
+# request from the prompt costs 0.5+ sim-s of re-prefill, while shipping
+# its KV pages costs microseconds of modelled wire time — the gap the
+# evacuation path exists to exploit.
+FR_SERVICE = ServiceModel(prefill_tok_per_s=64.0, decode_step_s=0.01)
+# The reproducible fault schedule: two revocation notices on the lowest-id
+# replica (the graceful path under test) bracketing one no-warning crash
+# (the requeue path both modes share). Scripted, not seeded — the bench
+# must disturb the same requests the same way in every mode.
+FR_SCHEDULE = (
+    FaultEvent(at_s=0.8, kind="revoke_notice", target=0,
+               duration_s=FR_NOTICE_S),
+    FaultEvent(at_s=1.5, kind="crash", target=1),
+    FaultEvent(at_s=2.2, kind="revoke_notice", target=0,
+               duration_s=FR_NOTICE_S),
+)
+
+
+def _bench_fault_recovery(cfg, params, verbose, results,
+                          jobs: int = FR_JOBS):
+    """Recovery cost of replica loss: notice-window KV evacuation vs
+    abort-and-requeue, on the identical scripted fault schedule.
+
+    Three runs share one arrival trace. ``baseline`` sees no faults (the
+    token-identity oracle). ``evacuate`` takes the schedule with
+    ``evacuate_on_notice`` — noticed replicas ship every live/paused
+    request's KV out mid-decode and surviving replicas import them.
+    ``requeue`` takes the same schedule with evacuation off — noticed
+    replicas decode until the deadline, then die like a crash, and their
+    requests restart from the prompt with backoff. Headlines: mean
+    recovered TTFT (disturbance -> next decode-slot occupancy) ratio
+    requeue/evacuate, and goodput (tok/sim-s) ratio evacuate/requeue.
+    Every mode must finish every job with IDENTICAL tokens to the
+    undisturbed baseline — greedy decode across an evacuation or a requeue
+    is bit-stable, or the whole failure story is moot.
+    """
+    rng = np.random.RandomState(77)
+    prefixes = {t: rng.randint(0, cfg.vocab_size,
+                               size=FR_PREFIX_LEN).tolist()
+                for t in TENANTS}
+    trace = []
+    for i in range(jobs):
+        tenant = TENANTS[i % len(TENANTS)]
+        tail = rng.randint(0, cfg.vocab_size, size=3 + i % 4).tolist()
+        trace.append((tenant, prefixes[tenant] + tail))
+
+    def run_mode(mode):
+        sec, tokens = _security()
+        injector = None if mode == "baseline" \
+            else FaultInjector(schedule=FR_SCHEDULE)
+        gw = KottaServeGateway(
+            _factory(cfg, params), sec,
+            scaling=ScalingPolicy.none(FR_REPLICAS, market="on_demand"),
+            provisioning=ProvisioningModel(
+                base_delay_s=FR_PROVISION_DELAY_S, jitter_s=0.0,
+                volatility_prob=0.0),
+            service_model=FR_SERVICE, idle_tick_s=0.5,
+            evacuate_on_notice=(mode == "evacuate"),
+            fault_injector=injector)
+        rids = []
+        rounds = 0
+        for i, (tenant, prompt) in enumerate(trace):
+            while gw.clock.now() < i * FR_ARRIVAL_GAP_S:
+                gw.step()
+                rounds += 1
+                if rounds > 50_000:
+                    raise RuntimeError(f"fault_recovery[{mode}] stalled "
+                                       f"before arrival {i}")
+            rids.append(gw.submit(tokens[tenant], prompt,
+                                  max_new=FR_MAX_NEW, priority=1,
+                                  data_zone="public"))
+        gw.drain(max_rounds=50_000)
+        assert all(gw.jobs[r].status is JobState.DONE for r in rids), \
+            f"fault_recovery[{mode}]: not every job finished"
+        if injector is not None:
+            assert injector.pending == 0 and not injector.skipped, \
+                f"fault_recovery[{mode}]: schedule did not fully land " \
+                f"({injector.pending} pending, {len(injector.skipped)} " \
+                "skipped)"
+        m = gw.metrics()
+        m["tokens_by_rid"] = [gw.result(r) for r in rids]
+        return m
+
+    out = {mode: run_mode(mode)
+           for mode in ("baseline", "evacuate", "requeue")}
+    identity = all(
+        out["baseline"]["tokens_by_rid"][i]
+        == out["evacuate"]["tokens_by_rid"][i]
+        == out["requeue"]["tokens_by_rid"][i]
+        for i in range(len(trace)))
+    for m in out.values():      # token lists verified; keep the JSON lean
+        del m["tokens_by_rid"]
+    assert identity, "fault_recovery: tokens diverged across recovery modes"
+    for mode in ("evacuate", "requeue"):
+        assert out[mode]["disturbed_jobs"] > 0, \
+            f"fault_recovery[{mode}]: schedule disturbed no jobs"
+        assert out[mode]["recovered_jobs"] > 0, \
+            f"fault_recovery[{mode}]: no disturbed job recovered"
+    assert out["evacuate"]["evacuations"] > 0, \
+        "fault_recovery[evacuate]: notice window evacuated nothing"
+
+    ttft_ratio = (out["requeue"]["recovered_ttft_mean_s"]
+                  / max(out["evacuate"]["recovered_ttft_mean_s"], 1e-9))
+    goodput_ratio = (out["evacuate"]["tok_per_sim_s"]
+                     / max(out["requeue"]["tok_per_sim_s"], 1e-12))
+    results["fault_recovery"] = {
+        "jobs": len(trace), "max_new": FR_MAX_NEW,
+        "notice_s": FR_NOTICE_S,
+        "schedule": [{"at_s": e.at_s, "kind": e.kind, "target": e.target}
+                     for e in FR_SCHEDULE],
+        "baseline": out["baseline"], "evacuate": out["evacuate"],
+        "requeue": out["requeue"],
+        "token_identity": identity,
+        "recovered_ttft_ratio_requeue_over_evacuate": ttft_ratio,
+        "goodput_ratio_evacuate_over_requeue": goodput_ratio}
+    if verbose:
+        print(f"\n== gateway: fault recovery ({len(trace)} jobs, "
+              f"{len(FR_SCHEDULE)} scripted faults, notice "
+              f"{FR_NOTICE_S}s) ==")
+        print(f"{'mode':<10}{'rec TTFT':>10}{'tok/sim-s':>11}{'evac':>6}"
+              f"{'requeue':>9}{'retries':>9}{'wasted tok':>12}")
+        for mode in ("baseline", "evacuate", "requeue"):
+            m = out[mode]
+            print(f"{mode:<10}{m['recovered_ttft_mean_s']:>9.2f}s"
+                  f"{m['tok_per_sim_s']:>11.1f}{m['evacuations']:>6}"
+                  f"{m['requeues']:>9}{m['retries']:>9}"
+                  f"{m['wasted_decode_tokens']:>12}")
+        print(f"headline: requeue/evacuate recovered TTFT = "
+              f"{ttft_ratio:.2f}x, evacuate/requeue goodput = "
+              f"{goodput_ratio:.2f}x; tokens identical across all modes "
+              f"= {identity}")
+    return [("gateway.fault.evacuate",
+             out["evacuate"]["recovered_ttft_mean_s"] * 1e6,
+             f"rec_ttft_s={out['evacuate']['recovered_ttft_mean_s']:.3f};"
+             f"evacuations={out['evacuate']['evacuations']};"
+             f"ttft_ratio_vs_requeue={ttft_ratio:.2f}x"),
+            ("gateway.fault.requeue",
+             out["requeue"]["recovered_ttft_mean_s"] * 1e6,
+             f"rec_ttft_s={out['requeue']['recovered_ttft_mean_s']:.3f};"
+             f"retries={out['requeue']['retries']};"
+             f"goodput_ratio={goodput_ratio:.2f}x")]
+
+
 def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
         smoke: bool = False):
     cfg, params = _build()
@@ -570,6 +731,9 @@ def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
             jobs=FLEET_SMOKE_JOBS if smoke else FLEET_JOBS)),
         ("isolation", lambda: _bench_isolation(cfg, params, verbose,
                                                results)),
+        ("fault_recovery", lambda: _bench_fault_recovery(
+            cfg, params, verbose, results,
+            jobs=FR_SMOKE_JOBS if smoke else FR_JOBS)),
     ]
     rows = []
     for name, fn in scenarios:

@@ -62,6 +62,10 @@ class SpotMarket:
     spike_prob: float = 0.01          # per-hour probability of an AZ spike
     spike_mult: tuple[float, float] = (2.0, 12.0)  # spike height ×on-demand base frac
     spike_duration_h: tuple[int, int] = (1, 5)
+    # Revocation notice window (the EC2 2-minute spot warning): a consumer
+    # polling ``notice`` learns ``notice_s`` seconds ahead that the price is
+    # about to cross its bid, long enough to evacuate state gracefully.
+    notice_s: float = 120.0
 
     def on_demand_price(self, instance_type: str) -> float:
         return self.pricing.on_demand_per_hour[instance_type]
@@ -103,3 +107,12 @@ class SpotMarket:
                 bid: float, t_hours: float) -> bool:
         """True if the market price exceeds the bid at time t."""
         return self.price(zone, instance_type, t_hours) > bid
+
+    def notice(self, zone: AvailabilityZone, instance_type: str,
+               bid: float, t_hours: float) -> bool:
+        """Revocation notice: the price will exceed ``bid`` ``notice_s``
+        seconds from ``t_hours``. The trace is deterministic, so the notice
+        is exact — a consumer that polls every round sees it fire exactly
+        one window ahead of :meth:`revoked` flipping true."""
+        return self.revoked(zone, instance_type, bid,
+                            t_hours + self.notice_s / 3600.0)

@@ -41,6 +41,12 @@ scheduled Kotta job:
   batch wait, and interactive p99 TTFT. Preemption follows the config knob
   ``enable_decode_preemption`` (pass ``--no-preempt`` to watch the same
   burst get shed instead).
+- ``--chaos-seed SEED`` (implies ``--gateway``) demos the failure plane: a
+  seeded-random fault storm (crashes, revocation notices answered with
+  notice-window KV evacuation, stragglers, heartbeat loss) plays out over
+  the fleet while jobs run. Disturbed jobs either migrate losslessly or
+  requeue with capped backoff; the summary prints fault/evacuation/retry
+  counters and recovered TTFT, and every job ends DONE or typed-SHED.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --gateway \\
         --tenants 2 --deadline-s 120 --batch 6
@@ -222,6 +228,67 @@ def _run_interactive_burst(cfg, params, args) -> None:
           f" resume records")
 
 
+def _run_chaos(cfg, params, args) -> None:
+    """Demo: a seeded fault storm over the fleet — crashes, revocation
+    notices (KV evacuation), stragglers, heartbeat loss — with every job
+    finishing or shedding with a typed error."""
+    from collections import Counter
+
+    from repro.core.clock import VirtualClock
+    from repro.core.elastic import ProvisioningModel, ScalingPolicy
+    from repro.core.security import PolicyEngine, provision_tenant
+    from repro.serve import (ContinuousBatchingEngine, FaultInjector,
+                             JobState, KottaServeGateway, ServiceModel)
+
+    sec = PolicyEngine(clock=VirtualClock())
+    tok = provision_tenant(sec, "tenant0", "pw-tenant0",
+                           data_zones=("public",))
+    horizon = 8.0
+    inj = FaultInjector.random(
+        args.chaos_seed, horizon, crash_rate_h=900.0, revoke_rate_h=1800.0,
+        straggler_rate_h=1800.0, heartbeat_loss_rate_h=900.0,
+        notice_s=0.6, duration_s=(0.5, 2.0), magnitude=(2.0, 6.0),
+        max_targets=4)
+    gw = KottaServeGateway(
+        lambda: ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
+                                         decode_chunk=2,
+                                         kv_cache_dtype=args.kv_dtype),
+        sec,
+        scaling=ScalingPolicy.none(max(2, args.replicas),
+                                   market="on_demand"),
+        provisioning=ProvisioningModel(base_delay_s=0.5, jitter_s=0.0,
+                                       volatility_prob=0.0),
+        service_model=ServiceModel(), retry_budget=8, backoff_base_s=0.5,
+        fault_injector=inj)
+    prompts = _demo_prompts(cfg, args.batch)
+    rids = [gw.submit(tok, p, max_new=args.max_new, data_zone="public")
+            for p in prompts]
+    gw.drain(max_rounds=100_000)
+    while gw.clock.now() < horizon + 1.0:   # let late-scheduled faults land
+        gw.step()
+    print(f"engine: gateway chaos demo (seed {args.chaos_seed}, "
+          f"{inj.pending} pending / {len(inj.fired)} fired / "
+          f"{len(inj.skipped)} skipped faults: "
+          f"{dict(Counter(e.kind for e in inj.fired))})")
+    for rid in rids:
+        job = gw.jobs[rid]
+        if job.status is JobState.DONE:
+            note = (f" ({job.evacuations} evac, {job.retries} retries)"
+                    if job.disturbed_at is not None else "")
+            print(f"  job {rid}: DONE{note} -> {job.tokens}")
+        else:
+            print(f"  job {rid}: SHED ({job.error.reason})")
+    m = gw.metrics()
+    print(f"notices {m['notices']}   evacuations {m['evacuations']} "
+          f"({m['evacuated_pages_bytes'] / 1e6:.2f} MB)   requeues "
+          f"{m['requeues']}   retries {m['retries']}   wasted decode "
+          f"tokens {m['wasted_decode_tokens']}")
+    if m["recovered_jobs"]:
+        print(f"recovered TTFT mean {m['recovered_ttft_mean_s']:.2f}s over "
+              f"{m['recovered_jobs']} disturbed job(s)   replica health "
+              f"{m['replica_health']}")
+
+
 def _disaggregate_spec(spec: str) -> tuple[int, int]:
     try:
         n_prefill, n_decode = (int(x) for x in spec.split(":"))
@@ -288,6 +355,11 @@ def main() -> None:
     ap.add_argument("--no-preempt", action="store_true",
                     help="with --interactive-burst: disable preemption to "
                          "watch the burst shed instead")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
+                    help="gateway demo: seeded random fault storm (crashes, "
+                         "revocation notices with KV evacuation, "
+                         "stragglers, heartbeat loss) over the fleet; every "
+                         "job must end DONE or typed-SHED")
     args = ap.parse_args()
     if args.adaptive_k and not args.spec:
         raise SystemExit("--adaptive-k requires --spec (it governs the "
@@ -301,6 +373,11 @@ def main() -> None:
     fam = get_family(cfg)
     params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
+    if args.chaos_seed is not None:
+        if not hasattr(fam, "decode_paged"):
+            raise SystemExit("--chaos-seed requires a paged-decode family")
+        _run_chaos(cfg, params, args)
+        return
     if args.interactive_burst:
         if not hasattr(fam, "decode_paged"):
             raise SystemExit("--interactive-burst requires a paged-decode "

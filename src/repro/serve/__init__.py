@@ -1,17 +1,24 @@
 from .admission import (AdmissionError, AdmissionPolicy, CostBudgetExceeded,
                         DeadlineCostPolicy, DeadlineInfeasible, FCFSPolicy,
-                        JobState, PreemptCandidate, ServeJob, ServiceModel)
+                        JobState, PreemptCandidate, RetryBudgetExhausted,
+                        ServeJob, ServiceModel)
 from .drafting import build_ngram_draft
 from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
                      ServeEngine, ServeResult, ShippedKV)
+from .faults import FaultEvent, FaultInjector
 from .gateway import KottaServeGateway
 from .paging import PageAllocator, PrefixCache, chain_hashes
-from .routing import FleetRouter, ReplicaView, RouteDecision
+from .routing import (HEALTH_DEGRADED, HEALTH_QUARANTINED, HEALTH_UP,
+                      FingerprintTracker, FleetRouter, ReplicaView,
+                      RouteDecision)
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
            "PausedRequest", "ServeResult", "ShippedKV", "PageAllocator",
            "PrefixCache", "chain_hashes", "FleetRouter", "ReplicaView",
-           "RouteDecision", "KottaServeGateway", "ServeJob", "JobState",
-           "ServiceModel", "AdmissionPolicy", "FCFSPolicy",
-           "DeadlineCostPolicy", "PreemptCandidate", "AdmissionError",
-           "DeadlineInfeasible", "CostBudgetExceeded", "build_ngram_draft"]
+           "RouteDecision", "FingerprintTracker", "HEALTH_UP",
+           "HEALTH_DEGRADED", "HEALTH_QUARANTINED", "KottaServeGateway",
+           "ServeJob", "JobState", "ServiceModel", "AdmissionPolicy",
+           "FCFSPolicy", "DeadlineCostPolicy", "PreemptCandidate",
+           "AdmissionError", "DeadlineInfeasible", "CostBudgetExceeded",
+           "RetryBudgetExhausted", "FaultEvent", "FaultInjector",
+           "build_ngram_draft"]

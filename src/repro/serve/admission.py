@@ -61,6 +61,13 @@ class CostBudgetExceeded(AdmissionError):
     reason = "cost_budget_exceeded"
 
 
+class RetryBudgetExhausted(AdmissionError):
+    """The job lost its replica more times than the gateway's retry budget
+    allows; retrying further would let one cursed request spin forever."""
+
+    reason = "retry_budget_exhausted"
+
+
 class JobState(str, enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
@@ -78,6 +85,15 @@ class ServeJob:
     runs *within* a class. ``namespace`` is the tenant-scoped prefix-cache
     key (tenant principal, data zone). ``requeued`` marks a job that lost
     its replica to spot revocation: it skips shed checks on readmission.
+
+    Failure accounting: ``retries`` counts replica losses that sent the job
+    back through the queue (capped by the gateway's retry budget);
+    ``not_before`` is the capped-exponential-backoff gate — dispatch holds
+    the job until the clock passes it. ``disturbed_at`` / ``recovered_at``
+    bracket the most recent disturbance (evacuation or requeue) and its
+    recovery (back in a decode slot), the pair behind the bench's
+    recovered-request TTFT. ``evacuations`` counts notice-window KV
+    migrations that carried the job's live state to a surviving replica.
     """
 
     rid: int
@@ -96,6 +112,11 @@ class ServeJob:
     error: Optional[AdmissionError] = None
     requeued: bool = False
     replica: Optional[int] = None
+    retries: int = 0
+    not_before: float = 0.0
+    disturbed_at: Optional[float] = None
+    recovered_at: Optional[float] = None
+    evacuations: int = 0
 
 
 @dataclass(frozen=True)

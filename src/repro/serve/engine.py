@@ -242,6 +242,16 @@ class ShippedKV:
     page_size[, hd])`` host array — for int8 pools that is the int8 data
     pages AND their f32 ``k_scale``/``v_scale`` pages, so dequantization
     state travels with the data.
+
+    The payload is not prefill-specific: a request exported **mid-decode**
+    (the evacuation path) carries its already-decoded KV rows in the same
+    content pages, its emitted tokens in ``tokens``, and — under
+    speculative decode — its tuned adaptive window ``kslot`` and
+    accept-rate EMA, so the destination resumes with the speculation
+    controller warm instead of re-learning from K. ``consumed`` flips true
+    on a successful import: a payload is a one-shot move, and importing it
+    twice would mint two live copies of one request (a second import
+    raises ``ValueError``; a *failed* import leaves it re-importable).
     """
     req: EngineRequest
     emitted: int
@@ -252,6 +262,9 @@ class ShippedKV:
     kv_cache_dtype: str
     page_size: int
     hist: np.ndarray | None = None     # spec-decode drafting history, if any
+    kslot: int = 0              # adaptive speculative window (0 = untracked)
+    ema: float = 0.0            # accept-rate EMA riding along with kslot
+    consumed: bool = False      # set by a successful import_pages
 
     @property
     def n_content(self) -> int:
@@ -1064,16 +1077,57 @@ class ContinuousBatchingEngine:
         retired through the normal refcount path afterwards: this engine's
         prefix-cache entries survive, keeping a prefill replica a valid
         affinity target for the next request with the same prefix.
+
+        Works mid-decode, not just post-prefill: a request that already
+        emitted tokens ships its decoded KV rows, emitted tokens, and (spec
+        decode) its drafting history plus tuned kslot/accept-EMA — the
+        evacuation path a revocation notice triggers. Greedy decode at the
+        destination continues token-identically.
         """
         if slot not in self._live:
             raise KeyError(f"slot {slot} has no live request to export")
         live = self._live[slot]
-        pos = int(self._pos[slot])
+        hist = np.array(self._hist[slot]) if self.spec_decode else None
+        payload = self._export(
+            req=live.req, emitted=live.emitted, tokens=list(live.tokens),
+            cur=int(self._cur[slot]), pos=int(self._pos[slot]),
+            pages=live.pages, hist=hist, kslot=int(self._kslot[slot]),
+            ema=float(self._ema[slot]))
+        self._retire(slot)
+        return payload
+
+    def export_paused(self, rid: object) -> ShippedKV:
+        """Ship a PAUSED request out of this engine as a :class:`ShippedKV`.
+
+        The evacuation analogue of :meth:`export_pages` for requests parked
+        by :meth:`preempt`: the pinned content pages are gathered into a
+        self-contained payload, the pin is dropped (pages released through
+        the normal refcount path), and the parked cursor / history / tuned
+        speculation state ride along. Importing the payload elsewhere
+        revives the request as *live* — the slot pressure that paused it
+        was this replica's, not the fleet's.
+        """
+        paused = self._paused.get(rid)
+        if paused is None:
+            raise KeyError(f"request {rid} is not paused on this engine")
+        payload = self._export(
+            req=paused.req, emitted=paused.emitted,
+            tokens=list(paused.tokens), cur=paused.cur, pos=paused.pos,
+            pages=paused.pages, hist=paused.hist, kslot=paused.kslot,
+            ema=paused.ema)
+        del self._paused[rid]
+        for p in paused.pages:
+            self.alloc.release(p)       # unpin: aliased pages survive
+        return payload
+
+    def _export(self, *, req, emitted, tokens, cur, pos, pages, hist,
+                kslot, ema) -> ShippedKV:
+        """Gather ``ceil(pos/page_size)`` content pages into a payload."""
         ps = self.page_size
         n_content = math.ceil(pos / ps)
         nb = _next_pow2(max(1, n_content))
         idx = np.zeros(nb, np.int32)            # pads gather the sink page
-        idx[:n_content] = live.pages[:n_content]
+        idx[:n_content] = pages[:n_content]
         gather = self._ship_gather_cache.get(nb)
         if gather is None:
             def gather_fn(pool, idx):
@@ -1083,14 +1137,19 @@ class ContinuousBatchingEngine:
         content = {name: np.ascontiguousarray(
                        np.asarray(a)[:, :, :n_content])
                    for name, a in gathered.items()}
-        hist = np.array(self._hist[slot]) if self.spec_decode else None
-        payload = ShippedKV(
-            req=live.req, emitted=live.emitted, tokens=list(live.tokens),
-            cur=int(self._cur[slot]), pos=pos, content=content,
-            kv_cache_dtype=self.kv_cache_dtype, page_size=ps, hist=hist)
-        self._retire(slot)
         self.stats["page_exports"] += 1
-        return payload
+        return ShippedKV(
+            req=req, emitted=emitted, tokens=tokens, cur=cur, pos=pos,
+            content=content, kv_cache_dtype=self.kv_cache_dtype,
+            page_size=ps, hist=hist, kslot=kslot, ema=ema)
+
+    def page_nbytes(self) -> int:
+        """Wire bytes of ONE shipped page across every pool leaf (data +
+        scale pages) — what the evacuation planner multiplies by a
+        request's content-page count to budget the notice window without
+        exporting first."""
+        return sum(leaf.nbytes // leaf.shape[2] for leaf in
+                   self.pool.values())
 
     def import_pages(self, payload: ShippedKV) -> int:
         """Re-register a :class:`ShippedKV` payload here; returns the slot.
@@ -1101,9 +1160,15 @@ class ContinuousBatchingEngine:
         engine's radix prefix cache (existing entries win, exactly like
         admission), and the decode cursor resumes where the source stopped —
         greedy tokens are identical to a run that never hopped. Raises
-        ``ValueError`` on a layout mismatch and ``RuntimeError`` when no
-        slot or not enough pages are free (the caller retries later).
+        ``ValueError`` on a layout mismatch or a re-imported payload and
+        ``RuntimeError`` when no slot or not enough pages are free (the
+        caller retries later — only a *successful* import marks the payload
+        consumed).
         """
+        if payload.consumed:
+            raise ValueError(
+                f"payload for request {payload.req.rid} was already "
+                "imported; a ShippedKV is a one-shot move, not a template")
         if payload.kv_cache_dtype != self.kv_cache_dtype:
             raise ValueError(
                 f"shipped pages are {payload.kv_cache_dtype!r} but this "
@@ -1177,8 +1242,11 @@ class ContinuousBatchingEngine:
                 hrow[len(req.prompt):payload.pos] = payload.tokens[
                     :payload.pos - len(req.prompt)]
             self._hist = self._hist.at[slot].set(jnp.asarray(hrow))
-            self._kslot[slot] = self.spec_tokens
-            self._ema[slot] = 0.0
+            # Restore the source's tuned speculation window, capped at this
+            # engine's K (0 = the source never tracked one: warm from K).
+            self._kslot[slot] = min(payload.kslot, self.spec_tokens) \
+                or self.spec_tokens
+            self._ema[slot] = payload.ema
         if self.prefix_cache is not None:
             # The shipped prefix stays shareable after the hop: later
             # requests on THIS engine alias these pages instead of
@@ -1187,6 +1255,7 @@ class ContinuousBatchingEngine:
         self._live[slot] = _Live(req, pages, payload.emitted,
                                  list(payload.tokens))
         self.stats["page_imports"] += 1
+        payload.consumed = True
         return slot
 
     def drop_queued(self) -> list[EngineRequest]:

@@ -42,6 +42,24 @@ replicas, so serve traffic gets exactly what batch analytics got:
   deterministic, so a requeued request emits identical tokens. Retired
   engines park in a standby pool (a warm pool: jit caches survive
   relaunch).
+- **Graceful failure** (§IV-B; worker loss is an event, not an outage):
+  the market's **revocation notice** (``SpotMarket.notice_s``, the
+  2-minute spot warning) arrives one window ahead of the price crossing
+  the bid, and the gateway spends it **evacuating** the replica — every
+  live and PAUSED request's KV pages ship out mid-decode
+  (``export_pages`` / ``export_paused``) and re-import on a surviving
+  replica via FleetRouter placement, so recovery costs a page copy, not a
+  re-prefill, and greedy tokens stay identical to an undisturbed run.
+  Only when the window is too short for the payload does the job fall
+  back to requeue — now with **capped exponential backoff** and a
+  **retry budget** (exhaustion is a typed ``RetryBudgetExhausted`` shed,
+  never a hot requeue loop). Replicas heartbeat into the router each
+  round; non-UP replicas (stragglers → DEGRADED, heartbeat loss →
+  QUARANTINED) take no new placements and are drained. A pluggable
+  :class:`~repro.serve.faults.FaultInjector` drives crash / notice /
+  straggler / heartbeat-loss schedules through the same paths for the
+  chaos tests and the ``fault_recovery`` bench. Every failure transition
+  is audited (``serve:Revoke`` / ``serve:Evacuate`` / ``serve:Requeue``).
 
 - **Placement** (§IV, execution near the data): dispatch goes through a
   :class:`~repro.serve.routing.FleetRouter`. Each replica advertises a
@@ -87,10 +105,12 @@ from repro.core.security import (AuditRecord, PolicyEngine, SessionToken)
 
 from .admission import (AdmissionPolicy, DeadlineCostPolicy,
                         DeadlineInfeasible, JobState, PreemptCandidate,
-                        ServeJob, ServiceModel)
+                        RetryBudgetExhausted, ServeJob, ServiceModel)
 from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
                      ShippedKV)
-from .routing import FleetRouter, ReplicaView
+from .faults import FaultInjector
+from .routing import (HEALTH_UP, FingerprintTracker, FleetRouter,
+                      ReplicaView)
 
 
 class _Replica:
@@ -114,6 +134,12 @@ class _Replica:
         # prefill-token watermark: stats are cumulative per engine, and
         # engines are reused across launches (warm pool).
         self.pt_mark = engine.stats["prefill_tokens"]
+        # Failure plane: a pending revocation notice (absolute deadline the
+        # instance disappears at) and injected-fault state.
+        self.notice_deadline: Optional[float] = None
+        self.latency_mult = 1.0         # straggler fault: decode slowdown
+        self.straggler_until: Optional[float] = None
+        self.hb_lost_until: Optional[float] = None
 
 
 @dataclass
@@ -146,6 +172,12 @@ class KottaServeGateway:
                  prefill_replicas: int = 0,
                  prefill_engine_factory:
                      Callable[[], ContinuousBatchingEngine] | None = None,
+                 retry_budget: int = 5,
+                 backoff_base_s: float = 2.0,
+                 backoff_cap_s: float = 60.0,
+                 evacuate_on_notice: bool = True,
+                 notice_s: float | None = None,
+                 fault_injector: FaultInjector | None = None,
                  seed: int = 0):
         self._engine_factory = engine_factory
         self.security = security
@@ -170,6 +202,22 @@ class KottaServeGateway:
         self.clock = clock if clock is not None else VirtualClock()
         self.idle_tick_s = idle_tick_s
         self.provisioner = Provisioner(self.scaling, provisioning, seed=seed)
+        # Failure-plane knobs: how many replica losses one job may absorb
+        # before a typed shed, the capped-exponential requeue backoff, and
+        # whether a revocation notice triggers KV evacuation (off = the
+        # PR-4 abort/requeue baseline the fault_recovery bench compares
+        # against). ``notice_s`` is the window for injected/operator
+        # notices; market notices use the market's own ``notice_s``.
+        if retry_budget < 0:
+            raise ValueError(f"retry_budget must be >= 0, got {retry_budget}")
+        self.retry_budget = retry_budget
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.evacuate_on_notice = evacuate_on_notice
+        self.notice_s = notice_s if notice_s is not None else \
+            (market.notice_s if market is not None else 120.0)
+        self.faults = fault_injector
+        self._fp_tracker = FingerprintTracker()
 
         self.jobs: dict[int, ServeJob] = {}
         self.completed_order: list[int] = []
@@ -178,14 +226,19 @@ class KottaServeGateway:
         self._replicas: list[_Replica] = []
         self._standby: list[ContinuousBatchingEngine] = []
         self._paused: list[_PausedJob] = []
-        # Disaggregation: KV payloads in flight prefill -> decode, FIFO.
-        self._handoffs: list[tuple[ShippedKV, int]] = []   # (payload, job rid)
+        # KV payloads in flight between replicas (prefill handoffs AND
+        # evacuated requests), FIFO with a delivery-attempt counter.
+        self._handoffs: list[list] = []    # [payload, job rid, attempts]
         self.stats = {"rounds": 0, "launches": 0, "terminations": 0,
                       "revocations": 0, "requeues": 0, "shed": 0,
                       "tokens": 0, "cost_usd": 0.0, "replica_seconds": 0.0,
                       "peak_replicas": 0, "preemptions": 0, "resumes": 0,
                       "preempt_wait_s": 0.0,
-                      "page_ships": 0, "page_ship_bytes": 0}
+                      "page_ships": 0, "page_ship_bytes": 0,
+                      "notices": 0, "evacuations": 0,
+                      "evacuated_pages_bytes": 0, "retries": 0,
+                      "backoff_wait_s": 0.0, "wasted_decode_tokens": 0,
+                      "faults_injected": 0}
 
         # One engine up front: it validates request shapes at submit time
         # and seeds the warm pool; every autoscaled replica is
@@ -300,11 +353,15 @@ class KottaServeGateway:
             if r.state == "provisioning" and r.ready_at <= now:
                 r.state = "live"
                 r.idle_since = now
+        self._inject_faults(now)
         self._check_revocations(now)
+        evac_s = self._evacuate_noticed(now)
+        self._heartbeats(now)
+        self._drain_unhealthy(now)
         self._resume_paused(now)
         self._shed_and_order(now)
-        self._dispatch()
-        work_s = self._pump(now)
+        self._dispatch(now)
+        work_s = max(self._pump(now), evac_s)
         self._autoscale(now)
         tick = work_s if work_s > 0 else self.idle_tick_s
         self._accrue(now, tick)
@@ -361,40 +418,286 @@ class KottaServeGateway:
             per_h = self._od_price()
         return per_h / self._slots_per_replica
 
+    # -- fault injection ---------------------------------------------------------
+    def _inject_faults(self, now: float) -> None:
+        """Expire transient fault windows, then apply whatever the injected
+        schedule says fires this round. Targets index the live
+        decode-capable fleet sorted by id (mod count), so one schedule is
+        meaningful at any fleet size; events with no live target land in
+        ``injector.skipped`` rather than vanishing."""
+        for r in self._replicas:
+            if r.straggler_until is not None and now >= r.straggler_until:
+                r.latency_mult = 1.0
+                r.straggler_until = None
+            if r.hb_lost_until is not None and now >= r.hb_lost_until:
+                r.hb_lost_until = None
+        if self.faults is None:
+            return
+        for ev in self.faults.pop_due(now):
+            targets = sorted((r for r in self._replicas
+                              if r.state == "live" and r.role != "prefill"),
+                             key=lambda x: x.id)
+            if not targets:
+                self.faults.skipped.append(ev)
+                continue
+            r = targets[ev.target % len(targets)]
+            self.faults.fired.append(ev)
+            self.stats["faults_injected"] += 1
+            if ev.kind == "crash":
+                self._revoke(r, now)
+            elif ev.kind == "revoke_notice":
+                if r.notice_deadline is None:
+                    self._notice(r, now, ev.duration_s or self.notice_s)
+            elif ev.kind == "straggler":
+                r.latency_mult = ev.magnitude
+                r.straggler_until = now + ev.duration_s
+            elif ev.kind == "heartbeat_loss":
+                r.hb_lost_until = now + ev.duration_s
+
+    # -- health ------------------------------------------------------------------
+    def _heartbeats(self, now: float) -> None:
+        """Every live replica reports liveness + modelled decode-step
+        latency to the router — unless a heartbeat_loss fault is eating its
+        reports. Stragglers report their slowed latency, which is exactly
+        what the router's leave-one-out detector keys on."""
+        for r in self._replicas:
+            if r.state != "live":
+                continue
+            if r.hb_lost_until is not None and now < r.hb_lost_until:
+                continue
+            step_s = None if r.role == "prefill" \
+                else self.model.decode_step_s * r.latency_mult
+            self.router.heartbeat(r.id, now, step_s)
+
+    def _drain_unhealthy(self, now: float) -> None:
+        """Non-UP replicas take no new placements (the dispatch-target and
+        handoff filters) and give queued-but-unstarted work back to the
+        central queue; work already in a slot rides out the episode (a
+        straggler still finishes, just slowly)."""
+        for r in self._replicas:
+            if r.state != "live" or r.role == "prefill":
+                continue
+            if self.router.health(r.id, now) != HEALTH_UP and \
+                    r.engine.queued:
+                self._return_to_queue(r, r.engine.drop_queued(),
+                                      requeued=False)
+
     # -- revocation -------------------------------------------------------------
     def _check_revocations(self, now: float) -> None:
         if self.market is None:
             return
         for r in list(self._replicas):
-            if r.state == "live" and r.market == "spot" and \
-                    self.market.revoked(r.zone, self.instance_type, r.bid,
-                                        now / 3600.0):
-                self._revoke(r)
+            if r.state != "live" or r.market != "spot":
+                continue
+            if self.market.revoked(r.zone, self.instance_type, r.bid,
+                                   now / 3600.0):
+                self._revoke(r, now)
+            elif r.notice_deadline is None and \
+                    self.market.notice(r.zone, self.instance_type, r.bid,
+                                       now / 3600.0):
+                self._notice(r, now, self.market.notice_s)
 
-    def revoke_replica(self, replica_id: int) -> None:
-        """Force-revoke a live replica (tests / operator chaos drills)."""
+    def revoke_replica(self, replica_id: int,
+                       notice_s: float | None = None) -> None:
+        """Force-revoke a live replica (tests / operator chaos drills).
+
+        ``notice_s=None`` is the no-warning crash; a value runs the
+        graceful path — a revocation notice with that many seconds of
+        evacuation window before the instance disappears.
+        """
+        now = self.clock.now()
         for r in self._replicas:
             if r.id == replica_id and r.state == "live":
-                self._revoke(r)
+                if notice_s is None:
+                    self._revoke(r, now)
+                elif r.notice_deadline is None:
+                    self._notice(r, now, notice_s)
                 return
         raise KeyError(f"no live replica {replica_id}")
 
-    def _revoke(self, r: _Replica) -> None:
-        """Spot reclaim: requests restart elsewhere; none are lost.
+    def _notice(self, r: _Replica, now: float, window_s: float) -> None:
+        """A revocation notice landed: the instance dies at
+        ``now + window_s``. The replica immediately stops taking new work
+        (dispatch/handoff filters key on ``notice_deadline``); the window
+        itself is spent by :meth:`_evacuate_noticed`."""
+        r.notice_deadline = now + window_s
+        self.stats["notices"] += 1
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=f"replica-{r.id}",
+            role_name="serve-gateway", action="serve:Revoke",
+            resource=self.model_resource, decision="allow",
+            detail=f"replica {r.id} revocation notice: {window_s:.0f}s "
+                   f"window, {r.engine.live} live / "
+                   f"{len([e for e in self._paused if e.replica is r])} "
+                   "paused requests to evacuate"))
+
+    def _evacuate_noticed(self, now: float) -> float:
+        """Spend pending notice windows. With ``evacuate_on_notice`` the
+        replica is evacuated (KV ships out) the round the notice lands;
+        without it (the requeue baseline) the replica decodes until the
+        deadline, then takes the hard revoke. Returns evacuation ship
+        seconds (copies run in parallel with the round's compute)."""
+        evac_s = 0.0
+        for r in list(self._replicas):
+            if r.state != "live" or r.notice_deadline is None:
+                continue
+            if self.evacuate_on_notice:
+                evac_s = max(evac_s, self._evacuate_replica(r, now))
+            elif now >= r.notice_deadline:
+                self._revoke(r, now)
+        return evac_s
+
+    def _evacuate_replica(self, r: _Replica, now: float) -> float:
+        """Ship every request the notice window can carry; requeue the rest.
+
+        Budgeting is per request against the remaining window: estimated
+        ship time is ``page_nbytes() x ceil(pos/page_size)`` at the service
+        model's wire rate, accumulated across requests (they share the
+        instance's uplink). PAUSED requests go first — they are pure parked
+        state and as cheap to ship as anything — then live slots
+        mid-decode. Whatever does not fit restarts from the queue with
+        backoff. The exported payloads live in the gateway's handoff queue,
+        NOT on the replica, so they survive the instance's death even if
+        delivery takes a few rounds.
+        """
+        eng = r.engine
+        budget = r.notice_deadline - now
+        spent = 0.0
+        page_b = eng.page_nbytes()
+        ps = eng.page_size
+        exports: list[ShippedKV] = []
+        for entry in [e for e in self._paused if e.replica is r]:
+            est = self.model.ship_s(
+                page_b * math.ceil(entry.paused.pos / ps))
+            if spent + est <= budget:
+                exports.append(eng.export_paused(entry.paused.req.rid))
+                spent += est
+        for slot in sorted(eng._live):
+            est = self.model.ship_s(
+                page_b * math.ceil(int(eng._pos[slot]) / ps))
+            if spent + est <= budget:
+                exports.append(eng.export_pages(slot))
+                spent += est
+        for payload in exports:
+            rid = payload.req.rid
+            job = self.jobs[rid]
+            job.status = JobState.RUNNING       # in flight to a new slot
+            job.replica = None
+            job.disturbed_at = now
+            job.recovered_at = None
+            job.evacuations += 1
+            r.jobs.discard(rid)
+            self._handoffs.append([payload, rid, 0])
+            self.stats["evacuations"] += 1
+            self.stats["evacuated_pages_bytes"] += payload.nbytes
+            self.security.audit.append(AuditRecord(
+                timestamp=now, principal_id=job.tenant,
+                role_name="serve-gateway", action="serve:Evacuate",
+                resource=self.model_resource, decision="allow",
+                detail=f"job {rid} evacuated off replica {r.id} mid-decode "
+                       f"({payload.emitted} tokens emitted, "
+                       f"{payload.nbytes} KV bytes shipped)"))
+        self._paused = [e for e in self._paused if e.replica is not r]
+        # Engine-queued work never started here: straight back to the
+        # central queue, shed-exempt but with NO retry accounting — nothing
+        # was computed, so nothing was lost. Backoff exists to stop a job
+        # from hammering a failing fleet, not to punish standing in line.
+        self._return_to_queue(r, eng.drop_queued(), requeued=True)
+        # Whatever the window could not carry restarts from the prompt.
+        for req in eng.abort():
+            r.jobs.discard(req.rid)
+            self._requeue_job(self.jobs[req.rid], now,
+                              detail=f"notice window too short on replica "
+                                     f"{r.id}")
+        self.stats["revocations"] += 1
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=f"replica-{r.id}",
+            role_name="serve-gateway", action="serve:Revoke",
+            resource=self.model_resource, decision="allow",
+            detail=f"replica {r.id} retired gracefully: {len(exports)} "
+                   f"requests evacuated in {spent:.2f}s of a "
+                   f"{budget:.0f}s notice window"))
+        self._retire_replica(r, terminated=False)
+        return spent
+
+    def _revoke(self, r: _Replica, now: float) -> None:
+        """Hard loss (spot reclaim / crash): requests restart elsewhere;
+        none are lost, but every token already decoded here is wasted.
 
         ``abort`` also surrenders the replica's PAUSED requests (their
         pinned pages die with the instance), so their jobs re-enter the
-        queue alongside the live ones — exempt from shedding, like any
-        revocation casualty.
+        queue alongside the live ones — with backoff, counted against each
+        job's retry budget.
         """
-        dropped = r.engine.abort()
+        eng = r.engine
+        self.stats["wasted_decode_tokens"] += \
+            sum(l.emitted for l in eng._live.values()) + \
+            sum(p.emitted for p in eng._paused.values())
+        # Queued-but-unstarted work lost nothing: shed-exempt requeue, no
+        # retry/backoff accounting. Live + paused requests lost real decode
+        # state and go through the budgeted backoff path.
+        self._return_to_queue(r, eng.drop_queued(), requeued=True)
+        dropped = eng.abort()
         self._paused = [e for e in self._paused if e.replica is not r]
-        self._return_to_queue(r, dropped, requeued=True)
+        for req in dropped:
+            r.jobs.discard(req.rid)
+            self._requeue_job(self.jobs[req.rid], now,
+                              detail=f"replica {r.id} lost without notice")
         self.stats["revocations"] += 1
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=f"replica-{r.id}",
+            role_name="serve-gateway", action="serve:Revoke",
+            resource=self.model_resource, decision="allow",
+            detail=f"replica {r.id} revoked without notice: "
+                   f"{len(dropped)} requests requeued"))
         self._retire_replica(r, terminated=False)
+
+    def _requeue_job(self, job: ServeJob, now: float,
+                     detail: str = "") -> None:
+        """Return a disturbed job to the queue with capped exponential
+        backoff — or shed it, typed, when its retry budget is spent."""
+        job.tokens = None
+        job.started_at = None       # restarts from scratch: TTFT resets
+        job.replica = None
+        job.disturbed_at = now
+        job.recovered_at = None
+        job.retries += 1
+        if job.retries > self.retry_budget:
+            job.status = JobState.SHED
+            job.error = RetryBudgetExhausted(
+                f"job {job.rid} lost its replica {job.retries} times "
+                f"(budget {self.retry_budget}); shedding, not spinning")
+            job.finished_at = now
+            self.stats["shed"] += 1
+            self.security.audit.append(AuditRecord(
+                timestamp=now, principal_id=job.tenant,
+                role_name="serve-gateway", action="serve:Requeue",
+                resource=self.model_resource, decision="deny",
+                detail=f"job {job.rid} retry budget exhausted "
+                       f"({job.retries} > {self.retry_budget}): {detail}"))
+            return
+        backoff = min(self.backoff_cap_s,
+                      self.backoff_base_s * 2 ** (job.retries - 1))
+        job.status = JobState.QUEUED
+        job.requeued = True
+        job.not_before = now + backoff
+        self._queue.append(job)
+        self.stats["requeues"] += 1
+        self.stats["retries"] += 1
+        self.stats["backoff_wait_s"] += backoff
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=job.tenant,
+            role_name="serve-gateway", action="serve:Requeue",
+            resource=self.model_resource, decision="allow",
+            detail=f"job {job.rid} requeued (retry {job.retries}/"
+                   f"{self.retry_budget}, backoff {backoff:.1f}s): "
+                   f"{detail}"))
 
     def _return_to_queue(self, r: _Replica, reqs: list[EngineRequest], *,
                          requeued: bool) -> None:
+        """Give never-started engine-queued work back to the central queue
+        (no retry accounting: nothing was lost — see :meth:`_requeue_job`
+        for the disturbed-job path)."""
         for req in reqs:
             job = self.jobs[req.rid]
             job.status = JobState.QUEUED
@@ -417,8 +720,15 @@ class KottaServeGateway:
         """
         horizon: list[float] = []
         step_s = self.model.decode_step_s
+        now = self.clock.now()
         for r in self._replicas:
             if r.role == "prefill":
+                continue
+            if r.state == "live" and (
+                    r.notice_deadline is not None
+                    or self.router.health(r.id, now) != HEALTH_UP):
+                # Dying or unhealthy capacity argues nothing: feasibility
+                # promised against it would be broken the moment it drains.
                 continue
             if r.state == "live":
                 remaining = r.engine.remaining_tokens()
@@ -514,10 +824,14 @@ class KottaServeGateway:
     def _dispatch_targets(self) -> list[_Replica]:
         """Replicas the router may place new requests on: the prefill fleet
         when disaggregated (decode replicas only take handoffs), every
-        decode-capable live replica otherwise."""
+        decode-capable live replica otherwise — minus anything under a
+        revocation notice or not UP in the router's health view."""
         want = "prefill" if self._disaggregated else None
+        now = self.clock.now()
         return [r for r in self._replicas if r.state == "live"
-                and (r.role == "prefill") == (want == "prefill")]
+                and (r.role == "prefill") == (want == "prefill")
+                and r.notice_deadline is None
+                and self.router.health(r.id, now) == HEALTH_UP]
 
     def _target_views(self) -> list[ReplicaView]:
         """Router-side snapshots of the current dispatch targets.
@@ -531,7 +845,7 @@ class KottaServeGateway:
             eng = r.engine
             fp = frozenset()
             if self.router.mode == "affinity" and eng.prefix_cache is not None:
-                fp = eng.prefix_cache.fingerprint()
+                fp = self._fp_tracker.refresh(r.id, eng.prefix_cache)
             views.append(ReplicaView(
                 r.id, eng.open_slots, load=eng.live + eng.queued,
                 page_size=eng.page_size, fingerprint=fp))
@@ -557,7 +871,7 @@ class KottaServeGateway:
             n += 1
         return n
 
-    def _dispatch(self) -> None:
+    def _dispatch(self, now: float) -> None:
         """Route queued jobs to replicas with open slots.
 
         The queue's policy order governs WHO runs first up to affinity
@@ -574,6 +888,12 @@ class KottaServeGateway:
         flight) so finished KV payloads can't pile up faster than decode
         replicas drain them.
         """
+        # Backoff hold: requeued jobs still inside their backoff window are
+        # not dispatchable this round (they keep their queue standing —
+        # shed/order already saw them).
+        held = [j for j in self._queue if j.not_before > now]
+        if held:
+            self._queue = [j for j in self._queue if j.not_before <= now]
         targets = {r.id: r for r in self._dispatch_targets()}
         views = self._target_views()
         budget = None
@@ -616,29 +936,61 @@ class KottaServeGateway:
                     v.load += 1
             if budget is not None:
                 budget -= 1
+        if held:
+            self._queue = self.admission.order(self._queue + held, now)
 
     # -- the data plane -----------------------------------------------------------
-    def _deliver_handoffs(self, now: float) -> float:
-        """Import in-flight KV payloads into decode-capable replicas.
+    MAX_DELIVERY_ATTEMPTS = 50
 
-        FIFO over the handoff queue; a payload that no replica can take
-        this round (no free slot, or not enough free pages) stays queued
-        and retries next round. Returns the round's ship seconds (max
-        across deliveries — the copies run in parallel).
+    def _deliver_handoffs(self, now: float) -> float:
+        """Import in-flight KV payloads (prefill handoffs and evacuated
+        requests) into decode-capable replicas.
+
+        FIFO over the handoff queue; destinations are live, decode-capable,
+        not under a revocation notice, and UP in the router's health view.
+        Placement is router-guided: under affinity routing the payload's
+        prefix may already be resident somewhere (an evacuated request
+        landing back on a warm replica re-imports nothing extra but keeps
+        sharing), falling back to least-loaded. A payload that no replica
+        can take this round (no free slot, or not enough free pages) stays
+        queued and retries next round — up to ``MAX_DELIVERY_ATTEMPTS``,
+        after which the copy is abandoned and the job restarts from the
+        prompt via the requeue path (a payload must never strand a job
+        forever). Returns the round's ship seconds (max across deliveries —
+        the copies run in parallel).
         """
         if not self._handoffs:
             return 0.0
         ship_s = 0.0
         dests = [r for r in self._replicas
-                 if r.state == "live" and r.role != "prefill"]
-        still: list[tuple[ShippedKV, int]] = []
-        for payload, rid in self._handoffs:
+                 if r.state == "live" and r.role != "prefill"
+                 and r.notice_deadline is None
+                 and self.router.health(r.id, now) == HEALTH_UP]
+        still: list[list] = []
+        for item in self._handoffs:
+            payload, rid, attempts = item
             job = self.jobs[rid]
             placed = False
             # Least-loaded decode replica first: handoff placement balances
             # the decode fleet the way least-loaded dispatch would.
-            for r in sorted(dests, key=lambda x: (x.engine.live
-                                                  + x.engine.queued, x.id)):
+            order = sorted(dests, key=lambda x: (x.engine.live
+                                                 + x.engine.queued, x.id))
+            if self.router.mode == "affinity" and len(order) > 1:
+                views = [ReplicaView(
+                             x.id, x.engine.open_slots,
+                             load=x.engine.live + x.engine.queued,
+                             page_size=x.engine.page_size,
+                             fingerprint=self._fp_tracker.refresh(
+                                 x.id, x.engine.prefix_cache))
+                         for x in order if x.engine.open_slots > 0
+                         and x.engine.prefix_cache is not None]
+                decision = self.router.route(payload.req.prompt,
+                                             payload.req.namespace, views)
+                if decision is not None:
+                    # Stable sort: the router's pick first, the rest keep
+                    # least-loaded order as fallbacks.
+                    order.sort(key=lambda x: x.id != decision.replica_id)
+            for r in order:
                 if not r.engine.free_slots:
                     continue
                 try:
@@ -646,6 +998,7 @@ class KottaServeGateway:
                 except RuntimeError:
                     continue            # out of pages here: try the next
                 job.replica = r.id
+                job.status = JobState.RUNNING
                 r.jobs.add(rid)
                 r.idle_since = None
                 if job.started_at is None:
@@ -656,7 +1009,13 @@ class KottaServeGateway:
                 placed = True
                 break
             if not placed:
-                still.append((payload, rid))
+                item[2] = attempts + 1
+                if item[2] >= self.MAX_DELIVERY_ATTEMPTS:
+                    self._requeue_job(job, now,
+                                      detail="KV payload undeliverable "
+                                             f"after {item[2]} rounds")
+                else:
+                    still.append(item)
         self._handoffs = still
         return ship_s
 
@@ -689,7 +1048,7 @@ class KottaServeGateway:
                 for slot in sorted(eng._live):
                     rid = eng._live[slot].req.rid
                     payload = eng.export_pages(slot)
-                    self._handoffs.append((payload, rid))
+                    self._handoffs.append([payload, rid, 0])
                     self.jobs[rid].replica = None     # in flight
                     r.jobs.discard(rid)
                     self.stats["page_ships"] += 1
@@ -700,13 +1059,22 @@ class KottaServeGateway:
             elif eng.live:
                 for live in eng._live.values():
                     job = self.jobs.get(live.req.rid)
-                    if job is not None and job.started_at is None:
+                    if job is None:
+                        continue
+                    if job.started_at is None:
                         # First decode-slot occupancy: the TTFT clock stops
                         # here (modelled prefill is charged identically
                         # either way).
                         job.started_at = now
+                    if job.disturbed_at is not None \
+                            and job.recovered_at is None:
+                        # First decode occupancy AFTER a disturbance: the
+                        # recovered-TTFT clock (evacuation vs requeue) stops
+                        # here, whichever path brought the job back.
+                        job.recovered_at = now
                 finished = eng.decode_step()
-                work += eng.decode_chunk * self.model.decode_step_s
+                work += eng.decode_chunk * self.model.decode_step_s \
+                    * r.latency_mult
                 for req, toks in finished:
                     job = self.jobs[req.rid]
                     job.status = JobState.DONE
@@ -771,6 +1139,11 @@ class KottaServeGateway:
         r.state = "retired"
         self._replicas.remove(r)
         self._standby.append(r.engine)
+        # Replica ids never recur: stale health / fingerprint mirrors for a
+        # retired id would only leak (and a parked engine's cache keeps
+        # mutating if relaunched, so the mirror must restart anyway).
+        self.router.forget(r.id)
+        self._fp_tracker.forget(r.id)
         if terminated:
             self.stats["terminations"] += 1
 
@@ -815,6 +1188,7 @@ class KottaServeGateway:
         # Per-replica observability: the routing tier's decisions must be
         # auditable from the outside — who got the work, how full each
         # replica is, and whether affinity is actually landing cache hits.
+        now = self.clock.now()
         per_replica = []
         for r in sorted(self._replicas, key=lambda x: x.id):
             if r.state == "retired":
@@ -827,7 +1201,21 @@ class KottaServeGateway:
                 "occupancy": eng.live / eng.max_slots,
                 "prefix_hit_rate": eng.prefix_hit_rate,
                 "dispatched": r.dispatched,
+                "health": self.router.health(r.id, now),
+                "noticed": r.notice_deadline is not None,
             })
+        health_counts = {"up": 0, "degraded": 0, "quarantined": 0}
+        for row in per_replica:
+            if row["state"] == "live":
+                health_counts[row["health"]] += 1
+        # Recovered TTFT: disturbance (notice/crash hit the job) to the
+        # first decode-slot occupancy afterwards — the figure of merit the
+        # fault_recovery bench compares across evacuation and requeue.
+        disturbed = [j for j in self.jobs.values()
+                     if j.disturbed_at is not None]
+        rec = sorted(j.recovered_at - j.disturbed_at for j in disturbed
+                     if j.recovered_at is not None)
+        rpct = _pct(rec)
         ships = self.stats["page_ships"]
         return {
             "jobs": len(self.jobs), "completed": len(done),
@@ -853,6 +1241,19 @@ class KottaServeGateway:
             "preempt_wait_s": self.stats["preempt_wait_s"],
             "revocations": self.stats["revocations"],
             "requeues": self.stats["requeues"],
+            "notices": self.stats["notices"],
+            "evacuations": self.stats["evacuations"],
+            "evacuated_pages_bytes": self.stats["evacuated_pages_bytes"],
+            "retries": self.stats["retries"],
+            "backoff_wait_s": self.stats["backoff_wait_s"],
+            "wasted_decode_tokens": self.stats["wasted_decode_tokens"],
+            "faults_injected": self.stats["faults_injected"],
+            "disturbed_jobs": len(disturbed),
+            "recovered_jobs": len(rec),
+            "recovered_ttft_mean_s": (sum(rec) / len(rec)) if rec else 0.0,
+            "recovered_ttft_p99_s": rpct(0.99),
+            "replica_health": health_counts,
+            "fingerprint_tracker": dict(self._fp_tracker.stats),
             "launches": self.stats["launches"],
             "terminations": self.stats["terminations"],
             "routing_mode": self.router.mode,

@@ -39,6 +39,8 @@ namespace-scoped radix tree.
 """
 from __future__ import annotations
 
+from collections import deque
+
 import numpy as np
 
 _FP_SALT = "kotta-prefix-fp"
@@ -115,12 +117,30 @@ class PrefixCache:
     it (and the subtree keyed under it) from the index.
     """
 
+    # Fingerprint-delta journal depth: one entry per full-entry add/remove.
+    # A consumer further behind than this takes a fresh snapshot (the
+    # journal can't replay what it no longer holds).
+    JOURNAL_DEPTH = 8192
+
     def __init__(self, page_size: int):
         self.page_size = page_size
         self._full = {}      # (parent_page|-1, tokens) -> page
         self._partial = {}   # parent_page|-1 -> list[(tokens, page)]
         self._owned = {}     # page -> ("full", key) | ("partial", parent, toks)
         self._kids = {}      # parent_page -> list of full keys under it
+        # Incremental fingerprint: chain hash per owned full entry, plus an
+        # epoch-tagged add/remove journal so routers can mirror the
+        # fingerprint with deltas instead of a full snapshot per round.
+        # Every mutation bumps ``epoch`` by exactly one and appends exactly
+        # one journal entry, so the journal always covers the contiguous
+        # epoch range (epoch - len(journal), epoch].
+        self._chain = {}     # page -> chain hash (full entries only)
+        self.epoch = 0
+        self._journal: deque = deque(maxlen=self.JOURNAL_DEPTH)
+
+    def _record(self, sign: int, h: int) -> None:
+        self.epoch += 1
+        self._journal.append((self.epoch, sign, h))
 
     @staticmethod
     def _root(namespace):
@@ -171,15 +191,20 @@ class PrefixCache:
         """
         ps = self.page_size
         parent = self._root(namespace)
+        parent_hash = hash((_FP_SALT, namespace))
         n_full = len(prompt) // ps
         for i in range(n_full):
-            key = (parent, tuple(prompt[i * ps:(i + 1) * ps]))
+            tup = tuple(prompt[i * ps:(i + 1) * ps])
+            key = (parent, tup)
             page = self._full.get(key)
             if page is None:
                 page = pages[i]
                 self._full[key] = page
                 self._owned[page] = ("full", key)
                 self._kids.setdefault(parent, []).append(key)
+                self._chain[page] = hash((parent_hash, tup))
+                self._record(+1, self._chain[page])
+            parent_hash = self._chain[page]
             parent = page
         rem = tuple(prompt[n_full * ps:])
         if rem and n_full < len(pages):
@@ -195,6 +220,9 @@ class PrefixCache:
         if owned is not None:
             if owned[0] == "full":
                 self._full.pop(owned[1], None)
+                ch = self._chain.pop(page, None)
+                if ch is not None:
+                    self._record(-1, ch)
                 # Also unlink from the parent's child list: namespace roots
                 # are never scrubbed, so a stale key left here would leak
                 # one entry per eviction for the gateway's lifetime.
@@ -220,6 +248,9 @@ class PrefixCache:
             child = self._full.pop(key, None)
             if child is not None and self._owned.get(child) == ("full", key):
                 del self._owned[child]
+                ch = self._chain.pop(child, None)
+                if ch is not None:
+                    self._record(-1, ch)
                 self._scrub(child)
         for toks, child in self._partial.pop(page, ()):
             if self._owned.get(child) == ("partial", page, toks):
@@ -265,3 +296,37 @@ class PrefixCache:
                     fp.add(ch)
                     stack.append((page, ch))
         return frozenset(fp)
+
+    def fingerprint_delta(self, since_epoch: int
+                          ) -> tuple[int, frozenset, frozenset] | None:
+        """Fingerprint changes (all namespaces) since ``since_epoch``.
+
+        Returns ``(epoch, added, removed)`` where replaying
+        ``fp | added - removed`` onto the snapshot taken at ``since_epoch``
+        reproduces :meth:`fingerprint` at the current epoch — the router's
+        O(churn) alternative to a full frozenset snapshot every dispatch
+        round. Returns ``None`` when ``since_epoch`` predates the journal
+        (the consumer fell more than ``JOURNAL_DEPTH`` mutations behind, or
+        claims an epoch from another cache's future): take a fresh snapshot.
+        Add-then-remove pairs inside the window collapse to nothing, so the
+        delta stays small however hot the churn.
+        """
+        if since_epoch > self.epoch or \
+                since_epoch < self.epoch - len(self._journal):
+            return None
+        added: set = set()
+        removed: set = set()
+        for ep, sign, h in self._journal:
+            if ep <= since_epoch:
+                continue
+            if sign > 0:
+                if h in removed:
+                    removed.discard(h)
+                else:
+                    added.add(h)
+            else:
+                if h in added:
+                    added.discard(h)
+                else:
+                    removed.add(h)
+        return self.epoch, frozenset(added), frozenset(removed)

@@ -14,12 +14,31 @@ tenant's affinity can't starve one replica while the rest idle.
 The router never sees token content — only hashes — and a hash collision
 can at worst misroute a request (a perf wobble): page aliasing is decided
 by the replica's own namespace-scoped radix walk at admission, never here.
+
+The router is also the fleet's **health authority**: replicas report a
+heartbeat plus their modelled per-decode-step latency every gateway round
+(virtual-clock time), and :meth:`FleetRouter.health` classifies each as
+
+- ``up`` — heartbeating, latency in line with the fleet;
+- ``degraded`` — heartbeating but a straggler: its latency EMA exceeds
+  ``straggler_factor`` × the median of the *other* replicas' EMAs
+  (leave-one-out, so one straggler cannot drag the baseline up with it);
+- ``quarantined`` — no heartbeat for ``heartbeat_timeout_s``.
+
+The gateway stops placing new work (dispatch, handoffs, evacuations) on
+anything not ``up`` and drains queued-but-unstarted work off it; states
+recover on their own when heartbeats return / latency normalizes.
 """
 from __future__ import annotations
 
+import statistics
 from dataclasses import dataclass, field
 
 from .paging import chain_hashes
+
+HEALTH_UP = "up"
+HEALTH_DEGRADED = "degraded"
+HEALTH_QUARANTINED = "quarantined"
 
 
 @dataclass
@@ -66,19 +85,73 @@ class FleetRouter:
     MODES = ("affinity", "least_loaded", "blind")
 
     def __init__(self, mode: str = "affinity", imbalance_cap: int = 4,
-                 window: int = 8):
+                 window: int = 8, *, heartbeat_timeout_s: float = 10.0,
+                 straggler_factor: float = 3.0, health_alpha: float = 0.5):
         if mode not in self.MODES:
             raise ValueError(f"routing mode must be one of {self.MODES}, got {mode!r}")
         if imbalance_cap < 1:
             raise ValueError(f"imbalance_cap must be >= 1, got {imbalance_cap}")
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
+        if heartbeat_timeout_s <= 0:
+            raise ValueError(f"heartbeat_timeout_s must be > 0, got "
+                             f"{heartbeat_timeout_s}")
+        if straggler_factor <= 1.0:
+            raise ValueError(f"straggler_factor must be > 1, got "
+                             f"{straggler_factor}")
         self.mode = mode
         self.imbalance_cap = imbalance_cap
         self.window = window
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.straggler_factor = straggler_factor
+        self.health_alpha = health_alpha
         self._rr = 0
+        # replica_id -> [last_heartbeat_s, decode-step latency EMA | None]
+        self._health: dict[int, list] = {}
         self.stats = {"affinity": 0, "least_loaded": 0, "blind": 0,
                       "imbalance_cap": 0, "matched_tokens": 0}
+
+    # -- health --------------------------------------------------------------
+    def heartbeat(self, replica_id: int, now: float,
+                  decode_step_s: float | None = None) -> None:
+        """One replica's liveness report for this round. ``decode_step_s``
+        is its observed per-decode-step latency (straggler signal); EMA'd
+        with ``health_alpha`` so a cleared straggler recovers within a few
+        rounds instead of instantly (or never)."""
+        ent = self._health.setdefault(replica_id, [now, None])
+        ent[0] = now
+        if decode_step_s is not None:
+            a = self.health_alpha
+            ent[1] = decode_step_s if ent[1] is None \
+                else (1 - a) * ent[1] + a * decode_step_s
+
+    def forget(self, replica_id: int) -> None:
+        """Drop a retired replica's health record (replica ids are never
+        reused, so a stale record would only leak)."""
+        self._health.pop(replica_id, None)
+
+    def health(self, replica_id: int, now: float) -> str:
+        """``up`` / ``degraded`` / ``quarantined``. A replica that never
+        heartbeat is ``up``: fresh launches owe nothing yet."""
+        ent = self._health.get(replica_id)
+        if ent is None:
+            return HEALTH_UP
+        if now - ent[0] > self.heartbeat_timeout_s:
+            return HEALTH_QUARANTINED
+        if ent[1] is not None:
+            # Leave-one-out: compare against the median of the OTHER
+            # replicas' latency EMAs, so a lone straggler in a two-replica
+            # fleet is still 'slower than everyone else'.
+            others = [e[1] for rid, e in self._health.items()
+                      if rid != replica_id and e[1] is not None
+                      and now - e[0] <= self.heartbeat_timeout_s]
+            if others and ent[1] > self.straggler_factor \
+                    * statistics.median(others):
+                return HEALTH_DEGRADED
+        return HEALTH_UP
+
+    def healths(self, now: float) -> dict[int, str]:
+        return {rid: self.health(rid, now) for rid in self._health}
 
     # -- scoring -------------------------------------------------------------
     @staticmethod
@@ -140,3 +213,44 @@ class FleetRouter:
         self.stats["affinity"] += 1
         self.stats["matched_tokens"] += best_tokens
         return RouteDecision(best.replica_id, best_tokens, "affinity")
+
+
+class FingerprintTracker:
+    """Per-replica fingerprint mirrors fed by PrefixCache epoch deltas.
+
+    ``PrefixCache.fingerprint()`` walks the whole radix index — fine once,
+    wasteful every dispatch round when almost nothing changed. The tracker
+    keeps one mirrored hash set per replica and advances it with
+    :meth:`~repro.serve.paging.PrefixCache.fingerprint_delta` (O(churn)
+    since last round); it falls back to a full snapshot only on first
+    contact or when the cache's journal has outrun the mirror. The mirror
+    is exact, not approximate: delta-fed and snapshot-fed routers make
+    identical decisions (tested), because replaying the journal reproduces
+    the walk set-for-set.
+    """
+
+    def __init__(self):
+        self._state: dict[int, tuple[int, set]] = {}   # id -> (epoch, fp)
+        self.stats = {"snapshots": 0, "deltas": 0, "delta_hashes": 0}
+
+    def refresh(self, replica_id: int, cache) -> frozenset:
+        """Current fingerprint of ``cache``, advanced incrementally."""
+        known = self._state.get(replica_id)
+        if known is not None:
+            epoch, fp = known
+            delta = cache.fingerprint_delta(epoch)
+            if delta is not None:
+                new_epoch, added, removed = delta
+                fp |= added
+                fp -= removed
+                self._state[replica_id] = (new_epoch, fp)
+                self.stats["deltas"] += 1
+                self.stats["delta_hashes"] += len(added) + len(removed)
+                return frozenset(fp)
+        fp = set(cache.fingerprint())
+        self._state[replica_id] = (cache.epoch, fp)
+        self.stats["snapshots"] += 1
+        return frozenset(fp)
+
+    def forget(self, replica_id: int) -> None:
+        self._state.pop(replica_id, None)

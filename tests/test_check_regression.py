@@ -156,6 +156,49 @@ def test_fleet_ship_bytes_inflation_fails(tmp_path):
     assert "page_ship_bytes_per_request" in res.stdout
 
 
+def test_fault_recovery_ttft_advantage_collapse_fails(tmp_path):
+    """Losing the evacuation win (evacuate-mode recovered TTFT inflating to
+    requeue's) fails the gate — the ratio is recomputed from the raw
+    per-mode fields, so editing only the stored headline is not enough."""
+    def collapse(gateway):
+        f = gateway["fault_recovery"]
+        f["evacuate"]["recovered_ttft_mean_s"] = \
+            f["requeue"]["recovered_ttft_mean_s"]
+    res = _run(_candidates(tmp_path, gateway_edit=collapse))
+    assert res.returncode != 0
+    assert "fault_recovery.recovered_ttft_ratio_requeue_over_evacuate" \
+        in res.stdout
+
+
+def test_fault_recovery_goodput_collapse_fails(tmp_path):
+    def collapse(gateway):
+        f = gateway["fault_recovery"]
+        f["evacuate"]["tok_per_sim_s"] = 0.8 * f["requeue"]["tok_per_sim_s"]
+    res = _run(_candidates(tmp_path, gateway_edit=collapse))
+    assert res.returncode != 0
+    assert "fault_recovery.goodput_ratio_evacuate_over_requeue" in res.stdout
+
+
+def test_fault_recovery_token_divergence_fails(tmp_path):
+    """Token identity across recovery modes gates at ZERO tolerance — any
+    divergence is a correctness bug, not a perf wobble."""
+    def diverge(gateway):
+        gateway["fault_recovery"]["token_identity"] = False
+    res = _run(_candidates(tmp_path, gateway_edit=diverge))
+    assert res.returncode != 0
+    assert "fault_recovery.token_identity" in res.stdout
+
+
+def test_fault_recovery_no_evacuations_fails(tmp_path):
+    """Zero evacuations means the graceful path never ran in evacuate mode
+    (a silently-dead notice window) — gated exactly."""
+    def zero(gateway):
+        gateway["fault_recovery"]["evacuate"]["evacuations"] = 0
+    res = _run(_candidates(tmp_path, gateway_edit=zero))
+    assert res.returncode != 0
+    assert "fault_recovery.evacuate.evacuations" in res.stdout
+
+
 def test_within_tolerance_noise_passes(tmp_path):
     """Small same-direction noise (5%) stays green — the gate is a
     regression check, not an exact-match check."""

@@ -1,0 +1,549 @@
+"""Fault injection + graceful replica failure: the market's revocation
+notice, mid-decode KV export/import (plain + speculative, f32 + int8),
+import rejection paths, notice-window evacuation through the gateway
+(token identity vs an uninterrupted run), requeue fallback with capped
+backoff, typed retry-budget exhaustion, router health states
+(UP/DEGRADED/QUARANTINED), the FaultInjector schedule/seeded-random API,
+and seeded chaos sweeps that must end with every job DONE or typed-SHED
+and clean page refcounts."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.clock import VirtualClock
+from repro.core.elastic import ProvisioningModel, ScalingPolicy
+from repro.core.market import SpotMarket
+from repro.core.security import PolicyEngine, provision_tenant
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import (HEALTH_DEGRADED, HEALTH_QUARANTINED, HEALTH_UP,
+                         ContinuousBatchingEngine, EngineRequest, FaultEvent,
+                         FaultInjector, FleetRouter, JobState,
+                         KottaServeGateway, RetryBudgetExhausted, ServeEngine,
+                         ServiceModel)
+
+MAX_LEN = 48
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced_config("yi-6b").replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gold_engine(model):
+    cfg, params = model
+    return ServeEngine(cfg, params, max_len=MAX_LEN)
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_chunk", 4)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _factory(model, **kw):
+    return lambda: _engine(model, **kw)
+
+
+def _security(*tenants):
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = {t: provision_tenant(sec, t, f"pw-{t}",
+                                  data_zones=("public", t))
+              for t in tenants}
+    return sec, tokens
+
+
+def _gateway(model, sec, *, scaling=None, market=None, engine_kw=None, **kw):
+    kw.setdefault("provisioning",
+                  ProvisioningModel(base_delay_s=5.0, jitter_s=0.0,
+                                    volatility_prob=0.0))
+    kw.setdefault("service_model", ServiceModel(decode_step_s=0.05))
+    return KottaServeGateway(_factory(model, **(engine_kw or {})), sec,
+                             scaling=scaling or ScalingPolicy.none(
+                                 1, market="on_demand"),
+                             market=market, **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.RandomState(seed).randint(
+        0, cfg.vocab_size, size=n).tolist()
+
+
+def _mid_decode_replica(gw, rounds=400):
+    """Step until some replica has a slot genuinely mid-decode; return it."""
+    for _ in range(rounds):
+        for r in gw.replicas():
+            if any(0 < l.emitted < l.req.max_new
+                   for l in r.engine._live.values()):
+                return r
+        gw.step()
+    pytest.fail("never reached mid-decode state")
+
+
+def _finish(eng):
+    done = {}
+    while eng.live:
+        for req, toks in eng.decode_step():
+            done[req.rid] = toks
+    return done
+
+
+def _audit(sec, action, decision=None):
+    recs = [a for a in sec.audit.records() if a.action == action]
+    if decision is not None:
+        recs = [a for a in recs if a.decision == decision]
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# Market: the revocation notice precedes the revocation
+# ---------------------------------------------------------------------------
+
+def test_market_notice_fires_exactly_one_window_ahead():
+    m = SpotMarket(seed=0)
+    z, it = m.zones[0], "m4.xlarge"
+    trace = [m.price(z, it, h) for h in range(12)]
+    bid = (min(trace) + max(trace)) / 2.0       # guaranteed crossings
+    ahead = m.notice_s / 3600.0
+    grid = [i * 0.01 for i in range(1200)]      # 12h at 36s resolution
+    for t in grid:
+        assert m.notice(z, it, bid, t) == m.revoked(z, it, bid, t + ahead)
+    # The warning genuinely precedes the loss somewhere on the trace:
+    # notice true while the instance is still alive.
+    assert any(m.notice(z, it, bid, t) and not m.revoked(z, it, bid, t)
+               for t in grid)
+
+
+# ---------------------------------------------------------------------------
+# Engine: mid-decode export -> import token identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8"])
+@pytest.mark.parametrize("spec", [False, True])
+def test_mid_decode_export_import_token_identity(model, kv_dtype, spec):
+    """A slot exported mid-decode and imported elsewhere finishes with the
+    exact tokens of an uninterrupted run — the evacuation correctness core,
+    across pool layouts and with the speculative controller riding along."""
+    cfg, _ = model
+    kw = dict(kv_cache_dtype=kv_dtype)
+    if spec:
+        kw.update(enable_spec_decode=True, spec_tokens=4)
+        prompts = [([5, 6, 7, 8] * 5)[:18], ([3, 4] * 8)[:10]]
+    else:
+        prompts = [_prompt(cfg, 13, seed=40), _prompt(cfg, 9, seed=41)]
+    max_new = 14
+    gold = _engine(model, **kw).generate(prompts, max_new=max_new).tokens
+
+    src = _engine(model, **kw)
+    for i, p in enumerate(prompts):
+        src.enqueue(EngineRequest(i, p, max_new))
+    assert src.admit() == 2
+    for _ in range(20):                         # reach genuine mid-decode
+        src.decode_step()
+        if all(0 < l.emitted < max_new for l in src._live.values()):
+            break
+    else:
+        pytest.fail("never mid-decode on both slots")
+
+    payloads = {src._live[s].req.rid: src.export_pages(s)
+                for s in sorted(src._live)}
+    assert src.live == 0
+    src._debug_check_refcounts()
+
+    dst = _engine(model, **kw)
+    for i in range(len(prompts)):
+        pl = payloads[i]
+        assert 0 < pl.emitted < max_new         # really mid-stream
+        assert pl.pos == len(prompts[i]) + pl.emitted
+        if spec:
+            assert pl.kslot >= 1                # tuned window ships along
+        dst.import_pages(pl)
+        assert pl.consumed
+    dst._debug_check_refcounts()
+    done = _finish(dst)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(gold[i], np.asarray(done[i], np.int32))
+    if spec:
+        assert dst.stats["spec_steps"] > 0
+
+
+def test_export_paused_ships_parked_request(model):
+    """A PAUSED (preempted) request is exportable too: its pinned pages,
+    cursor and drafting history ship, and it finishes identically on the
+    destination. Unknown rids fail loudly."""
+    cfg, _ = model
+    prompt = _prompt(cfg, 11, seed=50)
+    max_new = 12
+    gold = _engine(model).generate([prompt], max_new=max_new).tokens[0]
+
+    src = _engine(model)
+    src.enqueue(EngineRequest(7, prompt, max_new))
+    src.admit()
+    src.decode_step()                           # a few tokens in
+    slot = next(iter(src._live))
+    emitted = src._live[slot].emitted
+    assert 0 < emitted < max_new
+    src.preempt(slot)
+    with pytest.raises(KeyError, match="not paused"):
+        src.export_paused(999)
+    payload = src.export_paused(7)
+    assert payload.emitted == emitted
+    assert src.live == 0 and not src._paused
+    src._debug_check_refcounts()                # parked pages released
+
+    dst = _engine(model)
+    dst.import_pages(payload)
+    done = _finish(dst)
+    np.testing.assert_array_equal(gold, np.asarray(done[7], np.int32))
+
+
+def test_import_rejection_paths(model):
+    """Tampered or stale payloads are rejected with typed errors before any
+    state mutates: double-import, page_size mismatch, pool leaf-set
+    mismatch, inconsistent cursor, and a destination with no free slot."""
+    cfg, _ = model
+
+    def fresh_payload(rid):
+        src = _engine(model)
+        src.enqueue(EngineRequest(rid, _prompt(cfg, 9, seed=60 + rid), 4))
+        src.admit()
+        return src.export_pages(next(iter(src._live)))
+
+    # One-shot move: a consumed payload never imports twice.
+    pl = fresh_payload(0)
+    dst = _engine(model)
+    dst.import_pages(pl)
+    with pytest.raises(ValueError, match="one-shot"):
+        _engine(model).import_pages(pl)
+
+    # page_size mismatch (tampered in flight).
+    pl = fresh_payload(1)
+    pl.page_size = 16
+    with pytest.raises(ValueError, match="page_size"):
+        _engine(model).import_pages(pl)
+
+    # Pool leaf-set mismatch: a leaf went missing.
+    pl = fresh_payload(2)
+    pl.content = {k: v for k, v in pl.content.items() if k != "v"}
+    with pytest.raises(ValueError, match="leaves"):
+        _engine(model).import_pages(pl)
+
+    # Cursor/emitted inconsistency.
+    pl = fresh_payload(3)
+    pl.pos += 1
+    with pytest.raises(ValueError, match="inconsistent"):
+        _engine(model).import_pages(pl)
+
+    # Destination with every slot occupied: transient, payload reusable.
+    pl = fresh_payload(4)
+    full = _engine(model)                       # SLOTS = 2
+    for i in range(SLOTS):
+        full.enqueue(EngineRequest(100 + i, _prompt(cfg, 9, seed=80 + i), 4))
+    full.admit()
+    with pytest.raises(RuntimeError, match="no free slot"):
+        full.import_pages(pl)
+    assert not pl.consumed                      # still deliverable elsewhere
+    ok = _engine(model)
+    ok.import_pages(pl)
+    assert ok.live == 1 and pl.consumed
+
+
+# ---------------------------------------------------------------------------
+# Gateway: notice-window evacuation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8"])
+def test_notice_window_evacuation_token_identity(model, kv_dtype):
+    """A replica served a revocation notice mid-decode evacuates its live
+    slots to the survivor; every job completes with oracle-identical greedy
+    tokens, zero retries, and the move is audited."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec,
+                  scaling=ScalingPolicy.none(2, market="on_demand"),
+                  engine_kw={"kv_cache_dtype": kv_dtype, "decode_chunk": 2})
+    prompts = [_prompt(cfg, 6, seed=90), _prompt(cfg, 9, seed=91)]
+    rids = [gw.submit(tok["alice"], p, max_new=12) for p in prompts]
+
+    victim = _mid_decode_replica(gw)
+    moved = [l.req.rid for l in victim.engine._live.values()]
+    gw.revoke_replica(victim.id, notice_s=60.0)     # operator chaos drill
+    gw.drain()
+
+    gold = _engine(model, kv_cache_dtype=kv_dtype)
+    for r, p in zip(rids, prompts):
+        np.testing.assert_array_equal(
+            gold.generate([p], max_new=12).tokens[0],
+            np.asarray(gw.result(r), np.int32))
+    m = gw.metrics()
+    assert m["notices"] == 1 and m["revocations"] == 1
+    assert m["evacuations"] >= 1 and m["evacuated_pages_bytes"] > 0
+    assert m["retries"] == 0                    # nobody paid backoff
+    assert m["completed"] == 2 and m["shed"] == 0
+    assert m["disturbed_jobs"] >= 1 and m["recovered_jobs"] >= 1
+    for rid in moved:
+        job = gw.jobs[rid]
+        assert job.evacuations >= 1
+        assert job.disturbed_at is not None
+        assert job.recovered_at is not None
+        assert job.recovered_at >= job.disturbed_at
+    assert len(_audit(sec, "serve:Evacuate", "allow")) == m["evacuations"]
+    assert any("notice" in a.detail
+               for a in _audit(sec, "serve:Revoke", "allow"))
+
+
+def test_notice_too_short_falls_back_to_requeue(model, gold_engine):
+    """When the notice window cannot fit even one slot's KV shipment the
+    gateway falls back to requeue + capped backoff: slower, still lossless,
+    still token-identical."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec,
+                  scaling=ScalingPolicy.none(2, market="on_demand"),
+                  # 1 B/s shipping: no export can beat any finite window.
+                  service_model=ServiceModel(decode_step_s=0.05,
+                                             kv_ship_bytes_per_s=1.0),
+                  backoff_base_s=2.0,
+                  engine_kw={"decode_chunk": 2})
+    prompt = _prompt(cfg, 8, seed=95)
+    rid = gw.submit(tok["alice"], prompt, max_new=12)
+
+    victim = _mid_decode_replica(gw)
+    gw.revoke_replica(victim.id, notice_s=1.0)
+    gw.drain()
+
+    np.testing.assert_array_equal(
+        gold_engine.generate([prompt], max_new=12).tokens[0],
+        np.asarray(gw.result(rid), np.int32))
+    m = gw.metrics()
+    job = gw.jobs[rid]
+    assert m["evacuations"] == 0 and m["notices"] == 1
+    assert m["retries"] >= 1 and m["backoff_wait_s"] > 0
+    assert job.retries == 1
+    # The backoff genuinely held the job before its second service.
+    assert job.recovered_at - job.disturbed_at >= 2.0
+    assert len(_audit(sec, "serve:Requeue", "allow")) >= 1
+
+
+def test_retry_budget_exhaustion_sheds_typed(model):
+    """A job that keeps losing its replica is shed with a typed
+    RetryBudgetExhausted after the budget, never requeued hot."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    gw = _gateway(model, sec, retry_budget=1, backoff_base_s=0.5)
+    rid = gw.submit(tok["alice"], _prompt(cfg, 8, seed=97), max_new=24)
+
+    for _ in range(2):                          # budget 1 -> second loss kills
+        victim = _mid_decode_replica(gw)
+        gw.revoke_replica(victim.id)            # crash, no notice
+    gw.drain()
+
+    job = gw.jobs[rid]
+    assert job.status is JobState.SHED
+    assert isinstance(job.error, RetryBudgetExhausted)
+    with pytest.raises(RetryBudgetExhausted, match="budget"):
+        gw.result(rid)
+    m = gw.metrics()
+    assert m["shed"] == 1 and m["completed"] == 0
+    assert m["wasted_decode_tokens"] > 0
+    assert len(_audit(sec, "serve:Requeue", "deny")) == 1
+
+
+# ---------------------------------------------------------------------------
+# Router health states
+# ---------------------------------------------------------------------------
+
+def test_router_health_transitions():
+    rt = FleetRouter("least_loaded", heartbeat_timeout_s=5.0,
+                     straggler_factor=3.0, health_alpha=1.0)
+    for rid in (1, 2, 3):
+        rt.heartbeat(rid, 0.0, 0.05)
+    assert rt.healths(0.0) == {1: HEALTH_UP, 2: HEALTH_UP, 3: HEALTH_UP}
+    # Straggler: latency EMA vs leave-one-out median of the others.
+    rt.heartbeat(1, 1.0, 0.5)
+    rt.heartbeat(2, 1.0, 0.05)
+    rt.heartbeat(3, 1.0, 0.05)
+    assert rt.health(1, 1.0) == HEALTH_DEGRADED
+    assert rt.health(2, 1.0) == HEALTH_UP       # not dragged up by 1's EMA
+    # Heartbeat silence past the timeout quarantines.
+    assert rt.health(2, 7.0) == HEALTH_QUARANTINED
+    # Never-heartbeat replicas owe nothing yet.
+    assert rt.health(99, 7.0) == HEALTH_UP
+    # Recovery: a normal report restores UP (alpha=1 -> instant here).
+    rt.heartbeat(1, 2.0, 0.05)
+    assert rt.health(1, 2.0) == HEALTH_UP
+    rt.forget(1)
+    assert 1 not in rt.healths(2.0)
+
+
+def test_router_straggler_detection_in_two_replica_fleet():
+    """Leave-one-out keeps working at fleet size two: the slow one is
+    degraded, the fast one stays up."""
+    rt = FleetRouter("affinity", health_alpha=1.0, straggler_factor=3.0)
+    rt.heartbeat(1, 0.0, 0.5)
+    rt.heartbeat(2, 0.0, 0.05)
+    assert rt.health(1, 0.0) == HEALTH_DEGRADED
+    assert rt.health(2, 0.0) == HEALTH_UP
+
+
+def test_router_health_param_validation():
+    with pytest.raises(ValueError, match="heartbeat_timeout_s"):
+        FleetRouter(heartbeat_timeout_s=0.0)
+    with pytest.raises(ValueError, match="straggler_factor"):
+        FleetRouter(straggler_factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Gateway x injected straggler / heartbeat loss
+# ---------------------------------------------------------------------------
+
+def test_straggler_fault_degrades_drains_and_recovers(model):
+    cfg, _ = model
+    sec, tok = _security("alice")
+    inj = FaultInjector(schedule=(
+        FaultEvent(at_s=6.0, kind="straggler", target=0,
+                   duration_s=20.0, magnitude=10.0),))
+    gw = _gateway(model, sec,
+                  scaling=ScalingPolicy.none(2, market="on_demand"),
+                  routing=FleetRouter("affinity", health_alpha=1.0),
+                  fault_injector=inj)
+    while not inj.fired:
+        gw.step()
+    gw.step()                                   # one post-fault heartbeat
+    now = gw.clock.now()
+    lame = [r for r in gw.replicas() if r.latency_mult > 1.0]
+    assert len(lame) == 1
+    assert gw.router.health(lame[0].id, now) == HEALTH_DEGRADED
+    assert gw.metrics()["replica_health"].get("degraded") == 1
+
+    # New placements avoid the straggler entirely.
+    rids = [gw.submit(tok["alice"], _prompt(cfg, 6, seed=98 + i), max_new=8)
+            for i in range(2)]
+    gw.drain()
+    assert all(gw.jobs[r].status is JobState.DONE for r in rids)
+    assert all(gw.jobs[r].replica != lame[0].id for r in rids)
+
+    # The fault expires; latency normalizes; health returns to UP.
+    while gw.clock.now() < 30.0:
+        gw.step()
+    assert gw.router.health(lame[0].id, gw.clock.now()) == HEALTH_UP
+    assert gw.metrics()["faults_injected"] == 1
+
+
+def test_heartbeat_loss_quarantines_until_heartbeats_return(model):
+    cfg, _ = model
+    sec, tok = _security("alice")
+    inj = FaultInjector(schedule=(
+        FaultEvent(at_s=6.0, kind="heartbeat_loss", target=0,
+                   duration_s=8.0),))
+    gw = _gateway(model, sec,
+                  scaling=ScalingPolicy.none(2, market="on_demand"),
+                  routing=FleetRouter("affinity", heartbeat_timeout_s=2.0),
+                  fault_injector=inj)
+    while gw.clock.now() < 9.5:                 # silence > timeout by now
+        gw.step()
+    now = gw.clock.now()
+    lost = [r for r in gw.replicas()
+            if gw.router.health(r.id, now) == HEALTH_QUARANTINED]
+    assert len(lost) == 1
+    assert gw.metrics()["replica_health"].get("quarantined") == 1
+
+    rid = gw.submit(tok["alice"], _prompt(cfg, 6, seed=99), max_new=8)
+    gw.drain()
+    assert gw.jobs[rid].replica != lost[0].id   # placed on the healthy one
+
+    while gw.clock.now() < 16.0:                # loss window over; beats back
+        gw.step()
+    assert gw.router.health(lost[0].id, gw.clock.now()) == HEALTH_UP
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector unit
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_schedule_and_random():
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultEvent(at_s=0.0, kind="meteor")
+    inj = FaultInjector(schedule=(
+        FaultEvent(at_s=5.0, kind="crash"),
+        FaultEvent(at_s=1.0, kind="straggler", duration_s=3.0),))
+    assert inj.pending == 2
+    assert [e.kind for e in inj.pop_due(2.0)] == ["straggler"]
+    assert inj.pop_due(2.0) == []               # each event fires once
+    assert [e.kind for e in inj.pop_due(10.0)] == ["crash"]
+    assert inj.pending == 0
+
+    rates = dict(crash_rate_h=8.0, revoke_rate_h=8.0, straggler_rate_h=8.0,
+                 heartbeat_loss_rate_h=8.0)
+    a = FaultInjector.random(3, 3600.0, notice_s=0.7, **rates)
+    b = FaultInjector.random(3, 3600.0, notice_s=0.7, **rates)
+    c = FaultInjector.random(4, 3600.0, notice_s=0.7, **rates)
+    assert a.schedule == b.schedule             # seeded: same plan
+    assert a.schedule != c.schedule
+    kinds = {e.kind for e in a.schedule}
+    assert kinds == {"crash", "revoke_notice", "straggler", "heartbeat_loss"}
+    assert all(0.0 < e.at_s < 3600.0 for e in a.schedule)
+    assert all(e.at_s <= n.at_s for e, n in zip(a.schedule, a.schedule[1:]))
+    assert all(e.duration_s == 0.7 for e in a.schedule
+               if e.kind == "revoke_notice")
+    assert all(0 <= e.target < 8 for e in a.schedule)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: seeded random fault sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_random_faults_never_lose_or_corrupt_jobs(model, gold_engine,
+                                                        seed):
+    """Under a dense seeded fault storm every job ends DONE (with
+    oracle-identical tokens) or SHED with a typed retry-budget error;
+    page refcounts stay clean and no KV payload is stranded."""
+    cfg, _ = model
+    sec, tok = _security("alice")
+    horizon = 8.0
+    inj = FaultInjector.random(
+        seed, horizon, crash_rate_h=900.0, revoke_rate_h=1800.0,
+        straggler_rate_h=1800.0, heartbeat_loss_rate_h=900.0,
+        notice_s=0.6, duration_s=(0.5, 2.0), magnitude=(2.0, 6.0),
+        max_targets=4)
+    gw = _gateway(model, sec,
+                  scaling=ScalingPolicy.none(2, market="on_demand"),
+                  provisioning=ProvisioningModel(base_delay_s=0.5,
+                                                 jitter_s=0.0,
+                                                 volatility_prob=0.0),
+                  retry_budget=8, backoff_base_s=0.5,
+                  fault_injector=inj,
+                  engine_kw={"decode_chunk": 2})
+    prompts = [_prompt(cfg, 5 + (i % 5), seed=200 + i) for i in range(6)]
+    rids = [gw.submit(tok["alice"], p, max_new=10) for p in prompts]
+    gw.drain(max_rounds=50_000)
+    while gw.clock.now() < horizon + 1.0:       # let late faults land too
+        gw.step()
+    assert inj.pending == 0
+
+    for rid, p in zip(rids, prompts):
+        job = gw.jobs[rid]
+        assert job.status in (JobState.DONE, JobState.SHED)
+        if job.status is JobState.DONE:
+            np.testing.assert_array_equal(
+                gold_engine.generate([p], max_new=10).tokens[0],
+                np.asarray(job.tokens, np.int32))
+        else:
+            assert isinstance(job.error, RetryBudgetExhausted)
+    for r in gw.replicas():
+        r.engine._debug_check_refcounts()
+    assert not gw._handoffs                     # nothing stranded in flight
+    m = gw.metrics()
+    assert m["faults_injected"] == len(inj.fired)
+    assert m["completed"] + m["shed"] == len(rids)

@@ -14,9 +14,10 @@ from repro.core.elastic import ProvisioningModel, ScalingPolicy
 from repro.core.security import PolicyEngine, provision_tenant
 from repro.models import get_family
 from repro.models.params import init_params
-from repro.serve import (ContinuousBatchingEngine, EngineRequest, FleetRouter,
-                         JobState, KottaServeGateway, PrefixCache,
-                         ReplicaView, ServeEngine, ServiceModel, chain_hashes)
+from repro.serve import (ContinuousBatchingEngine, EngineRequest,
+                         FingerprintTracker, FleetRouter, JobState,
+                         KottaServeGateway, PrefixCache, ReplicaView,
+                         ServeEngine, ServiceModel, chain_hashes)
 
 MAX_LEN = 48
 SLOTS = 2
@@ -491,3 +492,85 @@ def test_disaggregated_shipped_prefix_stays_shareable(model):
                  prefill_engine_factory=_factory(model))
     with pytest.raises(ValueError, match="decode-capable"):
         _gateway(model, sec, engine_kw={"role": "prefill"})
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint deltas: epoch journal + router-side mirrors
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_delta_replays_to_exact_snapshot():
+    """The epoch journal is exact: replaying fingerprint_delta() onto any
+    snapshot reproduces fingerprint() after every mutation, and the tracker
+    only pays a full walk on first contact or journal overrun."""
+    pc = PrefixCache(16)
+    tr = FingerprintTracker()
+
+    def check():
+        assert tr.refresh(0, pc) == pc.fingerprint()
+
+    check()                                     # first contact: snapshot
+    assert tr.stats["snapshots"] == 1
+    pc.register(list(range(12)), [1, 2, 3], namespace="a")
+    check()
+    pc.register(list(range(8)), [4, 5], namespace="b")
+    check()
+    pc.evict(1)                                 # drops a's whole chain
+    check()
+    assert tr.stats["snapshots"] == 1           # all follow-ups were deltas
+    assert tr.stats["deltas"] >= 3
+
+    # No mutation since the mirror's epoch -> empty delta.
+    ep, added, removed = pc.fingerprint_delta(pc.epoch)
+    assert ep == pc.epoch and added == frozenset() == removed
+    # An epoch from the future is a protocol error -> full resync.
+    assert pc.fingerprint_delta(pc.epoch + 1) is None
+
+
+def test_fingerprint_delta_journal_overrun_falls_back():
+    """A mirror that fell more than JOURNAL_DEPTH mutations behind gets
+    None (take a snapshot) rather than a wrong partial delta."""
+    from collections import deque
+    pc = PrefixCache(16)
+    tr = FingerprintTracker()
+    assert tr.refresh(0, pc) == pc.fingerprint()
+    pc._journal = deque(maxlen=2)               # tiny journal for the test
+    for i in range(3):                          # 3 mutations > depth 2
+        pc.register(list(range(100 + 20 * i, 116 + 20 * i)), [i + 1],
+                    namespace="x")
+    assert pc.fingerprint_delta(0) is None
+    assert tr.refresh(0, pc) == pc.fingerprint()
+    assert tr.stats["snapshots"] == 2           # overrun forced a resync
+
+
+def test_delta_fed_router_matches_snapshot_fed():
+    """Routing decisions from tracker-mirrored fingerprints are identical
+    to full-snapshot routing across registration and eviction churn —
+    the mirror is exact, not approximate."""
+    caches = {0: PrefixCache(16), 1: PrefixCache(16)}
+    tr = FingerprintTracker()
+    rt_delta = FleetRouter("affinity")
+    rt_snap = FleetRouter("affinity")
+    hot_a, hot_b = list(range(16)), list(range(50, 66))
+    probes = [hot_a, hot_b, hot_a[:8] + [9] * 8]
+
+    def views(fp_of):
+        return [ReplicaView(replica_id=i, open_slots=2, load=0, page_size=4,
+                            fingerprint=fp_of(i)) for i in caches]
+
+    def assert_same_decisions():
+        for p in probes:
+            d = rt_delta.route(p, "t", views(lambda i: tr.refresh(i, caches[i])))
+            s = rt_snap.route(p, "t", views(lambda i: caches[i].fingerprint()))
+            assert d == s
+
+    assert_same_decisions()                     # both caches cold
+    caches[0].register(hot_a, [1, 2, 3, 4], namespace="t")
+    assert_same_decisions()
+    caches[1].register(hot_b, [1, 2, 3, 4], namespace="t")
+    assert_same_decisions()
+    caches[0].evict(1)                          # hot_a chain gone from 0
+    assert_same_decisions()
+    caches[1].register(hot_a, [5, 6, 7, 8], namespace="t")
+    assert_same_decisions()
+    assert tr.stats["deltas"] > 0               # the mirror really was fed
+    assert rt_delta.stats == rt_snap.stats      # byte-identical outcomes

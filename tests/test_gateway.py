@@ -467,8 +467,9 @@ def test_metrics_report_per_replica_counters(model):
     e = per[0]
     assert set(e) == {"replica", "role", "state", "live", "queued",
                       "open_slots", "occupancy", "prefix_hit_rate",
-                      "dispatched"}
+                      "dispatched", "health", "noticed"}
     assert e["role"] == "unified" and e["state"] == "live"
+    assert e["health"] == "up" and e["noticed"] is False
     assert e["live"] == 1 and e["dispatched"] == 1
     assert e["occupancy"] == pytest.approx(0.5)      # 1 of 2 slots
     assert e["open_slots"] == 1
