@@ -187,7 +187,62 @@ METRICS = [
     Metric("gateway", "fault_recovery.evacuate.evacuations",
            lambda r: r["fault_recovery"]["evacuate"]["evacuations"],
            "higher", 0.0),
+    # Saturation: open-loop offered-load sweep on the virtual clock. The
+    # max sustained rate at the 99% bar is deterministic, so it gates
+    # exactly — an admission/scheduling slip that drops the wall a whole
+    # load point MUST fail. The sharding win is binary: throttles at the
+    # top offered load must still drop when the telemetry table is
+    # sharded, else the write wall silently came back.
+    Metric("gateway", "saturation.max_sustained_req_s",
+           lambda r: r["saturation"]["max_sustained_req_s"],
+           "higher", 0.0),
+    Metric("gateway", "saturation.sharding_cuts_throttles",
+           lambda r: 1.0 if (r["saturation"]["statestore"]
+                             ["throttled_sharded"]
+                             < r["saturation"]["statestore"]
+                             ["throttled_single"]) else 0.0,
+           "higher", 0.0),
 ]
+
+# Metric families the unified registry must expose after a saturation run.
+# This is a schema gate, not a perf gate: an instrumentation refactor that
+# silently drops a family (renames it, forgets to bind it) breaks every
+# dashboard scraping it, so a missing name fails the gate by itself.
+REQUIRED_METRIC_FAMILIES = (
+    "kotta_requests_total",
+    "kotta_requests_completed_total",
+    "kotta_requests_shed_total",
+    "kotta_request_ttft_seconds",
+    "kotta_request_tpot_seconds",
+    "kotta_request_queue_wait_seconds",
+    "kotta_tenant_tokens_total",
+    "kotta_tenant_cost_usd_total",
+    "kotta_replica_occupancy",
+    "kotta_replica_queue_depth",
+    "kotta_replica_prefix_hit_rate",
+    "kotta_replica_health_transitions_total",
+    "kotta_gateway_queue_depth",
+    "kotta_gateway_live_replicas",
+    "kotta_slo_burn_rate",
+    "kotta_slo_target",
+    "kotta_routing_decisions_total",
+    "kotta_engine_admitted_total",
+)
+
+
+def check_metric_schema(gateway: dict, out=sys.stdout) -> list[str]:
+    """Required metric families must appear in the saturation results."""
+    fams = set((gateway.get("saturation") or {}).get("metric_families")
+               or [])
+    missing = sorted(f for f in REQUIRED_METRIC_FAMILIES if f not in fams)
+    label = "gateway:saturation.metric_schema"
+    if missing:
+        print(f"{label:<48}{'MISSING':>39}", file=out)
+        return [f"gateway:saturation.metric_families lacks required "
+                f"families: {', '.join(missing)}"]
+    print(f"{label:<48}{len(fams):>10d}{'present':>11}{'':>10}{'ok':>8}",
+          file=out)
+    return []
 
 
 def _get(metric: Metric, results: dict, which: str) -> float:
@@ -236,6 +291,8 @@ def check(serve: dict | None, gateway: dict | None,
             failures.append(
                 f"{m.bench}:{m.name} regressed: {cand:.4f} vs baseline "
                 f"{base:.4f} (limit {limit:.4f}, direction {m.direction})")
+    if gateway is not None:
+        failures.extend(check_metric_schema(gateway, out=out))
     # Deduplicate the scenario-failure complaints (added once per metric).
     seen, uniq = set(), []
     for f in failures:

@@ -75,11 +75,14 @@ from repro.core.elastic import ProvisioningModel, ScalingPolicy
 from repro.core.market import SpotMarket
 from repro.core.security import PolicyEngine, provision_tenant
 from repro.core.clock import VirtualClock
+from repro.core.scheduler import ShardedStateStore, StateStore
 from repro.models import get_family
 from repro.models.params import init_params
 from repro.serve import (ContinuousBatchingEngine, DeadlineCostPolicy,
                          FaultEvent, FaultInjector, JobState,
-                         KottaServeGateway, ServiceModel)
+                         KottaServeGateway, ServiceModel, TrafficConfig,
+                         generate_trace, run_open_loop)
+from repro.serve.loadgen import offered_load
 
 ARCH = "yi-6b"
 TENANTS = ("alice", "bob", "carol")
@@ -711,6 +714,189 @@ def _bench_fault_recovery(cfg, params, verbose, results,
              f"goodput_ratio={goodput_ratio:.2f}x")]
 
 
+# ---------------------------------------------------------------------------
+# saturation: open-loop offered-load sweep + StateStore write wall (Fig-6)
+# ---------------------------------------------------------------------------
+# One static replica (SLOTS decode slots) swept with open-loop Poisson
+# traffic at three offered loads spanning under- and over-saturation.
+# Telemetry (audit records, terminal job states, metric snapshots) flushes
+# into a StateStore provisioned at SAT_WRITE_CAPACITY writes/s — small
+# enough that the top offered load crosses the table's write wall, which a
+# ShardedStateStore with the same per-shard capacity then shards past.
+SAT_SERVICE = ServiceModel(prefill_tok_per_s=2048.0, decode_step_s=0.05)
+SAT_MAX_NEW = 8
+SAT_RATES = (2.0, 5.0, 24.0)        # req/s offered: under / near / over
+SAT_DURATION_S = 20.0
+SAT_SMOKE_DURATION_S = 8.0
+SAT_WRITE_CAPACITY = 40.0           # writes/s, per table (and per shard)
+SAT_SHARDS = 4
+SAT_TENANTS = ("alice", "bob", "carol", "dan")
+SAT_SLO = 0.99
+SAT_FLUSH_S = 2.0
+
+
+def _sat_security():
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = [provision_tenant(sec, t, f"pw-{t}", data_zones=("public",))
+              for t in SAT_TENANTS]
+    return sec, tokens
+
+
+def _sat_point(cfg, params, rate, duration_s, *, store_factory,
+               admission_model=None):
+    """One offered-load point: fresh fleet, fresh clock, open-loop trace.
+
+    ``store_factory(clock)`` builds the telemetry table (None = no
+    telemetry writes); ``admission_model`` overrides the admission
+    policy's ServiceModel (the calibrated rerun) while the gateway's
+    billing/pump model stays SAT_SERVICE — physics unchanged, beliefs
+    updated.
+    """
+    sec, tokens = _sat_security()
+    store = store_factory(sec.clock) if store_factory is not None else None
+    gw = KottaServeGateway(
+        _factory(cfg, params), sec,
+        admission=DeadlineCostPolicy(model=admission_model or SAT_SERVICE),
+        scaling=ScalingPolicy.none(1, market="on_demand"),
+        service_model=SAT_SERVICE, idle_tick_s=0.05,
+        telemetry_store=store, telemetry_flush_s=SAT_FLUSH_S,
+        slo_target=SAT_SLO)
+    tc = TrafficConfig(
+        duration_s=duration_s, base_rate_rps=rate, diurnal_amplitude=0.5,
+        diurnal_period_s=duration_s, tenants=len(SAT_TENANTS), seed=7,
+        vocab_size=cfg.vocab_size, prefix_tokens=PREFIX_LEN,
+        interactive_deadline_s=5.0, batch_deadline_s=10.0,
+        interactive_max_new=SAT_MAX_NEW, batch_max_new=SAT_MAX_NEW)
+    trace = generate_trace(tc)
+    run_open_loop(gw, tokens, trace, max_rounds=100_000)
+    m = gw.metrics()            # timing metrics BEFORE the epilogue flush
+    gw.flush_telemetry()        # ... which drains the write backlog
+    point = {
+        "offered_rps": offered_load(trace, tc), "configured_rps": rate,
+        "arrivals": len(trace), "completed": m["completed"],
+        "shed": m["shed"], "sla_rate": m["sla_rate"],
+        "deadline_hit_rate": m["deadline_hit_rate"],
+        "p95_latency_s": m["p95_latency_s"],
+        "slo_burn_rate": m["slo_burn_rate"],
+        "tok_per_sim_s": m["tok_per_sim_s"],
+        "sim_seconds": m["sim_seconds"],
+        "completed_rps": (m["completed"] / m["sim_seconds"]
+                          if m["sim_seconds"] else 0.0),
+        "statestore_throttled": gw.stats["statestore_throttled"],
+        "store_write_count": store.write_count if store else 0,
+        "store_throttled_writes": store.throttled_writes if store else 0,
+    }
+    return point, gw, trace
+
+
+def _bench_saturation(cfg, params, verbose, results,
+                      duration_s=SAT_DURATION_S):
+    single = lambda clock: StateStore(
+        clock=clock, write_capacity=SAT_WRITE_CAPACITY)
+    sharded = lambda clock: ShardedStateStore(
+        SAT_SHARDS, clock=clock, write_capacity=SAT_WRITE_CAPACITY)
+
+    points = []
+    top_gw = None
+    top_trace = None
+    for rate in SAT_RATES:
+        point, gw, trace = _sat_point(cfg, params, rate, duration_s,
+                                      store_factory=single)
+        points.append(point)
+        top_gw, top_trace = gw, trace
+    sustained = [p["configured_rps"] for p in points
+                 if p["sla_rate"] >= SAT_SLO]
+    max_sustained = max(sustained) if sustained else 0.0
+    assert points[0]["sla_rate"] >= SAT_SLO > points[-1]["sla_rate"], (
+        f"sweep must span the saturation wall: sla "
+        f"{points[0]['sla_rate']:.3f} .. {points[-1]['sla_rate']:.3f} "
+        f"vs target {SAT_SLO}")
+
+    # The write wall: rerun the top offered load against a 4-way sharded
+    # table with the SAME per-shard capacity — throttles must drop.
+    sharded_point, _, _ = _sat_point(cfg, params, SAT_RATES[-1], duration_s,
+                                     store_factory=sharded)
+    thr_single = points[-1]["store_throttled_writes"]
+    thr_sharded = sharded_point["store_throttled_writes"]
+    assert thr_sharded < thr_single, (
+        f"sharding must cut StateStore write throttles: "
+        f"{thr_sharded} !< {thr_single}")
+
+    # ServiceModel calibration: fitted (measured) vs assumed service rate
+    # at the saturated point, then a rerun with the calibrated admission
+    # model so feasibility math tracks measured throughput.
+    mean_prompt = int(round(sum(len(a.prompt) for a in top_trace)
+                            / max(len(top_trace), 1)))
+    fitted = points[-1]["completed_rps"]
+    assumed = SAT_SERVICE.assumed_req_per_s(mean_prompt, SAT_MAX_NEW, SLOTS)
+    calibrated = SAT_SERVICE.calibrated(fitted, prompt_len=mean_prompt,
+                                        max_new=SAT_MAX_NEW, slots=SLOTS)
+    cal_point, _, _ = _sat_point(cfg, params, SAT_RATES[-1], duration_s,
+                                 store_factory=single,
+                                 admission_model=calibrated)
+
+    top_gw.registry.collect()
+    results["saturation"] = {
+        "rates_rps": list(SAT_RATES), "duration_s": duration_s,
+        "slots": SLOTS, "replicas": 1, "slo_target": SAT_SLO,
+        "write_capacity_per_table": SAT_WRITE_CAPACITY,
+        "shards": SAT_SHARDS,
+        "points": points,
+        "max_sustained_req_s": max_sustained,
+        "statestore": {
+            "offered_rps": SAT_RATES[-1],
+            "throttled_single": thr_single,
+            "throttled_sharded": thr_sharded,
+            "writes_single": points[-1]["store_write_count"],
+            "writes_sharded": sharded_point["store_write_count"],
+        },
+        "service_model_calibration": {
+            "prompt_len": mean_prompt, "max_new": SAT_MAX_NEW,
+            "slots": SLOTS,
+            "assumed_req_per_s": assumed,
+            "fitted_req_per_s": fitted,
+            "overhead_factor": calibrated.overhead,
+            "assumed_prefill_tok_per_s": SAT_SERVICE.prefill_tok_per_s,
+            "assumed_decode_step_s": SAT_SERVICE.decode_step_s,
+            "uncalibrated_deadline_hit_rate":
+                points[-1]["deadline_hit_rate"],
+            "calibrated_deadline_hit_rate":
+                cal_point["deadline_hit_rate"],
+            "calibrated_point": cal_point,
+        },
+        "metric_families": top_gw.registry.families(),
+    }
+    if verbose:
+        print(f"\n== gateway: saturation sweep (open loop, 1x{SLOTS} "
+              f"slots, {duration_s:.0f}s, store "
+              f"{SAT_WRITE_CAPACITY:.0f} w/s) ==")
+        print(f"{'offered':>8}{'arrivals':>9}{'done':>6}{'shed':>6}"
+              f"{'sla':>7}{'p95':>8}{'burn':>7}{'throttle':>9}")
+        for p in points:
+            print(f"{p['offered_rps']:>7.1f}/s{p['arrivals']:>9}"
+                  f"{p['completed']:>6}{p['shed']:>6}"
+                  f"{p['sla_rate']:>7.3f}{p['p95_latency_s']:>7.2f}s"
+                  f"{p['slo_burn_rate']:>7.1f}"
+                  f"{p['store_throttled_writes']:>9}")
+        print(f"max sustained at {SAT_SLO:.0%} deadline-hit: "
+              f"{max_sustained:.1f} req/s")
+        print(f"write wall at {SAT_RATES[-1]:.0f} req/s: "
+              f"{thr_single} throttles -> {thr_sharded} with "
+              f"{SAT_SHARDS} shards")
+        print(f"service model: assumed {assumed:.2f} req/s, fitted "
+              f"{fitted:.2f} req/s (overhead x{calibrated.overhead:.2f}); "
+              f"calibrated admission hit-rate "
+              f"{points[-1]['deadline_hit_rate']:.3f} -> "
+              f"{cal_point['deadline_hit_rate']:.3f}")
+    return [("gateway.saturation.sweep", max_sustained,
+             f"max_sustained_rps={max_sustained:.1f};"
+             f"points={len(points)};"
+             f"throttle_drop={thr_single}->{thr_sharded}"),
+            ("gateway.saturation.calibration", calibrated.overhead,
+             f"assumed_rps={assumed:.2f};fitted_rps={fitted:.2f};"
+             f"overhead={calibrated.overhead:.2f}")]
+
+
 def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
         smoke: bool = False):
     cfg, params = _build()
@@ -734,6 +920,9 @@ def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
         ("fault_recovery", lambda: _bench_fault_recovery(
             cfg, params, verbose, results,
             jobs=FR_SMOKE_JOBS if smoke else FR_JOBS)),
+        ("saturation", lambda: _bench_saturation(
+            cfg, params, verbose, results,
+            duration_s=SAT_SMOKE_DURATION_S if smoke else SAT_DURATION_S)),
     ]
     rows = []
     for name, fn in scenarios:

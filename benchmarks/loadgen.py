@@ -1,0 +1,92 @@
+"""Open-loop traffic trace generator CLI.
+
+The generator itself lives in :mod:`repro.serve.loadgen` (importable by the
+bench AND by ``repro.launch.serve``); this CLI materializes traces for
+inspection or replay:
+
+    python benchmarks/loadgen.py --rate 8 --duration 30 --tenants 4 \
+        --diurnal-amplitude 0.5 --out /tmp/trace.json
+    python benchmarks/loadgen.py --rate 8 --duration 30 --describe
+
+``--describe`` prints the trace's empirical shape — offered load,
+per-tenant Zipf skew, class mix, rate-over-time buckets — which is how you
+sanity-check a config before spending a saturation sweep on it. The JSON
+rows are plain dicts (one per arrival) so any driver can replay them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.serve.loadgen import TrafficConfig, generate_trace, offered_load
+
+
+def _describe(trace, cfg: TrafficConfig) -> None:
+    print(f"arrivals: {len(trace)} over {cfg.duration_s:.0f}s "
+          f"(offered {offered_load(trace, cfg):.2f} req/s, "
+          f"configured base {cfg.base_rate_rps:.2f})")
+    by_tenant = Counter(a.tenant_idx for a in trace)
+    total = max(len(trace), 1)
+    print("tenant share (Zipf skew):")
+    for t, n in by_tenant.most_common():
+        print(f"  tenant {t}: {n:4d} ({100.0 * n / total:.1f}%)")
+    inter = sum(1 for a in trace if a.priority == 0)
+    print(f"class mix: {inter} interactive / {len(trace) - inter} batch")
+    users = len({a.user for a in trace})
+    print(f"distinct users: {users}")
+    buckets = Counter(int(a.at_s // max(cfg.duration_s / 10, 1e-9))
+                      for a in trace)
+    print("arrivals per decile (diurnal shape):")
+    print("  " + " ".join(f"{buckets.get(i, 0):3d}" for i in range(10)))
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--rate", type=float, default=4.0,
+                   help="base arrival rate, req/s")
+    p.add_argument("--duration", type=float, default=30.0,
+                   help="trace length, virtual seconds")
+    p.add_argument("--tenants", type=int, default=4)
+    p.add_argument("--users", type=int, default=1_000_000,
+                   help="user population behind the tenants (Zipf-ranked)")
+    p.add_argument("--zipf-alpha", type=float, default=1.3)
+    p.add_argument("--diurnal-amplitude", type=float, default=0.0)
+    p.add_argument("--diurnal-period", type=float, default=60.0)
+    p.add_argument("--interactive-fraction", type=float, default=0.5)
+    p.add_argument("--prefix-tokens", type=int, default=16)
+    p.add_argument("--vocab-size", type=int, default=256)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", type=Path, default=None,
+                   help="write arrival rows as JSON")
+    p.add_argument("--describe", action="store_true",
+                   help="print the trace's empirical shape")
+    args = p.parse_args(argv)
+
+    cfg = TrafficConfig(
+        duration_s=args.duration, base_rate_rps=args.rate,
+        diurnal_amplitude=args.diurnal_amplitude,
+        diurnal_period_s=args.diurnal_period, tenants=args.tenants,
+        users=args.users, zipf_alpha=args.zipf_alpha,
+        interactive_fraction=args.interactive_fraction,
+        prefix_tokens=args.prefix_tokens, vocab_size=args.vocab_size,
+        seed=args.seed)
+    trace = generate_trace(cfg)
+    if args.out is not None:
+        rows = [{"at_s": a.at_s, "tenant_idx": a.tenant_idx, "user": a.user,
+                 "prompt": list(a.prompt), "max_new": a.max_new,
+                 "deadline_s": a.deadline_s, "priority": a.priority}
+                for a in trace]
+        args.out.write_text(json.dumps(rows))
+        print(f"wrote {len(rows)} arrivals to {args.out}")
+    if args.describe or args.out is None:
+        _describe(trace, cfg)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

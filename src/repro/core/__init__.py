@@ -17,7 +17,8 @@ from .lifecycle import (LifecyclePolicy, ObjectArchivedError, ObjectStore,
 from .market import DEFAULT_ZONES, AvailabilityZone, SpotMarket
 from .placement import PlacementDecision, PlacementPolicy
 from .scheduler import (ExecutableRegistry, JobContext, JobQueue, JobSpec,
-                        JobStatus, KottaService, StateStore, Worker)
+                        JobStatus, KottaService, ShardedStateStore,
+                        StateStore, Worker)
 from .security import (AuditLog, AuthorizationError, Policy, PolicyEngine,
                        Principal, Role, SecurityError, SessionToken,
                        TokenExpiredError, allow, deny, install_standard_roles,

@@ -41,6 +41,13 @@ scheduled Kotta job:
   batch wait, and interactive p99 TTFT. Preemption follows the config knob
   ``enable_decode_preemption`` (pass ``--no-preempt`` to watch the same
   burst get shed instead).
+- ``--saturation`` demos the observability plane: open-loop Poisson traffic
+  with diurnal modulation from a Zipf-ranked user population drives the
+  fleet while telemetry (audit records, terminal job states, periodic
+  metric snapshots) streams into a write-capped ``StateStore``; the
+  summary prints SLO burn, flush/throttle counters and store contents.
+- ``--metrics-out PATH`` (any gateway mode) writes the run's final
+  ``MetricsRegistry`` state as Prometheus text exposition to ``PATH``.
 - ``--chaos-seed SEED`` (implies ``--gateway``) demos the failure plane: a
   seeded-random fault storm (crashes, revocation notices answered with
   notice-window KV evacuation, stragglers, heartbeat loss) plays out over
@@ -70,7 +77,7 @@ def _demo_prompts(cfg, batch: int) -> list[list[int]]:
         for i in range(batch)]
 
 
-def _run_gateway(cfg, params, args) -> None:
+def _run_gateway(cfg, params, args):
     from repro.core.elastic import ScalingPolicy
     from repro.core.security import PolicyEngine, provision_tenant
     from repro.core.clock import VirtualClock
@@ -162,9 +169,10 @@ def _run_gateway(cfg, params, args) -> None:
             print(f"  replica {e['replica']} ({e['role']}): dispatched "
                   f"{e['dispatched']}, prefix hit rate "
                   f"{e['prefix_hit_rate']:.1%}")
+    return gw
 
 
-def _run_interactive_burst(cfg, params, args) -> None:
+def _run_interactive_burst(cfg, params, args):
     """Demo: decode preemption under a tight-deadline interactive burst."""
     from repro.core.elastic import ScalingPolicy
     from repro.core.security import PolicyEngine, provision_tenant
@@ -226,9 +234,10 @@ def _run_interactive_burst(cfg, params, args) -> None:
     print(f"audit: {len([r for r in audit if r.action == 'serve:Preempt'])} "
           f"preempt / {len([r for r in audit if r.action == 'serve:Resume'])}"
           f" resume records")
+    return gw
 
 
-def _run_chaos(cfg, params, args) -> None:
+def _run_chaos(cfg, params, args):
     """Demo: a seeded fault storm over the fleet — crashes, revocation
     notices (KV evacuation), stragglers, heartbeat loss — with every job
     finishing or shedding with a typed error."""
@@ -287,6 +296,61 @@ def _run_chaos(cfg, params, args) -> None:
         print(f"recovered TTFT mean {m['recovered_ttft_mean_s']:.2f}s over "
               f"{m['recovered_jobs']} disturbed job(s)   replica health "
               f"{m['replica_health']}")
+    return gw
+
+
+def _run_saturation(cfg, params, args):
+    """Demo: open-loop Poisson/diurnal traffic from a Zipf-ranked user
+    population, telemetry (audit + job records + metric snapshots)
+    streaming into a write-capped StateStore while the fleet serves."""
+    from repro.core.clock import VirtualClock
+    from repro.core.elastic import ScalingPolicy
+    from repro.core.scheduler import StateStore
+    from repro.core.security import PolicyEngine, provision_tenant
+    from repro.serve import (ContinuousBatchingEngine, DeadlineCostPolicy,
+                             KottaServeGateway, ServiceModel, TrafficConfig,
+                             generate_trace, run_open_loop)
+    from repro.serve.loadgen import offered_load
+
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = [provision_tenant(sec, f"tenant{i}", f"pw-tenant{i}",
+                               data_zones=("public",))
+              for i in range(args.tenants)]
+    svc = ServiceModel()
+    store = StateStore(clock=sec.clock, write_capacity=50.0)
+    gw = KottaServeGateway(
+        lambda: ContinuousBatchingEngine(cfg, params, max_len=args.max_len,
+                                         kv_cache_dtype=args.kv_dtype),
+        sec, scaling=ScalingPolicy.none(args.replicas, market="on_demand"),
+        service_model=svc, admission=DeadlineCostPolicy(model=svc),
+        idle_tick_s=0.05, telemetry_store=store, telemetry_flush_s=2.0)
+    duration_s = 10.0
+    tc = TrafficConfig(
+        duration_s=duration_s, base_rate_rps=8.0, diurnal_amplitude=0.5,
+        diurnal_period_s=duration_s, tenants=args.tenants,
+        vocab_size=cfg.vocab_size,
+        interactive_max_new=min(args.max_new, 8),
+        batch_max_new=min(args.max_new, 8))
+    trace = generate_trace(tc)
+    rounds = run_open_loop(gw, tokens, trace)
+    gw.flush_telemetry()
+    m = gw.metrics()
+    print(f"engine: gateway saturation demo ({args.replicas} replica(s), "
+          f"{args.tenants} tenant(s), open loop "
+          f"{offered_load(trace, tc):.1f} req/s offered x {duration_s:.0f}s,"
+          f" {rounds} rounds)")
+    print(f"arrivals {len(trace)}   completed {m['completed']}   shed "
+          f"{m['shed']}   sla rate {m['sla_rate']:.3f}   p95 latency "
+          f"{m['p95_latency_s']:.2f}s   SLO burn {m['slo_burn_rate']:.2f}")
+    print(f"telemetry: {m['telemetry_flushes']} flushes, "
+          f"{m['telemetry_writes']} StateStore writes "
+          f"({m['statestore_throttled']} throttled, "
+          f"{m['telemetry_dropped']} dropped), "
+          f"{len(store.scan('servejob/'))} job records, "
+          f"{len(store.scan('audit/'))} audit records, "
+          f"{len(store.scan('metrics/'))} metric snapshots")
+    print(f"registry: {len(gw.registry.families())} metric families")
+    return gw
 
 
 def _disaggregate_spec(spec: str) -> tuple[int, int]:
@@ -360,6 +424,15 @@ def main() -> None:
                          "revocation notices with KV evacuation, "
                          "stragglers, heartbeat loss) over the fleet; every "
                          "job must end DONE or typed-SHED")
+    ap.add_argument("--saturation", action="store_true",
+                    help="gateway demo: open-loop Poisson/diurnal traffic "
+                         "from a Zipf user population with telemetry "
+                         "streaming into a write-capped StateStore "
+                         "(benchmarks/gateway_bench.py sweeps the full "
+                         "offered-load range)")
+    ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
+                    help="gateway modes: write the final Prometheus text "
+                         "exposition of the run's MetricsRegistry to PATH")
     args = ap.parse_args()
     if args.adaptive_k and not args.spec:
         raise SystemExit("--adaptive-k requires --spec (it governs the "
@@ -373,27 +446,45 @@ def main() -> None:
     fam = get_family(cfg)
     params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
                          cfg.param_dtype)
+    gw = None
     if args.chaos_seed is not None:
         if not hasattr(fam, "decode_paged"):
             raise SystemExit("--chaos-seed requires a paged-decode family")
-        _run_chaos(cfg, params, args)
-        return
-    if args.interactive_burst:
+        gw = _run_chaos(cfg, params, args)
+    elif args.saturation:
+        if not hasattr(fam, "decode_paged"):
+            raise SystemExit("--saturation requires a paged-decode family")
+        if args.tenants < 1 or args.replicas < 1:
+            raise SystemExit("--saturation needs --tenants >= 1 and "
+                             "--replicas >= 1")
+        gw = _run_saturation(cfg, params, args)
+    elif args.interactive_burst:
         if not hasattr(fam, "decode_paged"):
             raise SystemExit("--interactive-burst requires a paged-decode "
                              "family")
         if args.replicas < 1:
             raise SystemExit("--interactive-burst needs --replicas >= 1")
-        _run_interactive_burst(cfg, params, args)
-        return
-    if args.gateway:
+        gw = _run_interactive_burst(cfg, params, args)
+    elif args.gateway:
         if not hasattr(fam, "decode_paged"):
             raise SystemExit("--gateway requires a paged-decode family")
         if args.tenants < 1 or args.replicas < 1:
             raise SystemExit("--gateway needs --tenants >= 1 and "
                              "--replicas >= 1")
-        _run_gateway(cfg, params, args)
+        gw = _run_gateway(cfg, params, args)
+    if gw is not None:
+        if args.metrics_out is not None:
+            from pathlib import Path
+            gw.registry.collect()
+            Path(args.metrics_out).write_text(gw.registry.expose())
+            print(f"wrote {len(gw.registry.families())} metric families "
+                  f"(Prometheus text exposition) to {args.metrics_out}")
         return
+    if args.metrics_out is not None:
+        raise SystemExit("--metrics-out requires a gateway mode (--gateway,"
+                         " --saturation, --interactive-burst or "
+                         "--chaos-seed): the MetricsRegistry lives in the "
+                         "gateway")
     engine_kind = args.engine
     if engine_kind == "auto":
         engine_kind = ("continuous" if hasattr(fam, "decode_paged")

@@ -8,9 +8,12 @@ from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
 from .faults import FaultEvent, FaultInjector
 from .gateway import KottaServeGateway
 from .paging import PageAllocator, PrefixCache, chain_hashes
+from .loadgen import Arrival, TrafficConfig, generate_trace, run_open_loop
 from .routing import (HEALTH_DEGRADED, HEALTH_QUARANTINED, HEALTH_UP,
                       FingerprintTracker, FleetRouter, ReplicaView,
                       RouteDecision)
+from .telemetry import (LATENCY_BUCKETS_S, MetricsRegistry, RegistryDict,
+                        parse_exposition)
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
            "PausedRequest", "ServeResult", "ShippedKV", "PageAllocator",
@@ -21,4 +24,6 @@ __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
            "FCFSPolicy", "DeadlineCostPolicy", "PreemptCandidate",
            "AdmissionError", "DeadlineInfeasible", "CostBudgetExceeded",
            "RetryBudgetExhausted", "FaultEvent", "FaultInjector",
-           "build_ngram_draft"]
+           "build_ngram_draft", "MetricsRegistry", "RegistryDict",
+           "parse_exposition", "LATENCY_BUCKETS_S", "TrafficConfig",
+           "Arrival", "generate_trace", "run_open_loop"]

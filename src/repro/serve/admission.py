@@ -39,7 +39,7 @@ from __future__ import annotations
 import enum
 import heapq
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Optional
 
 
@@ -108,6 +108,8 @@ class ServeJob:
     status: JobState = JobState.QUEUED
     tokens: Optional[list[int]] = None
     started_at: Optional[float] = None   # first admitted into a decode slot
+    dispatched_at: Optional[float] = None   # left the central queue
+                                            # (queue-wait histogram stamp)
     finished_at: Optional[float] = None
     error: Optional[AdmissionError] = None
     requeued: bool = False
@@ -152,6 +154,15 @@ class ServiceModel:
     # Page-shipping bandwidth for disaggregated prefill->decode handoffs
     # (host/interconnect copy of the finished KV pages).
     kv_ship_bytes_per_s: float = 8e9
+    # Calibration: measured end-to-end service time over the raw
+    # prefill+decode estimate. The raw model ignores dispatch rounds,
+    # chunked-prefill interleave, and queue-pump granularity, so under
+    # sustained load the real per-request service time runs above it; the
+    # saturation bench fits this factor from measured throughput
+    # (:meth:`calibrated`) so admission's feasibility math tracks reality
+    # instead of the optimistic floor. Applies to ``service_s`` only —
+    # billing/shipping estimates stay raw.
+    overhead: float = 1.0
 
     def prefill_s(self, n_tokens: int) -> float:
         return n_tokens / self.prefill_tok_per_s
@@ -166,7 +177,28 @@ class ServiceModel:
         an affinity hit shrinks the prefill bill, never below the one
         always-recomputed token)."""
         fresh = max(prompt_len - max(cached_tokens, 0), 1)
-        return self.prefill_s(fresh) + max_new * self.decode_step_s
+        return (self.prefill_s(fresh) + max_new * self.decode_step_s) \
+            * self.overhead
+
+    def assumed_req_per_s(self, prompt_len: int, max_new: int,
+                          slots: int) -> float:
+        """Throughput this model *assumes* ``slots`` decode slots deliver
+        for a homogeneous workload — the number the saturation bench
+        compares against measured throughput to expose model drift."""
+        base = replace(self, overhead=1.0)
+        return slots / base.service_s(prompt_len, max_new)
+
+    def calibrated(self, measured_req_per_s: float, *, prompt_len: int,
+                   max_new: int, slots: int) -> "ServiceModel":
+        """Fit ``overhead`` so the model's implied throughput for this
+        workload equals the measured one. Never calibrates below 1.0 — a
+        measurement above the raw model (burst luck, cache hits) must not
+        make admission *more* optimistic than physics."""
+        if measured_req_per_s <= 0:
+            raise ValueError(f"measured_req_per_s must be > 0, got "
+                             f"{measured_req_per_s}")
+        assumed = self.assumed_req_per_s(prompt_len, max_new, slots)
+        return replace(self, overhead=max(1.0, assumed / measured_req_per_s))
 
 
 class AdmissionPolicy:

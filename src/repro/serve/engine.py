@@ -113,6 +113,7 @@ from repro.train.train_step import (build_decode_step, build_fused_spec_step,
 
 from .drafting import build_ngram_draft
 from .paging import PageAllocator, PrefixCache
+from .telemetry import RegistryDict
 
 
 @dataclass
@@ -626,13 +627,43 @@ class ContinuousBatchingEngine:
         self._ship_scatter_cache = {}
 
     # -- stats ---------------------------------------------------------------
+    _STAT_ZEROS = {"admitted": 0, "prefill_tokens": 0, "cached_tokens": 0,
+                   "cow_copies": 0, "admit_seconds": 0.0,
+                   "spec_steps": 0, "spec_emitted": 0,
+                   "preempted": 0, "resumed": 0,
+                   "page_exports": 0, "page_imports": 0,
+                   "accept_ema_sum": 0.0, "accept_ema_n": 0}
+    # Keys exported when bound to a MetricsRegistry; the scratch
+    # accumulators (admit_seconds, accept EMA terms) stay local-only.
+    _STAT_EXPORTED = ("admitted", "prefill_tokens", "cached_tokens",
+                      "cow_copies", "spec_steps", "spec_emitted",
+                      "preempted", "resumed", "page_exports", "page_imports")
+
     def _reset_stats(self):
-        self.stats = {"admitted": 0, "prefill_tokens": 0, "cached_tokens": 0,
-                      "cow_copies": 0, "admit_seconds": 0.0,
-                      "spec_steps": 0, "spec_emitted": 0,
-                      "preempted": 0, "resumed": 0,
-                      "page_exports": 0, "page_imports": 0,
-                      "accept_ema_sum": 0.0, "accept_ema_n": 0}
+        stats = getattr(self, "stats", None)
+        if isinstance(stats, RegistryDict):
+            # Registry-bound: zero the local mirror in place. Counter
+            # deltas are positive-only, so the bound series stay monotonic
+            # across resets (Prometheus counter-reset semantics).
+            for k, v in self._STAT_ZEROS.items():
+                stats[k] = v
+        else:
+            self.stats = dict(self._STAT_ZEROS)
+
+    def bind_registry(self, registry, engine: str) -> None:
+        """Swap ``stats`` for a write-through view over ``registry``
+        counters labeled ``{engine=...}``; pre-bind totals carry into the
+        series and call sites keep the plain-dict idiom."""
+        rd = RegistryDict()
+        for key in self._STAT_EXPORTED:
+            fam = registry.counter(
+                f"kotta_engine_{key}_total",
+                f"Engine {key.replace('_', ' ')} (cumulative)", ("engine",))
+            rd.bind(key, fam, initial=self.stats[key], engine=engine)
+        for key in self._STAT_ZEROS:
+            if key not in self._STAT_EXPORTED:
+                rd.bind(key, None, initial=self.stats[key])
+        self.stats = rd
 
     @property
     def prefix_hit_rate(self) -> float:

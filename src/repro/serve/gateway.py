@@ -94,6 +94,7 @@ from __future__ import annotations
 
 import itertools
 import math
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -111,6 +112,10 @@ from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
 from .faults import FaultInjector
 from .routing import (HEALTH_UP, FingerprintTracker, FleetRouter,
                       ReplicaView)
+from .telemetry import LATENCY_BUCKETS_S, MetricsRegistry, RegistryDict
+
+# Per-token decode latency buckets (TPOT lives well under the TTFT range).
+TPOT_BUCKETS_S = (0.005, 0.01, 0.025, 0.05, 0.075, 0.1, 0.25, 0.5, 1.0)
 
 
 class _Replica:
@@ -178,6 +183,11 @@ class KottaServeGateway:
                  evacuate_on_notice: bool = True,
                  notice_s: float | None = None,
                  fault_injector: FaultInjector | None = None,
+                 registry: MetricsRegistry | None = None,
+                 telemetry_store=None,
+                 telemetry_flush_s: float = 5.0,
+                 slo_target: float = 0.99,
+                 slo_window_s: float = 300.0,
                  seed: int = 0):
         self._engine_factory = engine_factory
         self.security = security
@@ -229,21 +239,36 @@ class KottaServeGateway:
         # KV payloads in flight between replicas (prefill handoffs AND
         # evacuated requests), FIFO with a delivery-attempt counter.
         self._handoffs: list[list] = []    # [payload, job rid, attempts]
-        self.stats = {"rounds": 0, "launches": 0, "terminations": 0,
-                      "revocations": 0, "requeues": 0, "shed": 0,
-                      "tokens": 0, "cost_usd": 0.0, "replica_seconds": 0.0,
-                      "peak_replicas": 0, "preemptions": 0, "resumes": 0,
-                      "preempt_wait_s": 0.0,
-                      "page_ships": 0, "page_ship_bytes": 0,
-                      "notices": 0, "evacuations": 0,
-                      "evacuated_pages_bytes": 0, "retries": 0,
-                      "backoff_wait_s": 0.0, "wasted_decode_tokens": 0,
-                      "faults_injected": 0}
+
+        # --- observability plane (one registry for the whole stack) --------
+        # Gateway counters, every engine's stats, and the router's decision
+        # counts all land in this registry; the `stats` dicts everywhere
+        # stay readable/writable as plain dicts (RegistryDict views), so
+        # nothing upstream of this PR changes shape.
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(clock=self.clock)
+        self.telemetry_store = telemetry_store
+        self.telemetry_flush_s = telemetry_flush_s
+        self.slo_target = slo_target
+        self.slo_window_s = slo_window_s
+        self._engine_seq = itertools.count()
+        self._slo_events: deque = deque()      # (event time, deadline hit?)
+        self._health_seen: dict[int, str] = {}
+        self._audit_cursor = 0                 # audit records already staged
+        self._write_seq = itertools.count()
+        # Writes destined for the telemetry StateStore, FIFO; bounded so a
+        # throttled table under sustained overload degrades to dropped
+        # telemetry, never to unbounded gateway memory.
+        self._pending_writes: deque = deque()
+        self._last_flush = self.clock.now()
+        self._build_metrics()
+        self.stats = self._build_stats()
+        self.router.bind_registry(self.registry)
 
         # One engine up front: it validates request shapes at submit time
         # and seeds the warm pool; every autoscaled replica is
         # factory-identical (and never prefill-role — those never decode).
-        self._standby.append(engine_factory())
+        self._standby.append(self._bind_engine(engine_factory()))
         if self._standby[0].role == "prefill":
             raise ValueError(
                 "engine_factory must build decode-capable engines "
@@ -261,7 +286,7 @@ class KottaServeGateway:
             raise ValueError("prefill_replicas > 0 requires a "
                              "prefill_engine_factory")
         for _ in range(prefill_replicas):
-            eng = prefill_engine_factory()
+            eng = self._bind_engine(prefill_engine_factory())
             if eng.role != "prefill":
                 raise ValueError("prefill_engine_factory must build "
                                  f"role='prefill' engines, got {eng.role!r}")
@@ -273,6 +298,257 @@ class KottaServeGateway:
         self._disaggregated = prefill_replicas > 0
         for _ in range(self.scaling.min_nodes):
             self._launch(now, ready_now=True)
+
+    # -- observability -------------------------------------------------------
+    # Gateway lifecycle counters exported as kotta_gateway_<key>_total.
+    _STAT_COUNTERS = ("rounds", "launches", "terminations", "revocations",
+                      "requeues", "shed", "tokens", "cost_usd",
+                      "replica_seconds", "preemptions", "resumes",
+                      "preempt_wait_s", "page_ships", "page_ship_bytes",
+                      "notices", "evacuations", "evacuated_pages_bytes",
+                      "retries", "backoff_wait_s", "wasted_decode_tokens",
+                      "faults_injected", "telemetry_flushes",
+                      "telemetry_writes", "telemetry_dropped",
+                      "statestore_throttled")
+
+    MAX_PENDING_WRITES = 10_000
+
+    def _build_stats(self) -> RegistryDict:
+        rd = RegistryDict()
+        for key in self._STAT_COUNTERS:
+            fam = self.registry.counter(
+                f"kotta_gateway_{key}_total",
+                f"Gateway {key.replace('_', ' ')} (cumulative)")
+            rd.bind(key, fam, initial=0)
+        rd.bind("peak_replicas",
+                self.registry.gauge("kotta_gateway_peak_replicas",
+                                    "High-water mark of live replicas"),
+                initial=0)
+        return rd
+
+    def _build_metrics(self) -> None:
+        reg = self.registry
+        tc = ("tenant", "class")
+        self._m_requests = reg.counter(
+            "kotta_requests_total", "Requests admitted past authorization",
+            tc)
+        self._m_completed = reg.counter(
+            "kotta_requests_completed_total", "Requests finished DONE", tc)
+        self._m_shed_reason = reg.counter(
+            "kotta_requests_shed_total", "Requests shed, by typed reason",
+            ("tenant", "reason"))
+        self._m_tenant_tokens = reg.counter(
+            "kotta_tenant_tokens_total", "Decoded tokens delivered",
+            ("tenant",))
+        self._m_tenant_cost = reg.counter(
+            "kotta_tenant_cost_usd_total",
+            "Modelled serving spend attributed to the tenant (service "
+            "seconds priced at the fleet's per-slot rate)", ("tenant",))
+        self._m_ttft = reg.histogram(
+            "kotta_request_ttft_seconds",
+            "Submit to first decode-slot occupancy", LATENCY_BUCKETS_S, tc)
+        self._m_tpot = reg.histogram(
+            "kotta_request_tpot_seconds",
+            "Decode seconds per emitted token", TPOT_BUCKETS_S, tc)
+        self._m_qwait = reg.histogram(
+            "kotta_request_queue_wait_seconds",
+            "Submit to dispatch onto a replica", LATENCY_BUCKETS_S, tc)
+        self._m_health_trans = reg.counter(
+            "kotta_replica_health_transitions_total",
+            "Router health-state transitions observed by the gateway",
+            ("from_state", "to_state"))
+        rr = ("replica", "role")
+        self._g_occupancy = reg.gauge(
+            "kotta_replica_occupancy", "Live decode slots / max slots", rr)
+        self._g_queue_depth = reg.gauge(
+            "kotta_replica_queue_depth", "Engine-queued requests", rr)
+        self._g_hit_rate = reg.gauge(
+            "kotta_replica_prefix_hit_rate",
+            "Prompt tokens served from the prefix cache (lifetime)", rr)
+        self._g_gw_queue = reg.gauge(
+            "kotta_gateway_queue_depth", "Central pending-queue depth")
+        self._g_live = reg.gauge(
+            "kotta_gateway_live_replicas", "Replicas currently live")
+        self._g_burn = reg.gauge(
+            "kotta_slo_burn_rate",
+            "Deadline-miss fraction over the SLO window / error budget "
+            "(1.0 = burning exactly the budget)")
+        self._g_slo_target = reg.gauge(
+            "kotta_slo_target", "Deadline-hit SLO target")
+        self._g_slo_target.set(self.slo_target)
+        reg.register_collector(self._collect_gauges)
+
+    def _bind_engine(self, eng: ContinuousBatchingEngine
+                     ) -> ContinuousBatchingEngine:
+        """Adopt an engine into the shared registry (idempotent: warm-pool
+        engines come back already bound)."""
+        if not isinstance(eng.stats, RegistryDict):
+            eng.bind_registry(self.registry, f"e{next(self._engine_seq)}")
+        return eng
+
+    @staticmethod
+    def _job_class(job: ServeJob) -> str:
+        return "interactive" if job.priority == 0 else "batch"
+
+    def _collect_gauges(self) -> None:
+        """Scrape-time refresh of gauges computed from live state (the
+        Prometheus collector pattern) — retired replicas drop out of the
+        exposition because the families are rebuilt from scratch."""
+        now = self.clock.now()
+        for fam in (self._g_occupancy, self._g_queue_depth,
+                    self._g_hit_rate):
+            fam.clear()
+        live = 0
+        for r in sorted(self._replicas, key=lambda x: x.id):
+            if r.state == "retired":
+                continue
+            if r.state == "live":
+                live += 1
+            eng = r.engine
+            lbl = {"replica": str(r.id), "role": r.role}
+            self._g_occupancy.set(eng.live / eng.max_slots, **lbl)
+            self._g_queue_depth.set(eng.queued, **lbl)
+            self._g_hit_rate.set(eng.prefix_hit_rate, **lbl)
+        self._g_gw_queue.set(len(self._queue))
+        self._g_live.set(live)
+        while self._slo_events and \
+                self._slo_events[0][0] < now - self.slo_window_s:
+            self._slo_events.popleft()
+        if self._slo_events:
+            miss = sum(1 for _, hit in self._slo_events if not hit) \
+                / len(self._slo_events)
+            self._g_burn.set(miss / max(1.0 - self.slo_target, 1e-9))
+        else:
+            self._g_burn.set(0.0)
+
+    def _observe_completion(self, job: ServeJob) -> None:
+        lbl = {"tenant": job.tenant, "class": self._job_class(job)}
+        self._m_completed.inc(1, **lbl)
+        ntoks = len(job.tokens or ())
+        if job.started_at is not None:
+            self._m_ttft.observe(job.started_at - job.submitted_at, **lbl)
+            if ntoks:
+                self._m_tpot.observe(
+                    (job.finished_at - job.started_at) / ntoks, **lbl)
+        if job.dispatched_at is not None:
+            self._m_qwait.observe(job.dispatched_at - job.submitted_at,
+                                  **lbl)
+        self._m_tenant_tokens.inc(ntoks, tenant=job.tenant)
+        # $/tenant: the job's modelled service seconds at the fleet's
+        # current per-slot rate — the same arithmetic admission prices
+        # budgets with, so showback and shed decisions agree.
+        svc = self.model.prefill_s(len(job.prompt)) \
+            + ntoks * self.model.decode_step_s
+        self._m_tenant_cost.inc(
+            svc / 3600.0 * self._price_per_slot_hour(job.finished_at),
+            tenant=job.tenant)
+        hit = job.deadline is None or job.finished_at <= job.deadline
+        self._slo_events.append((job.finished_at, hit))
+        self._stage_job_write(job)
+
+    def _observe_shed(self, job: ServeJob, reason: str, now: float) -> None:
+        self._m_shed_reason.inc(1, tenant=job.tenant, reason=reason)
+        self._slo_events.append((now, False))
+        self._stage_job_write(job)
+
+    def _observe_health(self, now: float) -> None:
+        for r in self._replicas:
+            if r.state != "live" or r.role == "prefill":
+                continue
+            h = self.router.health(r.id, now)
+            prev = self._health_seen.get(r.id)
+            if prev is not None and prev != h:
+                self._m_health_trans.inc(1, from_state=prev, to_state=h)
+            self._health_seen[r.id] = h
+
+    # -- telemetry -> StateStore flush ---------------------------------------
+    def _stage_job_write(self, job: ServeJob) -> None:
+        """Terminal job state becomes a StateStore item — the Kotta move:
+        serve jobs land in the same provisioned table batch jobs use, so
+        one backplane answers 'what happened to request N' for both."""
+        if self.telemetry_store is None:
+            return
+        self._stage_write(f"servejob/{job.rid}", {
+            "tenant": job.tenant, "status": job.status.value,
+            "class": self._job_class(job),
+            "tokens": len(job.tokens or ()),
+            "submitted_at": job.submitted_at,
+            "finished_at": job.finished_at,
+            "retries": job.retries, "evacuations": job.evacuations,
+            "error": type(job.error).__name__ if job.error else None})
+
+    def _stage_write(self, key: str, item: dict) -> None:
+        self._pending_writes.append((key, item))
+        while len(self._pending_writes) > self.MAX_PENDING_WRITES:
+            self._pending_writes.popleft()
+            self.stats["telemetry_dropped"] += 1
+
+    def _flush_telemetry(self, now: float) -> None:
+        """Every ``telemetry_flush_s`` virtual seconds, push staged writes
+        (audit records, terminal job states) plus one registry snapshot
+        into the telemetry StateStore.
+
+        Only the non-blocking ``try_put_item`` path is used: the gateway
+        drives its own VirtualClock, so a blocking capacity wait here would
+        deadlock the simulation — and the refusal count IS the signal
+        (provisioned-throughput-exceeded) the saturation bench sweeps for.
+        Throttled writes stay staged and retry next flush; a throttled
+        snapshot is simply dropped (the next interval's supersedes it).
+        """
+        store = self.telemetry_store
+        if store is None or now - self._last_flush < self.telemetry_flush_s:
+            return
+        self._last_flush = now
+        self.stats["telemetry_flushes"] += 1
+        self._stage_audit_tail()
+        while self._pending_writes:
+            key, item = self._pending_writes[0]
+            if not store.try_put_item(key, item):
+                self.stats["statestore_throttled"] += 1
+                break
+            self._pending_writes.popleft()
+            self.stats["telemetry_writes"] += 1
+        snap = self.registry.snapshot()
+        if store.try_put_item(f"metrics/{next(self._write_seq):08d}", snap):
+            self.stats["telemetry_writes"] += 1
+        else:
+            self.stats["statestore_throttled"] += 1
+
+    def _stage_audit_tail(self) -> None:
+        audit = self.security.audit
+        if len(audit) > self._audit_cursor:
+            for rec in audit.records()[self._audit_cursor:]:
+                self._stage_write(f"audit/{next(self._write_seq):08d}", {
+                    "ts": rec.timestamp, "principal": rec.principal_id,
+                    "role": rec.role_name, "action": rec.action,
+                    "resource": rec.resource, "decision": rec.decision,
+                    "detail": rec.detail})
+            self._audit_cursor = len(audit)
+
+    def flush_telemetry(self) -> None:
+        """End-of-run epilogue: drain EVERY staged telemetry write plus a
+        final snapshot into the StateStore, advancing the virtual clock to
+        refill write capacity when throttled (each refusal still counts —
+        the wall is the wall, even during shutdown). ``step()`` never calls
+        this; benches and the CLI do, so runs end with a complete table."""
+        store = self.telemetry_store
+        if store is None:
+            return
+        self._stage_audit_tail()
+        while self._pending_writes:
+            key, item = self._pending_writes[0]
+            if store.try_put_item(key, item):
+                self._pending_writes.popleft()
+                self.stats["telemetry_writes"] += 1
+            else:
+                self.stats["statestore_throttled"] += 1
+                self.clock.advance(1.0)
+        key = f"metrics/{next(self._write_seq):08d}"
+        snap = self.registry.snapshot()
+        while not store.try_put_item(key, snap):
+            self.stats["statestore_throttled"] += 1
+            self.clock.advance(1.0)
+        self.stats["telemetry_writes"] += 1
 
     # -- user API ------------------------------------------------------------
     def submit(self, token: SessionToken, prompt: list[int], *,
@@ -308,6 +584,8 @@ class KottaServeGateway:
                 break
         self.jobs[rid] = job
         self._queue.append(job)
+        self._m_requests.inc(1, tenant=job.tenant,
+                             **{"class": self._job_class(job)})
         return rid
 
     def result(self, rid: int) -> list[int]:
@@ -357,6 +635,7 @@ class KottaServeGateway:
         self._check_revocations(now)
         evac_s = self._evacuate_noticed(now)
         self._heartbeats(now)
+        self._observe_health(now)
         self._drain_unhealthy(now)
         self._resume_paused(now)
         self._shed_and_order(now)
@@ -365,6 +644,7 @@ class KottaServeGateway:
         self._autoscale(now)
         tick = work_s if work_s > 0 else self.idle_tick_s
         self._accrue(now, tick)
+        self._flush_telemetry(now)
         self.clock.advance(tick)
 
     # -- replica accessors ------------------------------------------------------
@@ -553,31 +833,43 @@ class KottaServeGateway:
         Budgeting is per request against the remaining window: estimated
         ship time is ``page_nbytes() x ceil(pos/page_size)`` at the service
         model's wire rate, accumulated across requests (they share the
-        instance's uplink). PAUSED requests go first — they are pure parked
-        state and as cheap to ship as anything — then live slots
-        mid-decode. Whatever does not fit restarts from the queue with
-        backoff. The exported payloads live in the gateway's handoff queue,
-        NOT on the replica, so they survive the instance's death even if
-        delivery takes a few rounds.
+        instance's uplink). Export order is **tightest deadline first**
+        across paused AND live requests: when the window cannot carry
+        everything, the budget goes to the requests with the least slack —
+        a loose-deadline request survives a requeue-with-backoff, an urgent
+        one does not (deadline ties keep the old paused-then-live order).
+        Whatever does not fit restarts from the queue with backoff. The
+        exported payloads live in the gateway's handoff queue, NOT on the
+        replica, so they survive the instance's death even if delivery
+        takes a few rounds.
         """
         eng = r.engine
         budget = r.notice_deadline - now
         spent = 0.0
         page_b = eng.page_nbytes()
         ps = eng.page_size
-        exports: list[ShippedKV] = []
+        # (deadline, kind, handle, est ship seconds); stable sort on the
+        # deadline alone preserves paused-then-live insertion order on ties.
+        cands: list[tuple[float, str, int, float]] = []
         for entry in [e for e in self._paused if e.replica is r]:
-            est = self.model.ship_s(
-                page_b * math.ceil(entry.paused.pos / ps))
-            if spent + est <= budget:
-                exports.append(eng.export_paused(entry.paused.req.rid))
-                spent += est
+            dl = self.jobs[entry.paused.req.rid].deadline
+            cands.append((math.inf if dl is None else dl, "paused",
+                          entry.paused.req.rid,
+                          self.model.ship_s(
+                              page_b * math.ceil(entry.paused.pos / ps))))
         for slot in sorted(eng._live):
-            est = self.model.ship_s(
-                page_b * math.ceil(int(eng._pos[slot]) / ps))
-            if spent + est <= budget:
-                exports.append(eng.export_pages(slot))
-                spent += est
+            dl = self.jobs[eng._live[slot].req.rid].deadline
+            cands.append((math.inf if dl is None else dl, "live", slot,
+                          self.model.ship_s(
+                              page_b * math.ceil(int(eng._pos[slot]) / ps))))
+        cands.sort(key=lambda c: c[0])
+        exports: list[ShippedKV] = []
+        for _, kind, handle, est in cands:
+            if spent + est > budget:
+                continue
+            exports.append(eng.export_paused(handle) if kind == "paused"
+                           else eng.export_pages(handle))
+            spent += est
         for payload in exports:
             rid = payload.req.rid
             job = self.jobs[rid]
@@ -658,6 +950,7 @@ class KottaServeGateway:
         backoff — or shed it, typed, when its retry budget is spent."""
         job.tokens = None
         job.started_at = None       # restarts from scratch: TTFT resets
+        job.dispatched_at = None
         job.replica = None
         job.disturbed_at = now
         job.recovered_at = None
@@ -669,6 +962,7 @@ class KottaServeGateway:
                 f"(budget {self.retry_budget}); shedding, not spinning")
             job.finished_at = now
             self.stats["shed"] += 1
+            self._observe_shed(job, job.error.reason, now)
             self.security.audit.append(AuditRecord(
                 timestamp=now, principal_id=job.tenant,
                 role_name="serve-gateway", action="serve:Requeue",
@@ -704,6 +998,7 @@ class KottaServeGateway:
             job.requeued = job.requeued or requeued
             job.tokens = None
             job.started_at = None       # restarts from scratch: TTFT resets
+            job.dispatched_at = None
             job.replica = None
             r.jobs.discard(req.rid)
             self._queue.append(job)
@@ -766,6 +1061,7 @@ class KottaServeGateway:
             job.error = err
             job.finished_at = now
             self.stats["shed"] += 1
+            self._observe_shed(job, err.reason, now)
         self._queue = self.admission.order(keep, now)
 
     # -- decode preemption -------------------------------------------------------
@@ -928,6 +1224,8 @@ class KottaServeGateway:
                                            job.namespace))
             job.status = JobState.RUNNING
             job.replica = r.id
+            if job.dispatched_at is None:
+                job.dispatched_at = now
             r.jobs.add(job.rid)
             r.dispatched += 1
             for v in views:
@@ -1084,6 +1382,7 @@ class KottaServeGateway:
                     r.jobs.discard(req.rid)
                     self.completed_order.append(req.rid)
                     self.stats["tokens"] += len(toks)
+                    self._observe_completion(job)
             elif eng.queued:
                 # Admission produced nothing (transient page pressure, e.g.
                 # a paused request's pinned pages): give the QUEUED requests
@@ -1119,7 +1418,7 @@ class KottaServeGateway:
 
     def _launch(self, now: float, ready_now: bool = False) -> _Replica:
         engine = self._standby.pop() if self._standby \
-            else self._engine_factory()
+            else self._bind_engine(self._engine_factory())
         zone = None
         if self.market is not None:
             zone = self.market.cheapest_zone(self.instance_type,
@@ -1144,6 +1443,7 @@ class KottaServeGateway:
         # mutating if relaunched, so the mirror must restart anyway).
         self.router.forget(r.id)
         self._fp_tracker.forget(r.id)
+        self._health_seen.pop(r.id, None)
         if terminated:
             self.stats["terminations"] += 1
 
@@ -1265,4 +1565,13 @@ class KottaServeGateway:
                                          / ships if ships else 0.0),
             "handoffs_in_flight": len(self._handoffs),
             "per_replica": per_replica,
+            "slo_burn_rate": self._slo_burn_rate(),
+            "telemetry_flushes": self.stats["telemetry_flushes"],
+            "telemetry_writes": self.stats["telemetry_writes"],
+            "telemetry_dropped": self.stats["telemetry_dropped"],
+            "statestore_throttled": self.stats["statestore_throttled"],
         }
+
+    def _slo_burn_rate(self) -> float:
+        self.registry.collect()
+        return self.registry.value("kotta_slo_burn_rate")

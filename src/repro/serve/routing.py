@@ -35,6 +35,7 @@ import statistics
 from dataclasses import dataclass, field
 
 from .paging import chain_hashes
+from .telemetry import RegistryDict
 
 HEALTH_UP = "up"
 HEALTH_DEGRADED = "degraded"
@@ -110,6 +111,25 @@ class FleetRouter:
         self._health: dict[int, list] = {}
         self.stats = {"affinity": 0, "least_loaded": 0, "blind": 0,
                       "imbalance_cap": 0, "matched_tokens": 0}
+
+    def bind_registry(self, registry) -> None:
+        """Swap ``stats`` for a write-through view over ``registry`` series
+        (``kotta_routing_decisions_total{reason=...}`` plus matched-token
+        counter). Call sites keep mutating ``stats`` as a plain dict;
+        totals accumulated before binding carry into the series."""
+        decisions = registry.counter(
+            "kotta_routing_decisions_total",
+            "Dispatch routing decisions by outcome", ("reason",))
+        matched = registry.counter(
+            "kotta_routing_matched_tokens_total",
+            "Prefill tokens matched to resident prefix pages by routing")
+        rd = RegistryDict()
+        for reason in ("affinity", "least_loaded", "blind", "imbalance_cap"):
+            rd.bind(reason, decisions, initial=self.stats[reason],
+                    reason=reason)
+        rd.bind("matched_tokens", matched,
+                initial=self.stats["matched_tokens"])
+        self.stats = rd
 
     # -- health --------------------------------------------------------------
     def heartbeat(self, replica_id: int, now: float,

@@ -199,6 +199,48 @@ def test_fault_recovery_no_evacuations_fails(tmp_path):
     assert "fault_recovery.evacuate.evacuations" in res.stdout
 
 
+def test_saturation_max_sustained_drop_fails(tmp_path):
+    """The saturation wall is deterministic on the virtual clock, so the
+    max sustained req/s at the 99% bar gates exactly — an admission or
+    scheduling slip that drops it a load point must fail."""
+    def drop(gateway):
+        gateway["saturation"]["max_sustained_req_s"] *= 0.5
+    res = _run(_candidates(tmp_path, gateway_edit=drop))
+    assert res.returncode != 0
+    assert "saturation.max_sustained_req_s" in res.stdout
+
+
+def test_saturation_sharding_win_loss_fails(tmp_path):
+    """Sharded throttles climbing back to the single-table count means the
+    write wall silently returned — gated as a binary."""
+    def regress(gateway):
+        s = gateway["saturation"]["statestore"]
+        s["throttled_sharded"] = s["throttled_single"]
+    res = _run(_candidates(tmp_path, gateway_edit=regress))
+    assert res.returncode != 0
+    assert "saturation.sharding_cuts_throttles" in res.stdout
+
+
+def test_missing_metric_family_fails_schema_gate(tmp_path):
+    """An instrumentation refactor that drops a registry family breaks
+    every dashboard scraping it: the schema gate names the family."""
+    def drop_family(gateway):
+        fams = gateway["saturation"]["metric_families"]
+        fams.remove("kotta_tenant_cost_usd_total")
+    res = _run(_candidates(tmp_path, gateway_edit=drop_family))
+    assert res.returncode != 0
+    assert "kotta_tenant_cost_usd_total" in res.stdout
+    assert "metric_families" in res.stdout
+
+
+def test_absent_saturation_section_fails(tmp_path):
+    def strip(gateway):
+        del gateway["saturation"]
+    res = _run(_candidates(tmp_path, gateway_edit=strip))
+    assert res.returncode != 0
+    assert "saturation" in res.stdout
+
+
 def test_within_tolerance_noise_passes(tmp_path):
     """Small same-direction noise (5%) stays green — the gate is a
     regression check, not an exact-match check."""

@@ -335,6 +335,60 @@ def test_notice_too_short_falls_back_to_requeue(model, gold_engine):
     assert len(_audit(sec, "serve:Requeue", "allow")) >= 1
 
 
+def test_notice_window_prioritizes_tightest_deadline(model):
+    """When the notice window can ship only ONE of two live slots, the
+    budget goes to the tighter deadline: the urgent job evacuates (zero
+    retries), the slack one falls back to requeue + backoff."""
+    import math
+
+    cfg, _ = model
+    sec, tok = _security("alice")
+    page_b = _engine(model).page_nbytes()
+    # 1 KV page ships per second: per-slot est = page-count seconds, so the
+    # test can size the window in whole pages.
+    svc = ServiceModel(decode_step_s=0.05, kv_ship_bytes_per_s=page_b)
+    gw = _gateway(model, sec,
+                  scaling=ScalingPolicy.none(2, market="on_demand"),
+                  service_model=svc, backoff_base_s=1.0,
+                  engine_kw={"decode_chunk": 4})
+    prompt = _prompt(cfg, 16, seed=88)          # >= 2 pages before decoding
+    slack = gw.submit(tok["alice"], prompt, max_new=24)     # no deadline
+    victim = _mid_decode_replica(gw)
+    # Same tenant + same prompt => prefix-affinity co-places the urgent job
+    # on the replica already holding the slack one.
+    urgent = gw.submit(tok["alice"], prompt, max_new=24, deadline_s=120.0)
+    for _ in range(400):
+        live = {l.req.rid for l in victim.engine._live.values()
+                if 0 < l.emitted < l.req.max_new}
+        if live == {slack, urgent}:
+            break
+        gw.step()
+    else:
+        pytest.fail("jobs never decoded together on one replica")
+
+    eng = victim.engine
+    est = {eng._live[s].req.rid:
+           math.ceil(int(eng._pos[s]) / eng.page_size)   # seconds per slot
+           for s in eng._live}
+    # Window: urgent fits (plus a round of drift), urgent + slack does not.
+    gw.revoke_replica(victim.id, notice_s=est[urgent] + 1.6)
+    gw.drain()
+
+    uj, sj = gw.jobs[urgent], gw.jobs[slack]
+    assert uj.evacuations == 1 and uj.retries == 0
+    assert sj.evacuations == 0 and sj.retries == 1
+    m = gw.metrics()
+    assert m["evacuations"] == 1 and m["requeues"] >= 1
+    assert m["completed"] == 2 and m["shed"] == 0
+    # Both still finish token-identically to an undisturbed engine.
+    gold = _engine(model)
+    want = gold.generate([prompt], max_new=24).tokens[0]
+    for rid in (urgent, slack):
+        np.testing.assert_array_equal(want,
+                                      np.asarray(gw.result(rid), np.int32))
+    assert f"job {urgent}" in _audit(sec, "serve:Evacuate", "allow")[0].detail
+
+
 def test_retry_budget_exhaustion_sheds_typed(model):
     """A job that keeps losing its replica is shed with a typed
     RetryBudgetExhausted after the budget, never requeued hot."""

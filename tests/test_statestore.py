@@ -1,0 +1,156 @@
+"""StateStore overload behavior: token-bucket refill math, non-blocking
+try_* throttle accounting, and the sharding move — a ShardedStateStore
+with N partitions of the same per-shard capacity sustains ~N x the write
+rate of a single table (the paper's Fig-6 scaling fix)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.clock import VirtualClock
+from repro.core.scheduler import ShardedStateStore, StateStore, _TokenBucket
+
+
+# ---------------------------------------------------------------------------
+# Token bucket: refill math
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_starts_full_and_refills_at_rate():
+    clock = VirtualClock()
+    tb = _TokenBucket(10.0, clock)
+    # Burst = rate: exactly 10 immediate acquires, the 11th refuses.
+    assert all(tb.try_acquire() for _ in range(10))
+    assert not tb.try_acquire()
+    # 0.5s refills 5 tokens — not 6.
+    clock.advance(0.5)
+    assert all(tb.try_acquire() for _ in range(5))
+    assert not tb.try_acquire()
+
+
+def test_token_bucket_refill_caps_at_burst():
+    clock = VirtualClock()
+    tb = _TokenBucket(4.0, clock)
+    clock.advance(100.0)               # idle forever != unbounded credit
+    assert all(tb.try_acquire() for _ in range(4))
+    assert not tb.try_acquire()
+
+
+def test_token_bucket_blocking_acquire_waits_out_shortfall():
+    # acquire() parks on VirtualClock.sleep until a DRIVER advances the
+    # clock — which is why the single-threaded gateway (which IS the
+    # driver) must use try_acquire instead (it would deadlock here).
+    clock = VirtualClock()
+    tb = _TokenBucket(2.0, clock)
+    for _ in range(2):
+        tb.acquire()
+    woke = []
+    worker = threading.Thread(
+        target=lambda: (tb.acquire(), woke.append(clock.now())))
+    worker.start()
+    deadline = time.monotonic() + 5.0
+    while clock.pending_wakeups() == 0:       # worker parked on the clock
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    clock.advance(0.25)                       # half the 0.5s shortfall
+    time.sleep(0.01)
+    assert not woke                           # still short 0.5 tokens
+    clock.advance(0.25)
+    worker.join(timeout=5.0)
+    assert woke == [pytest.approx(0.5)]
+
+
+# ---------------------------------------------------------------------------
+# StateStore: try_* throttle accounting
+# ---------------------------------------------------------------------------
+
+def test_try_put_counts_throttles_and_drops_nothing_silently():
+    clock = VirtualClock()
+    store = StateStore(clock=clock, write_capacity=5.0)
+    ok = [store.try_put_item(f"k{i}", {"i": i}) for i in range(8)]
+    assert ok == [True] * 5 + [False] * 3
+    assert store.write_count == 5
+    assert store.throttled_writes == 3
+    assert len(store.scan()) == 5       # refused writes left no item
+    clock.advance(1.0)                  # 5 tokens back
+    assert store.try_put_item("late", {})
+    assert store.throttled_writes == 3  # success does not touch the counter
+
+
+def test_try_get_distinguishes_throttle_from_absent():
+    clock = VirtualClock()
+    store = StateStore(clock=clock, read_capacity=1.0)
+    store.put_item("k", {"v": 1})
+    ok, item = store.try_get_item("k")
+    assert ok and item == {"v": 1}
+    ok, item = store.try_get_item("k")          # bucket empty
+    assert (ok, item) == (False, None)
+    assert store.throttled_reads == 1
+    clock.advance(1.0)
+    ok, item = store.try_get_item("missing")    # absent but NOT throttled
+    assert (ok, item) == (True, None)
+
+
+def test_try_update_creates_and_merges():
+    clock = VirtualClock()
+    store = StateStore(clock=clock, write_capacity=2.0)
+    assert store.try_update_item("job", status="queued")
+    assert store.try_update_item("job", status="done", tokens=7)
+    assert not store.try_update_item("job", lost=True)
+    assert store.get_item("job") == {"status": "done", "tokens": 7}
+
+
+# ---------------------------------------------------------------------------
+# ShardedStateStore: N shards sustain ~N x the write rate
+# ---------------------------------------------------------------------------
+
+def _offered_writes(store, rate_per_s: float, duration_s: float, clock):
+    """Open-loop write stream at ``rate_per_s`` against ``store``;
+    returns (accepted, throttled)."""
+    n = int(rate_per_s * duration_s)
+    accepted = 0
+    for i in range(n):
+        clock.advance(duration_s / n)
+        if store.try_put_item(f"metrics/{i:06d}", {"i": i}):
+            accepted += 1
+    return accepted, store.throttled_writes
+
+
+def test_sharded_store_sustains_4x_single_table_write_rate():
+    # Offered 80 w/s against 20 w/s tables: a single table throttles ~3/4
+    # of the stream; 4 shards of the same per-shard capacity absorb it.
+    rate, dur, cap = 80.0, 10.0, 20.0
+    clock1 = VirtualClock()
+    single = StateStore(clock=clock1, write_capacity=cap)
+    acc1, thr1 = _offered_writes(single, rate, dur, clock1)
+
+    clock4 = VirtualClock()
+    sharded = ShardedStateStore(4, clock=clock4, write_capacity=cap)
+    acc4, thr4 = _offered_writes(sharded, rate, dur, clock4)
+
+    assert thr1 > 0                      # the single table genuinely walls
+    # Sustained rates: ~cap for the single table, ~4x cap for the shards
+    # (crc32 spreads sequential keys unevenly, so allow a 25% haircut).
+    assert acc1 <= cap * dur * 1.2
+    assert acc4 >= 3.0 * acc1
+    assert thr4 < thr1
+    assert len(sharded.scan("metrics/")) == acc4
+    assert sharded.write_count == acc4   # aggregate property sums shards
+
+
+def test_sharded_store_routes_keys_stably_and_merges_scans():
+    clock = VirtualClock()
+    store = ShardedStateStore(4, clock=clock, write_capacity=1000.0)
+    keys = [f"servejob/{i}" for i in range(32)]
+    for k in keys:
+        store.put_item(k, {"k": k})
+    # Every key reads back from the shard that holds it, and at least two
+    # shards got traffic (crc32 actually spreads the space).
+    for k in keys:
+        assert store.get_item(k) == {"k": k}
+    assert sum(1 for s in store.shards if s.write_count) >= 2
+    assert set(store.scan("servejob/")) == set(keys)
+
+
+def test_sharded_store_validates_shard_count():
+    with pytest.raises(ValueError, match="shards"):
+        ShardedStateStore(0)
