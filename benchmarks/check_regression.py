@@ -98,6 +98,22 @@ def _fault_goodput_ratio(r: dict) -> float:
             / f["requeue"]["tok_per_sim_s"])
 
 
+def _resume_ttft_ratio(r: dict) -> float:
+    s = r["session_resume"]
+    return (s["reprefill"]["resumed_ttft_mean_s"]
+            / s["tiered"]["resumed_ttft_mean_s"])
+
+
+def _resume_usd_per_1k(r: dict) -> float:
+    t = r["session_resume"]["tiered"]
+    return ((t["cost_usd"] + t["storage_cost_usd"]) * 1e3
+            / max(t["resumed_tokens_out"], 1))
+
+
+def _resume_restores(r: dict) -> float:
+    return r["session_resume"]["tiered"]["kv_restores"]
+
+
 @dataclass(frozen=True)
 class Metric:
     """One gated metric.
@@ -187,6 +203,29 @@ METRICS = [
     Metric("gateway", "fault_recovery.evacuate.evacuations",
            lambda r: r["fault_recovery"]["evacuate"]["evacuations"],
            "higher", 0.0),
+    # Session resume: tier restores must keep beating re-prefill on the
+    # same trace. Ratio and $/1k recomputed from the raw per-mode fields
+    # (virtual clock, host-independent). Token identity across
+    # demote/restore — f32 AND the int8 scale-page leg — is binary: any
+    # divergence means a tier round-trip corrupted a page. The restore
+    # count is structural (trace + demotion state, no numerics), so it
+    # gates EXACTLY in both directions: a drop means resumes stopped
+    # coming back through the store, a rise means the device radix or the
+    # affinity skip quietly broke.
+    Metric("gateway", "session_resume.resumed_ttft_ratio",
+           _resume_ttft_ratio, "higher", 0.25),
+    Metric("gateway", "session_resume.tiered.usd_per_1k_resumed_tokens",
+           _resume_usd_per_1k, "lower", 0.15),
+    Metric("gateway", "session_resume.tiered.kv_restores",
+           _resume_restores, "higher", 0.0),
+    Metric("gateway", "session_resume.tiered.kv_restores(upper)",
+           _resume_restores, "lower", 0.0),
+    Metric("gateway", "session_resume.token_identity",
+           lambda r: 1.0 if r["session_resume"]["token_identity"] else 0.0,
+           "higher", 0.0),
+    Metric("gateway", "session_resume.int8_token_identity",
+           lambda r: (1.0 if r["session_resume"]["int8_token_identity"]
+                      else 0.0), "higher", 0.0),
     # Saturation: open-loop offered-load sweep on the virtual clock. The
     # max sustained rate at the 99% bar is deterministic, so it gates
     # exactly — an admission/scheduling slip that drops the wall a whole

@@ -52,6 +52,17 @@ provisioning: makespan / cost / wait) plus its §VI isolation guarantees:
    Recovered-TTFT ratio requeue/evacuate and goodput ratio evacuate/requeue
    are the headlines; tokens must be identical across all three modes.
 
+6. ``session_resume``: an open-loop trace where a fraction of sessions
+   come back after an exponential cold gap (``loadgen`` resume class), run
+   **tiered** (a :class:`~repro.serve.kv_store.TieredKVStore` demotes
+   finished sessions' pages to HOST, spills to OBJECT under a tiny HOST
+   cap, and restores them asynchronously when the resume arrives) vs
+   **reprefill** (no store — resumes pay full prefill) on the identical
+   trace. Mean resumed TTFT ratio and $/1k resumed tokens (compute +
+   storage GB-hours) are the headlines; greedy tokens must be identical
+   across both modes (f32 AND an int8-KV leg), proving demote/restore
+   preserves page contents bit-exactly.
+
 Results land in ``BENCH_gateway.json`` alongside the CSV rows that
 ``benchmarks/run.py`` prints. ``--smoke`` runs a one-burst subset for CI
 (control-plane breakage, not numbers). Any scenario failure is recorded in
@@ -80,8 +91,8 @@ from repro.models import get_family
 from repro.models.params import init_params
 from repro.serve import (ContinuousBatchingEngine, DeadlineCostPolicy,
                          FaultEvent, FaultInjector, JobState,
-                         KottaServeGateway, ServiceModel, TrafficConfig,
-                         generate_trace, run_open_loop)
+                         KottaServeGateway, ServiceModel, TieredKVStore,
+                         TrafficConfig, generate_trace, run_open_loop)
 from repro.serve.loadgen import offered_load
 
 ARCH = "yi-6b"
@@ -715,6 +726,221 @@ def _bench_fault_recovery(cfg, params, verbose, results,
 
 
 # ---------------------------------------------------------------------------
+# session_resume: tiered KV hierarchy vs re-prefill on cold-gap resumes
+# ---------------------------------------------------------------------------
+# Prefill-heavy service point (same regime as fleet_routing /
+# fault_recovery). TTFT here is queue wait on the virtual clock, so the
+# re-prefill tax must surface as *congestion*: the offered fresh-prefill
+# load is sized so that re-prefilling every resumed conversation pushes
+# the replica past its 64 tok/s prefill budget (queues build, resumed
+# TTFT climbs) while tier restores — which re-register the stream as
+# cached pages and prefill only the fresh user turn — keep it under.
+SR_SERVICE = ServiceModel(prefill_tok_per_s=64.0, decode_step_s=0.01)
+SR_SLOTS = 4
+# Free pool beyond the ~20 pages the live slots hold is recycled many
+# times over inside a cold gap at this arrival rate, so a finished
+# session's device copy is churned out and the resume MUST come back
+# through the tier store, not the device radix.
+SR_NUM_PAGES = 40
+SR_MAX_NEW = 6
+SR_DURATION_S = 10.0
+SR_SMOKE_DURATION_S = 5.0
+SR_RATE_RPS = 6.0
+SR_RESUME_FRACTION = 0.7
+# Short enough that most resumes land while the trace is still offering
+# load (an idle fleet admits a re-prefill in the same round and hides the
+# tax), long enough for the pool churn above to evict the device copy.
+SR_COLD_GAP_S = 2.0
+# HOST tier sized to a handful of resident streams: later demotions spill
+# earlier ones to OBJECT, so restores exercise both tier depths.
+SR_HOST_CAP_BYTES = 48 * 1024
+
+
+def _sr_store():
+    return TieredKVStore(host_capacity_bytes=SR_HOST_CAP_BYTES,
+                         host_restore_bytes_per_s=2e8,
+                         object_restore_bytes_per_s=2.5e7,
+                         object_restore_base_s=0.05)
+
+
+def _sr_traffic(cfg, duration_s):
+    return TrafficConfig(
+        duration_s=duration_s, base_rate_rps=SR_RATE_RPS,
+        tenants=len(TENANTS), seed=11, vocab_size=cfg.vocab_size,
+        # Near-uniform users: sessions are DISTINCT conversations. Heavy
+        # Zipf skew would hand the re-prefill baseline the resumed
+        # session's whole stream for free off a same-user sibling's
+        # device-cached pages, erasing exactly the cost under test.
+        zipf_alpha=1.05,
+        prefix_tokens=PREFIX_LEN, tail_tokens_min=2, tail_tokens_max=6,
+        interactive_deadline_s=600.0, batch_deadline_s=600.0,
+        interactive_max_new=SR_MAX_NEW, batch_max_new=SR_MAX_NEW,
+        resume_fraction=SR_RESUME_FRACTION, cold_gap_mean_s=SR_COLD_GAP_S,
+        resume_tail_tokens=4)
+
+
+def _bench_session_resume(cfg, params, verbose, results,
+                          duration_s=SR_DURATION_S):
+    """Resumed-session TTFT and $ with the tiered KV hierarchy vs re-prefill.
+
+    One loadgen trace with ``resume_fraction`` sessions coming back after
+    an exponential cold gap, run twice on an identical single-replica
+    fleet: ``tiered`` attaches a :class:`TieredKVStore` (finished
+    sessions' pages demote to HOST, spill to OBJECT under the deliberately
+    tiny HOST cap, and resumes park RESTORE_PENDING on the async restore),
+    ``reprefill`` runs bare (resumes pay full prefill). The trace offers
+    just over the replica's prefill budget *if* every resume re-prefills —
+    so in ``reprefill`` mode queues build and resumed TTFT (queue wait on
+    the virtual clock) climbs, while ``tiered`` restores keep the offered
+    fresh-token load under budget. Headlines: mean resumed TTFT ratio
+    reprefill/tiered and $/1k resumed tokens (compute + storage GB-hours);
+    greedy tokens must be identical across both modes for every request,
+    or demote/restore corrupted a page. A scripted int8 leg re-checks
+    identity with ``kv_cache_dtype="int8"`` engines (scale pages
+    demote/restore alongside data pages).
+    """
+    tc = _sr_traffic(cfg, duration_s)
+    trace = generate_trace(tc)
+    resumes = sum(1 for a in trace if a.resumed)
+    assert resumes > 0, "session_resume trace generated no resumes"
+
+    # Deferred resumes submit at mode-dependent times (the reply must land
+    # first), so submission ORDER differs across modes — identity compares
+    # by trace position, never by rid order.
+    arrival_pos = {id(a): k for k, a in enumerate(trace)}
+
+    def run_mode(store):
+        sec, tokens = _security()
+        gw = KottaServeGateway(
+            _factory(cfg, params, max_slots=SR_SLOTS,
+                     num_pages=SR_NUM_PAGES), sec,
+            scaling=ScalingPolicy.none(1, market="on_demand"),
+            service_model=SR_SERVICE, idle_tick_s=0.1,
+            kv_store=store)
+        toks = [tokens[t] for t in TENANTS]
+        rid_by_pos: dict[int, int] = {}
+        resumed_rids: list[int] = []
+
+        def on_submit(a, rid):
+            rid_by_pos[arrival_pos[id(a)]] = rid
+            if a.resumed:
+                resumed_rids.append(rid)
+
+        run_open_loop(gw, toks, trace, max_rounds=100_000,
+                      on_submit=on_submit)
+        assert len(rid_by_pos) == len(trace), \
+            "session_resume: not every arrival was submitted"
+        assert all(gw.jobs[r].status is JobState.DONE
+                   for r in rid_by_pos.values()), \
+            "session_resume: not every job finished"
+        m = gw.metrics()
+        rttft = [gw.jobs[r].started_at - gw.jobs[r].submitted_at
+                 for r in resumed_rids]
+        m["resumed_jobs"] = len(resumed_rids)
+        m["resumed_ttft_mean_s"] = sum(rttft) / max(len(rttft), 1)
+        m["resumed_tokens_out"] = sum(len(gw.jobs[r].tokens)
+                                      for r in resumed_rids)
+        m["usd_per_1k_resumed_tokens"] = (
+            (m["cost_usd"] + m["storage_cost_usd"]) * 1e3
+            / max(m["resumed_tokens_out"], 1))
+        m["tokens_by_pos"] = [gw.result(rid_by_pos[k])
+                              for k in range(len(trace))]
+        return m
+
+    out = {"tiered": run_mode(_sr_store()), "reprefill": run_mode(None)}
+    identity = (out["tiered"]["tokens_by_pos"]
+                == out["reprefill"]["tokens_by_pos"])
+    for m in out.values():      # token lists verified; keep the JSON lean
+        del m["tokens_by_pos"]
+    assert identity, \
+        "session_resume: tokens diverged across demote/restore"
+    assert out["tiered"]["kv_demotions"] > 0, \
+        "session_resume[tiered]: nothing demoted"
+    assert out["tiered"]["kv_restores"] > 0, \
+        "session_resume[tiered]: no resume came back through the store"
+
+    # int8 leg: one scripted session through demote -> restore -> resume
+    # with an int8 KV pool, against an int8 never-demoted oracle. Scale
+    # pages ride the payload's content dict; identity must still hold.
+    def int8_mode(store):
+        sec, tokens = _security()
+        # Pool deliberately tight (the scripted churn below must evict the
+        # base session's device copy, else the affinity skip serves it
+        # from the device radix and no restore happens).
+        gw = KottaServeGateway(
+            _factory(cfg, params, max_slots=2,
+                     num_pages=20, kv_cache_dtype="int8"), sec,
+            scaling=ScalingPolicy.none(1, market="on_demand"),
+            service_model=SR_SERVICE, idle_tick_s=0.1, kv_store=store)
+        tok = tokens[TENANTS[0]]
+        rng = np.random.RandomState(23)
+        base = rng.randint(0, cfg.vocab_size, size=PREFIX_LEN).tolist()
+        r1 = gw.submit(tok, base, max_new=SR_MAX_NEW, data_zone="public")
+        gw.drain()
+        reply = gw.result(r1)
+        # Churn the device pool so the resume cannot hit the device radix.
+        for s in range(3):
+            gw.submit(tok, rng.randint(0, cfg.vocab_size,
+                                       size=PREFIX_LEN).tolist(),
+                      max_new=SR_MAX_NEW, data_zone="public")
+        gw.drain()
+        tail = rng.randint(0, cfg.vocab_size, size=4).tolist()
+        r2 = gw.submit(tok, base + reply + tail, max_new=SR_MAX_NEW,
+                       data_zone="public")
+        gw.drain()
+        return reply, gw.result(r2), gw.metrics()
+
+    i8_reply, i8_resume, i8_m = int8_mode(_sr_store())
+    i8_reply0, i8_resume0, _ = int8_mode(None)
+    int8_identity = i8_reply == i8_reply0 and i8_resume == i8_resume0
+    assert int8_identity, "session_resume[int8]: tokens diverged"
+    assert i8_m["kv_restores"] >= 1, \
+        "session_resume[int8]: resume did not restore through the store"
+
+    ttft_ratio = (out["reprefill"]["resumed_ttft_mean_s"]
+                  / max(out["tiered"]["resumed_ttft_mean_s"],
+                        SR_SERVICE.decode_step_s))
+    results["session_resume"] = {
+        "arrivals": len(trace), "resumes": resumes,
+        "resume_fraction": SR_RESUME_FRACTION,
+        "cold_gap_mean_s": SR_COLD_GAP_S,
+        "host_capacity_bytes": SR_HOST_CAP_BYTES,
+        "tiered": out["tiered"], "reprefill": out["reprefill"],
+        "token_identity": identity, "int8_token_identity": int8_identity,
+        "int8_restores": i8_m["kv_restores"],
+        "resumed_ttft_ratio_reprefill_over_tiered": ttft_ratio}
+    if verbose:
+        print(f"\n== gateway: session resume through the tiered KV "
+              f"hierarchy ({len(trace)} arrivals, {resumes} resumes, "
+              f"cold gap ~{SR_COLD_GAP_S:.0f}s) ==")
+        print(f"{'mode':<11}{'res TTFT':>10}{'restores':>9}{'fallb':>7}"
+              f"{'demote':>8}{'spill':>7}{'$/1k res tok':>13}"
+              f"{'storage $':>11}")
+        for mode in ("tiered", "reprefill"):
+            m = out[mode]
+            spills = (m["kv_store"] or {}).get("spills", 0)
+            print(f"{mode:<11}{m['resumed_ttft_mean_s']:>9.3f}s"
+                  f"{m['kv_restores']:>9}{m['kv_restore_fallbacks']:>7}"
+                  f"{m['kv_demotions']:>8}{spills:>7}"
+                  f"{m['usd_per_1k_resumed_tokens']:>13.4f}"
+                  f"{m['storage_cost_usd']:>11.2e}")
+        print(f"headline: reprefill/tiered resumed TTFT = "
+              f"{ttft_ratio:.2f}x; token identity (f32 + int8) = "
+              f"{identity and int8_identity}")
+    t = out["tiered"]
+    return [("gateway.resume.tiered", t["resumed_ttft_mean_s"] * 1e6,
+             f"resumed_ttft_s={t['resumed_ttft_mean_s']:.3f};"
+             f"restores={t['kv_restores']};"
+             f"ttft_ratio_vs_reprefill={ttft_ratio:.2f}x"),
+            ("gateway.resume.reprefill",
+             out["reprefill"]["resumed_ttft_mean_s"] * 1e6,
+             f"resumed_ttft_s="
+             f"{out['reprefill']['resumed_ttft_mean_s']:.3f};"
+             f"usd_per_1k="
+             f"{out['reprefill']['usd_per_1k_resumed_tokens']:.4f}")]
+
+
+# ---------------------------------------------------------------------------
 # saturation: open-loop offered-load sweep + StateStore write wall (Fig-6)
 # ---------------------------------------------------------------------------
 # One static replica (SLOTS decode slots) swept with open-loop Poisson
@@ -920,6 +1146,9 @@ def run(verbose: bool = True, json_path: str | Path | None = JSON_PATH,
         ("fault_recovery", lambda: _bench_fault_recovery(
             cfg, params, verbose, results,
             jobs=FR_SMOKE_JOBS if smoke else FR_JOBS)),
+        ("session_resume", lambda: _bench_session_resume(
+            cfg, params, verbose, results,
+            duration_s=SR_SMOKE_DURATION_S if smoke else SR_DURATION_S)),
         ("saturation", lambda: _bench_saturation(
             cfg, params, verbose, results,
             duration_s=SAT_SMOKE_DURATION_S if smoke else SAT_DURATION_S)),

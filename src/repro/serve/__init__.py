@@ -1,13 +1,14 @@
 from .admission import (AdmissionError, AdmissionPolicy, CostBudgetExceeded,
                         DeadlineCostPolicy, DeadlineInfeasible, FCFSPolicy,
                         JobState, PreemptCandidate, RetryBudgetExhausted,
-                        ServeJob, ServiceModel)
+                        ServeJob, ServiceModel, StorageBudgetExceeded)
 from .drafting import build_ngram_draft
-from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
-                     ServeEngine, ServeResult, ShippedKV)
+from .engine import (ContinuousBatchingEngine, EngineRequest, ExportReason,
+                     PausedRequest, ServeEngine, ServeResult, ShippedKV)
 from .faults import FaultEvent, FaultInjector
 from .gateway import KottaServeGateway
-from .paging import PageAllocator, PrefixCache, chain_hashes
+from .kv_store import PageResidency, RestoreTicket, Tier, TieredKVStore
+from .paging import EvictionEvent, PageAllocator, PrefixCache, chain_hashes
 from .loadgen import Arrival, TrafficConfig, generate_trace, run_open_loop
 from .routing import (HEALTH_DEGRADED, HEALTH_QUARANTINED, HEALTH_UP,
                       FingerprintTracker, FleetRouter, ReplicaView,
@@ -26,4 +27,6 @@ __all__ = ["ServeEngine", "ContinuousBatchingEngine", "EngineRequest",
            "RetryBudgetExhausted", "FaultEvent", "FaultInjector",
            "build_ngram_draft", "MetricsRegistry", "RegistryDict",
            "parse_exposition", "LATENCY_BUCKETS_S", "TrafficConfig",
-           "Arrival", "generate_trace", "run_open_loop"]
+           "Arrival", "generate_trace", "run_open_loop", "ExportReason",
+           "EvictionEvent", "PageResidency", "RestoreTicket", "Tier",
+           "TieredKVStore", "StorageBudgetExceeded"]

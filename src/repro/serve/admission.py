@@ -68,10 +68,23 @@ class RetryBudgetExhausted(AdmissionError):
     reason = "retry_budget_exhausted"
 
 
+class StorageBudgetExceeded(AdmissionError):
+    """Demoting this tenant's KV pages would exceed its storage budget —
+    the tiered KV store refuses the demotion with a typed error instead of
+    silently dropping pages or billing past the cap."""
+
+    reason = "storage_budget_exceeded"
+
+
 class JobState(str, enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     PAUSED = "paused"        # decode-preempted; KV pages pinned on a replica
+    # Waiting on an async KV restore from a lower storage tier — the
+    # serving mirror of the batch scheduler's WAITING_DATA state: the job
+    # holds its queue position but dispatch won't touch it until the
+    # restore's modelled completion time passes.
+    RESTORE_PENDING = "restore_pending"
     DONE = "done"
     SHED = "shed"
 
@@ -119,6 +132,11 @@ class ServeJob:
     disturbed_at: Optional[float] = None
     recovered_at: Optional[float] = None
     evacuations: int = 0
+    # Tiered-KV restore accounting: how many async tier restores this job
+    # waited on (RESTORE_PENDING parks) and how many prompt tokens its
+    # admission served from restored pages instead of re-prefill.
+    restores: int = 0
+    restored_tokens: int = 0
 
 
 @dataclass(frozen=True)
@@ -212,13 +230,17 @@ class AdmissionPolicy:
     def plan(self, jobs: list[ServeJob], slot_free_s: list[float],
              now: float, price_per_slot_hour: float, *,
              cached_tokens: dict[int, int] | None = None,
+             extra_delay_s: dict[int, float] | None = None,
              ) -> tuple[list[ServeJob], list[tuple[ServeJob,
                                                    AdmissionError]]]:
         """Return (keep_ordered, shed) — FCFS keeps everything.
 
         ``cached_tokens`` maps job rid -> prompt tokens the routing tier
-        expects the chosen replica to serve from its prefix cache (ignored
-        by FCFS, which does no feasibility math).
+        expects the chosen replica to serve from its prefix cache;
+        ``extra_delay_s`` maps job rid -> pre-service latency the job must
+        absorb before it can start (e.g. an async KV restore from a lower
+        storage tier). Both are ignored by FCFS, which does no feasibility
+        math.
         """
         return self.order(jobs, now), []
 
@@ -260,7 +282,7 @@ class DeadlineCostPolicy(AdmissionPolicy):
             j.submitted_at, j.rid))
 
     def plan(self, jobs, slot_free_s, now, price_per_slot_hour, *,
-             cached_tokens=None):
+             cached_tokens=None, extra_delay_s=None):
         ordered = self.order(jobs, now)
         keep: list[ServeJob] = []
         shed: list[tuple[ServeJob, AdmissionError]] = []
@@ -270,10 +292,15 @@ class DeadlineCostPolicy(AdmissionPolicy):
             # Routing-aware feasibility: prompt tokens the router expects
             # the affinity target to serve from cache don't bill prefill
             # time, so a request that is only feasible ON its warm replica
-            # is kept instead of shed.
+            # is kept instead of shed. A pending tier restore adds its
+            # modelled latency up front (restore-latency-aware deadline
+            # feasibility): the job can't start until its pages are back,
+            # but once they are, the restored prefix prefills for free.
             cached = 0 if cached_tokens is None \
                 else cached_tokens.get(job.rid, 0)
             svc = self.model.service_s(len(job.prompt), job.max_new, cached)
+            if extra_delay_s is not None:
+                svc += max(0.0, extra_delay_s.get(job.rid, 0.0))
             if not job.requeued and job.cost_budget is not None:
                 est_cost = svc / 3600.0 * price_per_slot_hour
                 if est_cost > job.cost_budget:

@@ -94,6 +94,7 @@ path alive as an in-engine baseline/oracle.
 """
 from __future__ import annotations
 
+import enum
 import math
 import time
 from collections import deque
@@ -225,12 +226,31 @@ class PausedRequest:
     ema: float = 0.0
 
 
+class ExportReason(str, enum.Enum):
+    """Why a request's pages are leaving the device pool.
+
+    The one residency API (:meth:`ContinuousBatchingEngine.export`)
+    serves three movements that used to be parallel code paths —
+    cross-replica shipping and cross-tier demotion are two *transports*
+    behind the same gather:
+
+    - ``HANDOFF``: disaggregated prefill -> decode replica hop.
+    - ``EVACUATE``: revocation-notice migration off a dying replica.
+    - ``DEMOTE``: tier demotion into a :class:`~repro.serve.kv_store.TieredKVStore`
+      (device -> host/object storage instead of device -> device).
+    """
+
+    HANDOFF = "handoff"
+    EVACUATE = "evacuate"
+    DEMOTE = "demote"
+
+
 @dataclass
 class ShippedKV:
-    """A request's finished KV pages in flight between engines.
+    """A request's finished KV pages in flight between engines (or tiers).
 
     The disaggregated-serving handoff payload: a prefill-role replica runs
-    admission prefill, ``export_pages`` snapshots the request's *content*
+    admission prefill, ``export`` snapshots the request's *content*
     pages (the ``ceil(pos / page_size)`` pages actually holding KV rows —
     trailing decode-budget pages are empty and never ship) into host arrays,
     and ``import_pages`` on a decode-role replica re-registers everything:
@@ -265,16 +285,27 @@ class ShippedKV:
     hist: np.ndarray | None = None     # spec-decode drafting history, if any
     kslot: int = 0              # adaptive speculative window (0 = untracked)
     ema: float = 0.0            # accept-rate EMA riding along with kslot
-    consumed: bool = False      # set by a successful import_pages
+    consumed: bool = False      # set by a successful import / restore
+    reason: ExportReason = ExportReason.HANDOFF
 
     @property
     def n_content(self) -> int:
         return next(iter(self.content.values())).shape[2]
 
+    def page_nbytes(self) -> int:
+        """Bytes of ONE shipped page across every content leaf — int8 data
+        pages AND their f32 scale pages alike. The single source of truth
+        for per-page sizing: ship budgets, tier capacities and metrics all
+        multiply this by a page count, so no stats path can count data
+        pages while forgetting the scales."""
+        n = self.n_content
+        return sum(a.nbytes // n for a in self.content.values())
+
     @property
     def nbytes(self) -> int:
-        """Wire size of the shipped pages (data + scale pages alike)."""
-        return sum(a.nbytes for a in self.content.values())
+        """Wire size of the shipped pages (data + scale pages alike);
+        derived from :meth:`page_nbytes` so every sizing path agrees."""
+        return self.page_nbytes() * self.n_content
 
 
 def _next_pow2(n: int) -> int:
@@ -458,6 +489,14 @@ class ContinuousBatchingEngine:
         self._live: dict[int, _Live] = {}
         # Preempted requests parked host-side; their pages stay pinned.
         self._paused: dict[object, PausedRequest] = {}
+        # Tier demotion (set by the control plane when a TieredKVStore is
+        # attached): a finishing request's content pages are exported
+        # (reason=DEMOTE) *before* retirement and parked in ``demoted_out``
+        # for the gateway to drain into the store — so by the time
+        # eviction-on-realloc scrubs the index entries, the content already
+        # lives in a lower tier (demoted, not destroyed).
+        self.demote_on_retire = False
+        self.demoted_out: list[ShippedKV] = []
         # Admission queue, consumed front-first by ``admit``. The caller
         # controls its order: ``generate`` fills it FCFS, the gateway keeps
         # it policy-ordered (EDF within priority class).
@@ -632,12 +671,14 @@ class ContinuousBatchingEngine:
                    "spec_steps": 0, "spec_emitted": 0,
                    "preempted": 0, "resumed": 0,
                    "page_exports": 0, "page_imports": 0,
+                   "page_demotes": 0, "page_restores": 0,
                    "accept_ema_sum": 0.0, "accept_ema_n": 0}
     # Keys exported when bound to a MetricsRegistry; the scratch
     # accumulators (admit_seconds, accept EMA terms) stay local-only.
     _STAT_EXPORTED = ("admitted", "prefill_tokens", "cached_tokens",
                       "cow_copies", "spec_steps", "spec_emitted",
-                      "preempted", "resumed", "page_exports", "page_imports")
+                      "preempted", "resumed", "page_exports", "page_imports",
+                      "page_demotes", "page_restores")
 
     def _reset_stats(self):
         stats = getattr(self, "stats", None)
@@ -1095,49 +1136,49 @@ class ContinuousBatchingEngine:
         self.stats["resumed"] += 1
         return slot
 
-    # -- page shipping (disaggregated prefill/decode) ------------------------
-    def export_pages(self, slot: int) -> ShippedKV:
-        """Ship the request in ``slot`` out of this engine as a
-        :class:`ShippedKV` payload and free the slot.
+    # -- page residency (one export seam: cross-replica shipping and
+    # cross-tier demotion are two transports behind the same gather) ---------
+    def export(self, slot: int | None = None, *, rid: object = None,
+               reason: ExportReason = ExportReason.HANDOFF) -> ShippedKV:
+        """Ship a request out of this engine as a :class:`ShippedKV`.
+
+        THE residency exit point, unifying what used to be two parallel
+        methods: pass ``slot=`` for a live request (gathered, then retired
+        through the normal refcount path) or ``rid=`` for a request parked
+        by :meth:`preempt` (gathered, then its pin dropped). Exactly one
+        must be given — slot ints and caller rids can share values, so
+        positional guessing would be ambiguous. ``reason`` tags the payload
+        with *why* the pages left (handoff / evacuate / demote) without
+        changing the gather.
 
         Only *content* pages travel — the ``ceil(pos / page_size)`` pages
         holding prefilled (and already-decoded) KV rows; trailing pages
         allocated against the decode budget are empty and are simply
         released. Aliased prefix pages are gathered like any other page, so
-        the payload is always a self-contained private copy. The slot is
-        retired through the normal refcount path afterwards: this engine's
-        prefix-cache entries survive, keeping a prefill replica a valid
-        affinity target for the next request with the same prefix.
+        the payload is always a self-contained private copy; this engine's
+        prefix-cache entries survive, keeping the replica a valid affinity
+        target for the next request with the same prefix.
 
         Works mid-decode, not just post-prefill: a request that already
         emitted tokens ships its decoded KV rows, emitted tokens, and (spec
-        decode) its drafting history plus tuned kslot/accept-EMA — the
-        evacuation path a revocation notice triggers. Greedy decode at the
-        destination continues token-identically.
+        decode) its drafting history plus tuned kslot/accept-EMA. Greedy
+        decode continues token-identically wherever the payload lands.
         """
-        if slot not in self._live:
-            raise KeyError(f"slot {slot} has no live request to export")
-        live = self._live[slot]
-        hist = np.array(self._hist[slot]) if self.spec_decode else None
-        payload = self._export(
-            req=live.req, emitted=live.emitted, tokens=list(live.tokens),
-            cur=int(self._cur[slot]), pos=int(self._pos[slot]),
-            pages=live.pages, hist=hist, kslot=int(self._kslot[slot]),
-            ema=float(self._ema[slot]))
-        self._retire(slot)
-        return payload
-
-    def export_paused(self, rid: object) -> ShippedKV:
-        """Ship a PAUSED request out of this engine as a :class:`ShippedKV`.
-
-        The evacuation analogue of :meth:`export_pages` for requests parked
-        by :meth:`preempt`: the pinned content pages are gathered into a
-        self-contained payload, the pin is dropped (pages released through
-        the normal refcount path), and the parked cursor / history / tuned
-        speculation state ride along. Importing the payload elsewhere
-        revives the request as *live* — the slot pressure that paused it
-        was this replica's, not the fleet's.
-        """
+        if (slot is None) == (rid is None):
+            raise ValueError("export needs exactly one of slot= (live "
+                             "request) or rid= (paused request)")
+        if slot is not None:
+            if slot not in self._live:
+                raise KeyError(f"slot {slot} has no live request to export")
+            live = self._live[slot]
+            hist = np.array(self._hist[slot]) if self.spec_decode else None
+            payload = self._export(
+                req=live.req, emitted=live.emitted, tokens=list(live.tokens),
+                cur=int(self._cur[slot]), pos=int(self._pos[slot]),
+                pages=live.pages, hist=hist, kslot=int(self._kslot[slot]),
+                ema=float(self._ema[slot]), reason=reason)
+            self._retire(slot)
+            return payload
         paused = self._paused.get(rid)
         if paused is None:
             raise KeyError(f"request {rid} is not paused on this engine")
@@ -1145,14 +1186,27 @@ class ContinuousBatchingEngine:
             req=paused.req, emitted=paused.emitted,
             tokens=list(paused.tokens), cur=paused.cur, pos=paused.pos,
             pages=paused.pages, hist=paused.hist, kslot=paused.kslot,
-            ema=paused.ema)
+            ema=paused.ema, reason=reason)
         del self._paused[rid]
         for p in paused.pages:
             self.alloc.release(p)       # unpin: aliased pages survive
         return payload
 
+    def export_pages(self, slot: int, *,
+                     reason: ExportReason = ExportReason.HANDOFF
+                     ) -> ShippedKV:
+        """Deprecated alias for ``export(slot=...)`` (pre-residency name)."""
+        return self.export(slot=slot, reason=reason)
+
+    def export_paused(self, rid: object, *,
+                      reason: ExportReason = ExportReason.EVACUATE
+                      ) -> ShippedKV:
+        """Deprecated alias for ``export(rid=...)`` (pre-residency name)."""
+        return self.export(rid=rid, reason=reason)
+
     def _export(self, *, req, emitted, tokens, cur, pos, pages, hist,
-                kslot, ema) -> ShippedKV:
+                kslot, ema,
+                reason: ExportReason = ExportReason.HANDOFF) -> ShippedKV:
         """Gather ``ceil(pos/page_size)`` content pages into a payload."""
         ps = self.page_size
         n_content = math.ceil(pos / ps)
@@ -1172,7 +1226,7 @@ class ContinuousBatchingEngine:
         return ShippedKV(
             req=req, emitted=emitted, tokens=tokens, cur=cur, pos=pos,
             content=content, kv_cache_dtype=self.kv_cache_dtype,
-            page_size=ps, hist=hist, kslot=kslot, ema=ema)
+            page_size=ps, hist=hist, kslot=kslot, ema=ema, reason=reason)
 
     def page_nbytes(self) -> int:
         """Wire bytes of ONE shipped page across every pool leaf (data +
@@ -1288,6 +1342,83 @@ class ContinuousBatchingEngine:
         self.stats["page_imports"] += 1
         payload.consumed = True
         return slot
+
+    def restore_pages(self, payload: ShippedKV) -> list[int]:
+        """Land a demoted payload's content pages back in the device pool
+        WITHOUT occupying a decode slot; returns the restored page list.
+
+        The tier-restore transport behind the residency API: the store's
+        payload is scattered into freshly allocated pages, the covered
+        token stream (prompt + emitted tokens) is registered in the radix
+        prefix cache under the payload's namespace, and the pages are
+        immediately released to refcount zero — *free-but-hittable*,
+        exactly the state a retired request's pages occupy. The next
+        admission of a prompt sharing the stream pins and aliases them
+        with **zero re-prefill**; if nothing claims them, the allocator
+        reuses them and eviction scrubs the entries as usual. int8 scale
+        pages scatter alongside their data pages (the content dict is
+        structural), so token identity holds for f32 and int8 pools alike.
+
+        Raises ``ValueError`` on layout mismatch / re-used payload and
+        ``RuntimeError`` when fewer than ``n_content`` pages are free (the
+        caller retries a later round).
+        """
+        if payload.consumed:
+            raise ValueError(
+                f"payload for request {payload.req.rid} was already "
+                "imported or restored; a ShippedKV is a one-shot move")
+        if payload.kv_cache_dtype != self.kv_cache_dtype:
+            raise ValueError(
+                f"restored pages are {payload.kv_cache_dtype!r} but this "
+                f"engine's pool is {self.kv_cache_dtype!r}")
+        if payload.page_size != self.page_size:
+            raise ValueError(
+                f"restored page_size {payload.page_size} != engine "
+                f"page_size {self.page_size}")
+        if set(payload.content) != set(self.pool):
+            raise ValueError(
+                f"restored pool leaves {sorted(payload.content)} != engine "
+                f"pool leaves {sorted(self.pool)}")
+        if self.prefix_cache is None:
+            raise RuntimeError("restore_pages needs the prefix cache: "
+                               "restored pages are only reachable through "
+                               "the radix index")
+        n_content = payload.n_content
+        if self.alloc.available() < n_content:
+            raise RuntimeError(
+                f"insufficient free pages to restore request "
+                f"{payload.req.rid}: need {n_content}, have "
+                f"{self.alloc.available()}")
+        pages = [self.alloc.alloc() for _ in range(n_content)]
+        nb = _next_pow2(max(1, n_content))
+        dst = np.zeros(nb, np.int32)            # pads scatter into the sink
+        dst[:n_content] = pages
+        scatter = self._ship_scatter_cache.get(nb)
+        if scatter is None:
+            @partial(jax.jit, donate_argnums=(0,))
+            def scatter_fn(pool, content, dst):
+                return {name: pool[name].at[:, :, dst].set(
+                            content[name].astype(pool[name].dtype))
+                        for name in pool}
+            scatter = self._ship_scatter_cache[nb] = scatter_fn
+        padded = {}
+        for name, a in payload.content.items():
+            buf = np.zeros(a.shape[:2] + (nb,) + a.shape[3:], a.dtype)
+            buf[:, :, :n_content] = a
+            padded[name] = jnp.asarray(buf)
+        self.pool = scatter(self.pool, padded, jnp.asarray(dst))
+        # Register the full covered token stream — prompt plus the tokens
+        # decoded before demotion — so a resumed session's longer prompt
+        # walks straight down the restored chain.
+        req = payload.req
+        stream = list(req.prompt) + list(
+            payload.tokens[:payload.pos - len(req.prompt)])
+        self.prefix_cache.register(stream, pages, req.namespace)
+        for p in pages:
+            self.alloc.release(p)       # free-but-hittable, like retirement
+        self.stats["page_restores"] += 1
+        payload.consumed = True
+        return pages
 
     def drop_queued(self) -> list[EngineRequest]:
         """Hand back queued-but-unadmitted requests (e.g. transient page
@@ -1407,7 +1538,17 @@ class ContinuousBatchingEngine:
             live.emitted += ntok
             if live.emitted >= live.req.max_new:
                 finished.append((live.req, live.tokens[:live.req.max_new]))
-                self._retire(slot)
+                if self.demote_on_retire:
+                    # Export-before-retire: the finished stream's content
+                    # pages leave for a lower tier *before* the refcounts
+                    # drop, so a later eviction-on-realloc scrubs index
+                    # entries whose KV already lives off-device. export()
+                    # retires the slot itself.
+                    self.demoted_out.append(self.export(
+                        slot=slot, reason=ExportReason.DEMOTE))
+                    self.stats["page_demotes"] += 1
+                else:
+                    self._retire(slot)
         return finished
 
     # -- the serving loop ----------------------------------------------------

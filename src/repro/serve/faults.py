@@ -17,7 +17,10 @@ Fault classes (``FaultEvent.kind``):
   (requeue + backoff is the only recovery).
 - ``revoke_notice`` — a revocation notice with ``duration_s`` of warning
   (default: the market's ``notice_s``), the EC2 2-minute-warning model;
-  the gateway's notice-window KV evacuation gets to race the deadline.
+  the gateway's notice-window KV evacuation
+  (``engine.export(..., reason=EVACUATE)`` on the unified
+  :class:`~repro.serve.kv_store.PageResidency` surface) gets to race
+  the deadline.
 - ``straggler`` — the replica's modelled step latency is multiplied by
   ``magnitude`` for ``duration_s``; the router's leave-one-out straggler
   detection should mark it DEGRADED and drain it.

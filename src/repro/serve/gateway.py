@@ -47,7 +47,7 @@ replicas, so serve traffic gets exactly what batch analytics got:
   2-minute spot warning) arrives one window ahead of the price crossing
   the bid, and the gateway spends it **evacuating** the replica — every
   live and PAUSED request's KV pages ship out mid-decode
-  (``export_pages`` / ``export_paused``) and re-import on a surviving
+  (``export(reason=EVACUATE)``) and re-import on a surviving
   replica via FleetRouter placement, so recovery costs a page copy, not a
   re-prefill, and greedy tokens stay identical to an undisturbed run.
   Only when the window is too short for the payload does the job fall
@@ -74,13 +74,22 @@ replicas, so serve traffic gets exactly what batch analytics got:
 - **Disaggregated prefill/decode** (``prefill_replicas > 0``): dedicated
   prefill-role replicas (wide chunks, never decode) run admission prefill
   and ship each request's finished KV pages to a decode-role replica
-  through the engine page-shipping interface
-  (:meth:`~repro.serve.engine.ContinuousBatchingEngine.export_pages` /
+  through the engine page-residency interface
+  (:meth:`~repro.serve.engine.ContinuousBatchingEngine.export` /
   ``import_pages``). Handoffs re-register the shipped prefix in the
   destination's radix cache, so it stays shareable after the hop; greedy
   tokens are identical to a never-shipped run. Ship time is billed at
   ``ServiceModel.kv_ship_bytes_per_s`` and the wire bytes land in
   ``page_ship_bytes``.
+- **Tiered KV hierarchy** (``kv_store=``): with a
+  :class:`~repro.serve.kv_store.TieredKVStore` attached, a finished
+  request's pages demote (``export(reason=DEMOTE)``) into HOST / OBJECT
+  tiers instead of being destroyed, and a queued job whose prompt
+  prefixes a demoted stream parks ``RESTORE_PENDING`` (the batch
+  scheduler's WAITING_DATA, one layer down) while an async restore lands
+  the pages back on a replica via ``restore_pages`` — resumed sessions
+  pay restore bandwidth, not re-prefill FLOPs, and storage GB-hours are
+  billed per (tier, tenant) through :class:`repro.core.cost.StoragePricing`.
 
 Time is a :class:`repro.core.clock.VirtualClock` driven by a
 :class:`~repro.serve.admission.ServiceModel` — decode/prefill seconds are
@@ -106,10 +115,12 @@ from repro.core.security import (AuditRecord, PolicyEngine, SessionToken)
 
 from .admission import (AdmissionPolicy, DeadlineCostPolicy,
                         DeadlineInfeasible, JobState, PreemptCandidate,
-                        RetryBudgetExhausted, ServeJob, ServiceModel)
-from .engine import (ContinuousBatchingEngine, EngineRequest, PausedRequest,
-                     ShippedKV)
+                        RetryBudgetExhausted, ServeJob, ServiceModel,
+                        StorageBudgetExceeded)
+from .engine import (ContinuousBatchingEngine, EngineRequest, ExportReason,
+                     PausedRequest, ShippedKV)
 from .faults import FaultInjector
+from .kv_store import TieredKVStore
 from .routing import (HEALTH_UP, FingerprintTracker, FleetRouter,
                       ReplicaView)
 from .telemetry import LATENCY_BUCKETS_S, MetricsRegistry, RegistryDict
@@ -183,6 +194,7 @@ class KottaServeGateway:
                  evacuate_on_notice: bool = True,
                  notice_s: float | None = None,
                  fault_injector: FaultInjector | None = None,
+                 kv_store: TieredKVStore | None = None,
                  registry: MetricsRegistry | None = None,
                  telemetry_store=None,
                  telemetry_flush_s: float = 5.0,
@@ -228,6 +240,13 @@ class KottaServeGateway:
             (market.notice_s if market is not None else 120.0)
         self.faults = fault_injector
         self._fp_tracker = FingerprintTracker()
+        # Tiered KV hierarchy (None disables demotion/restore entirely):
+        # finished requests' pages demote into the store at retirement, and
+        # queued jobs whose prompt prefixes a demoted stream park
+        # RESTORE_PENDING while the async restore runs.
+        self.kv_store = kv_store
+        # rid -> [RestoreTicket, redeemed payload | None, delivery attempts]
+        self._restores: dict[int, list] = {}
 
         self.jobs: dict[int, ServeJob] = {}
         self.completed_order: list[int] = []
@@ -264,6 +283,8 @@ class KottaServeGateway:
         self._build_metrics()
         self.stats = self._build_stats()
         self.router.bind_registry(self.registry)
+        if self.kv_store is not None:
+            self.kv_store.bind_registry(self.registry)
 
         # One engine up front: it validates request shapes at submit time
         # and seeds the warm pool; every autoscaled replica is
@@ -309,7 +330,10 @@ class KottaServeGateway:
                       "retries", "backoff_wait_s", "wasted_decode_tokens",
                       "faults_injected", "telemetry_flushes",
                       "telemetry_writes", "telemetry_dropped",
-                      "statestore_throttled")
+                      "statestore_throttled", "kv_demotions",
+                      "kv_demoted_bytes", "kv_restores",
+                      "kv_restore_fallbacks", "kv_budget_refusals",
+                      "restored_tokens", "storage_cost_usd")
 
     MAX_PENDING_WRITES = 10_000
 
@@ -381,9 +405,16 @@ class KottaServeGateway:
     def _bind_engine(self, eng: ContinuousBatchingEngine
                      ) -> ContinuousBatchingEngine:
         """Adopt an engine into the shared registry (idempotent: warm-pool
-        engines come back already bound)."""
+        engines come back already bound) and, when a tiered KV store is
+        attached, into the storage hierarchy: decode-capable engines demote
+        finished requests' pages instead of destroying them, and their
+        prefix-cache evictions stream into the store's counters."""
         if not isinstance(eng.stats, RegistryDict):
             eng.bind_registry(self.registry, f"e{next(self._engine_seq)}")
+        if self.kv_store is not None and eng.role != "prefill":
+            eng.demote_on_retire = True
+            if eng.prefix_cache is not None:
+                eng.prefix_cache.on_evict = self.kv_store.on_eviction
         return eng
 
     @staticmethod
@@ -600,7 +631,8 @@ class KottaServeGateway:
     def outstanding(self) -> int:
         return sum(1 for j in self.jobs.values()
                    if j.status in (JobState.QUEUED, JobState.RUNNING,
-                                   JobState.PAUSED))
+                                   JobState.PAUSED,
+                                   JobState.RESTORE_PENDING))
 
     def drain(self, max_rounds: int = 20_000) -> None:
         """Step until every submitted job is DONE or SHED."""
@@ -613,9 +645,9 @@ class KottaServeGateway:
 
     # -- one scheduling round --------------------------------------------------
     def step(self) -> None:
-        """One gateway round: activate, revoke, resume, shed/order (which
-        may preempt), dispatch, pump, autoscale, bill, and advance the
-        virtual clock.
+        """One gateway round: activate, revoke, resume, deliver/request
+        tier restores, shed/order (which may preempt), dispatch, pump,
+        autoscale, bill, and advance the virtual clock.
 
         Resume runs BEFORE shed/dispatch: paused jobs are accepted work and
         re-take freed slots ahead of new admissions (Kotta §IV-D — accepted
@@ -638,6 +670,9 @@ class KottaServeGateway:
         self._observe_health(now)
         self._drain_unhealthy(now)
         self._resume_paused(now)
+        if self.kv_store is not None:
+            self._deliver_restores(now)
+            self._check_restores(now)
         self._shed_and_order(now)
         self._dispatch(now)
         work_s = max(self._pump(now), evac_s)
@@ -867,8 +902,10 @@ class KottaServeGateway:
         for _, kind, handle, est in cands:
             if spent + est > budget:
                 continue
-            exports.append(eng.export_paused(handle) if kind == "paused"
-                           else eng.export_pages(handle))
+            exports.append(
+                eng.export(rid=handle, reason=ExportReason.EVACUATE)
+                if kind == "paused"
+                else eng.export(slot=handle, reason=ExportReason.EVACUATE))
             spent += est
         for payload in exports:
             rid = payload.req.rid
@@ -1045,9 +1082,20 @@ class KottaServeGateway:
             cached = {job.rid: self.router.best_match_tokens(
                           job.prompt, job.namespace, views)
                       for job in self._queue}
+        # RESTORE_PENDING jobs are feasibility-checked honestly: the async
+        # restore's remaining latency is pre-service delay, and the stream
+        # it lands counts as cached tokens (zero re-prefill once admitted).
+        kwargs: dict = {}
+        if self._restores:
+            kwargs["extra_delay_s"] = {
+                rid: max(0.0, item[0].ready_at - now)
+                for rid, item in self._restores.items()}
+            cached = dict(cached or {})
+            for rid, item in self._restores.items():
+                cached[rid] = max(cached.get(rid, 0), item[0].tokens)
         keep, shed = self.admission.plan(
             self._queue, self._slot_horizon(now), now,
-            self._price_per_slot_hour(now), cached_tokens=cached)
+            self._price_per_slot_hour(now), cached_tokens=cached, **kwargs)
         for job, err in shed:
             # Last resort before shedding a deadline-infeasible request:
             # pause a running lower-class request (policy's choice) so the
@@ -1057,6 +1105,7 @@ class KottaServeGateway:
                     and self._try_preempt(job, now):
                 keep.append(job)
                 continue
+            self._restores.pop(job.rid, None)   # a shed job's ticket dies
             job.status = JobState.SHED
             job.error = err
             job.finished_at = now
@@ -1116,6 +1165,150 @@ class KottaServeGateway:
                 detail=f"job {entry.job.rid} resumed after {wait:.2f}s "
                        "paused (zero re-prefill)"))
         self._paused = still
+
+    # -- tiered KV hierarchy (demote / restore) ---------------------------------
+    def _check_restores(self, now: float) -> None:
+        """Park QUEUED jobs whose prompt prefixes a demoted stream.
+
+        The exact mirror of the batch scheduler's ARCHIVE -> WAITING_DATA
+        transition: instead of re-prefilling a cold conversation, the job
+        waits ``RESTORE_PENDING`` on an async tier restore whose modelled
+        latency gates dispatch through the same ``not_before`` hold the
+        requeue backoff uses. Jobs already as warm on the live fleet
+        (affinity fingerprint match >= the stored stream) skip the restore
+        — a device hit beats any lower tier.
+        """
+        store = self.kv_store
+        views = None
+        for job in self._queue:
+            if (job.status is not JobState.QUEUED or job.requeued
+                    or job.not_before > now
+                    or job.rid in self._restores):
+                continue
+            hit = store.match(job.namespace, job.prompt)
+            if hit is None:
+                continue
+            key, tokens, tier = hit
+            if self.router.mode == "affinity":
+                if views is None:
+                    views = self._target_views()
+                if self.router.best_match_tokens(
+                        job.prompt, job.namespace, views) >= tokens:
+                    continue
+            ticket = store.request_restore(key, job.rid, now)
+            self._restores[job.rid] = [ticket, None, 0]
+            job.status = JobState.RESTORE_PENDING
+            job.not_before = ticket.ready_at
+            job.restores += 1
+            self.security.audit.append(AuditRecord(
+                timestamp=now, principal_id=job.tenant,
+                role_name="serve-gateway", action="serve:Restore",
+                resource=self.model_resource, decision="allow",
+                detail=f"job {job.rid} parked RESTORE_PENDING: "
+                       f"{tokens}-token stream on {tier.value} tier, "
+                       f"ready in {ticket.ready_at - now:.2f}s"))
+
+    def _deliver_restores(self, now: float) -> None:
+        """Land due restores on the fleet; fall back to re-prefill on loss.
+
+        A due ticket is redeemed once (the payload survives placement
+        retries); ``complete_restore`` returning None means the entry was
+        evicted while the restore was in flight — the job simply rejoins
+        the queue cold. Placement is least-loaded over UP decode-capable
+        replicas via :meth:`ContinuousBatchingEngine.restore_pages`, which
+        re-registers the stream as free-but-hittable cache pages, so the
+        job's own admission aliases them with zero re-prefill.
+        """
+        store = self.kv_store
+        for rid in list(self._restores):
+            ticket, payload, attempts = self._restores[rid]
+            job = self.jobs[rid]
+            if job.status is not JobState.RESTORE_PENDING:
+                del self._restores[rid]         # shed while parked
+                continue
+            if now < ticket.ready_at:
+                continue
+            if payload is None:
+                payload = store.complete_restore(ticket, now)
+                if payload is None:
+                    self._restore_fallback(job, now,
+                                           "entry evicted mid-restore")
+                    continue
+                self._restores[rid][1] = payload
+            dests = sorted(
+                (r for r in self._replicas
+                 if r.state == "live" and r.role != "prefill"
+                 and r.notice_deadline is None
+                 and self.router.health(r.id, now) == HEALTH_UP),
+                key=lambda x: (x.engine.live + x.engine.queued, x.id))
+            landed = None
+            for r in dests:
+                try:
+                    r.engine.restore_pages(payload)
+                except RuntimeError:
+                    continue                    # no pages here: try the next
+                landed = r
+                break
+            if landed is None:
+                self._restores[rid][2] = attempts + 1
+                if attempts + 1 >= self.MAX_DELIVERY_ATTEMPTS:
+                    self._restore_fallback(
+                        job, now, f"no capacity after {attempts + 1} rounds")
+                continue
+            del self._restores[rid]
+            job.status = JobState.QUEUED
+            job.not_before = 0.0
+            job.restored_tokens += ticket.tokens
+            self.stats["kv_restores"] += 1
+            self.stats["restored_tokens"] += ticket.tokens
+            self.security.audit.append(AuditRecord(
+                timestamp=now, principal_id=job.tenant,
+                role_name="serve-gateway", action="serve:Restore",
+                resource=self.model_resource, decision="allow",
+                detail=f"job {rid}: {ticket.tokens}-token stream restored "
+                       f"from {ticket.tier.value} onto replica {landed.id} "
+                       f"({ticket.nbytes}B, zero re-prefill)"))
+
+    def _restore_fallback(self, job: ServeJob, now: float,
+                          detail: str) -> None:
+        """Restore lost the race (eviction or no capacity): the job rejoins
+        the queue cold and re-prefills — never a crash, never a hang."""
+        del self._restores[job.rid]
+        job.status = JobState.QUEUED
+        job.not_before = 0.0
+        self.stats["kv_restore_fallbacks"] += 1
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=job.tenant,
+            role_name="serve-gateway", action="serve:Restore",
+            resource=self.model_resource, decision="deny",
+            detail=f"job {job.rid} falls back to re-prefill: {detail}"))
+
+    def _demote_payload(self, payload: ShippedKV, now: float) -> None:
+        """One finished request's pages into the store, budget permitting.
+
+        A :class:`StorageBudgetExceeded` refusal is typed and audited, and
+        the payload is simply forgone — the tenant's conversation restarts
+        cold next time, it does not fail."""
+        job = self.jobs.get(payload.req.rid)
+        tenant = job.tenant if job is not None else payload.req.namespace[0]
+        try:
+            tier = self.kv_store.demote(payload, tenant, now)
+        except StorageBudgetExceeded as err:
+            self.stats["kv_budget_refusals"] += 1
+            self.security.audit.append(AuditRecord(
+                timestamp=now, principal_id=tenant,
+                role_name="serve-gateway", action="serve:Demote",
+                resource=self.model_resource, decision="deny",
+                detail=str(err)))
+            return
+        self.stats["kv_demotions"] += 1
+        self.stats["kv_demoted_bytes"] += payload.nbytes
+        self.security.audit.append(AuditRecord(
+            timestamp=now, principal_id=tenant,
+            role_name="serve-gateway", action="serve:Demote",
+            resource=self.model_resource, decision="allow",
+            detail=f"job {payload.req.rid}: {payload.nbytes}B of KV pages "
+                   f"demoted to {tier.value} tier at retirement"))
 
     def _dispatch_targets(self) -> list[_Replica]:
         """Replicas the router may place new requests on: the prefill fleet
@@ -1345,7 +1538,8 @@ class KottaServeGateway:
                 # prefix pays only its fresh suffix here.
                 for slot in sorted(eng._live):
                     rid = eng._live[slot].req.rid
-                    payload = eng.export_pages(slot)
+                    payload = eng.export(slot=slot,
+                                         reason=ExportReason.HANDOFF)
                     self._handoffs.append([payload, rid, 0])
                     self.jobs[rid].replica = None     # in flight
                     r.jobs.discard(rid)
@@ -1383,6 +1577,12 @@ class KottaServeGateway:
                     self.completed_order.append(req.rid)
                     self.stats["tokens"] += len(toks)
                     self._observe_completion(job)
+                if self.kv_store is not None and eng.demoted_out:
+                    # Retirement demoted these requests' pages off the
+                    # device (reason=DEMOTE): park them in the tier store.
+                    for payload in eng.demoted_out:
+                        self._demote_payload(payload, now)
+                    eng.demoted_out.clear()
             elif eng.queued:
                 # Admission produced nothing (transient page pressure, e.g.
                 # a paused request's pinned pages): give the QUEUED requests
@@ -1456,6 +1656,11 @@ class KottaServeGateway:
             self.stats["replica_seconds"] += tick
         self.stats["peak_replicas"] = max(self.stats["peak_replicas"],
                                           len(live))
+        if self.kv_store is not None:
+            # Storage GB-hours accrue on the same virtual clock but stay a
+            # separate meter: compute $/token and storage $/GB-hour answer
+            # different sizing questions (the bench sums them).
+            self.stats["storage_cost_usd"] += self.kv_store.accrue(now)
 
     def replicas(self, state: str = "live") -> list[_Replica]:
         return [r for r in self._replicas if r.state == state]
@@ -1564,6 +1769,22 @@ class KottaServeGateway:
             "page_ship_bytes_per_ship": (self.stats["page_ship_bytes"]
                                          / ships if ships else 0.0),
             "handoffs_in_flight": len(self._handoffs),
+            "kv_demotions": self.stats["kv_demotions"],
+            "kv_demoted_bytes": self.stats["kv_demoted_bytes"],
+            "kv_restores": self.stats["kv_restores"],
+            "kv_restore_fallbacks": self.stats["kv_restore_fallbacks"],
+            "kv_budget_refusals": self.stats["kv_budget_refusals"],
+            "restored_tokens": self.stats["restored_tokens"],
+            "storage_cost_usd": self.stats["storage_cost_usd"],
+            "restore_pending": sum(
+                1 for j in self.jobs.values()
+                if j.status is JobState.RESTORE_PENDING),
+            "kv_host_bytes": (self.kv_store.host_bytes
+                              if self.kv_store is not None else 0),
+            "kv_object_bytes": (self.kv_store.object_bytes
+                                if self.kv_store is not None else 0),
+            "kv_store": (dict(self.kv_store.stats)
+                         if self.kv_store is not None else None),
             "per_replica": per_replica,
             "slo_burn_rate": self._slo_burn_rate(),
             "telemetry_flushes": self.stats["telemetry_flushes"],

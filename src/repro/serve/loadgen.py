@@ -26,6 +26,19 @@ workloads imply):
   prefix caching and affinity routing matter under load.
 - **Mixed classes** — interactive (priority 0, tight deadline) vs batch
   (priority 1, loose deadline) split by ``interactive_fraction``.
+- **Session resumption** (``resume_fraction > 0``) — a fraction of
+  requests come back after an exponential **cold gap**
+  (``cold_gap_mean_s``): the resumed arrival replays the original prompt
+  plus the assistant's reply plus a fresh user turn, which is exactly the
+  traffic the tiered KV hierarchy exists for (the gap is long enough for
+  the session's pages to have been demoted off the device).
+  :func:`run_open_loop` splices the original request's actual emitted
+  tokens into the resumed prompt at submit time, so the resumed stream
+  token-identically extends the demoted one. A resume whose original is
+  still in flight holds until the reply lands (a follow-up turn cannot
+  precede the reply it quotes) — the one departure from pure open-loop
+  arrivals, and the reason resumed prompts are identical across runs that
+  differ only in service speed.
 
 Determinism: everything derives from ``seed`` via ``numpy.random
 .RandomState``; the same config always yields byte-identical traces, so
@@ -39,6 +52,8 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
+
+from .admission import JobState
 
 __all__ = ["TrafficConfig", "Arrival", "generate_trace", "offered_load",
            "run_open_loop"]
@@ -66,6 +81,13 @@ class TrafficConfig:
     interactive_max_new: int = 8
     batch_max_new: int = 8
     vocab_size: int = 256
+    # Session resumption: a resumed arrival follows its original after an
+    # exponential cold gap, carrying the original prompt plus a fresh
+    # ``resume_tail_tokens``-token user turn. 0.0 keeps old traces
+    # byte-identical (no extra rng draws happen).
+    resume_fraction: float = 0.0
+    cold_gap_mean_s: float = 30.0
+    resume_tail_tokens: int = 4
     seed: int = 0
 
 
@@ -80,6 +102,11 @@ class Arrival:
     max_new: int
     deadline_s: float           # relative to arrival
     priority: int               # 0 interactive, 1 batch
+    # Session linkage: resumes share a session id with their original.
+    # ``prompt`` on a resumed arrival is original-prompt + fresh tail;
+    # run_open_loop splices the original's emitted tokens in between.
+    session: int = -1           # -1: not part of a resumed session
+    resumed: bool = False
 
 
 def _rate_at(cfg: TrafficConfig, t: float) -> float:
@@ -116,6 +143,7 @@ def generate_trace(cfg: TrafficConfig) -> list[Arrival]:
                 for _ in range(cfg.tenants)]
     peak = cfg.base_rate_rps * (1.0 + cfg.diurnal_amplitude)
     out: list[Arrival] = []
+    next_session = 0
     t = 0.0
     while True:
         t += float(rng.exponential(1.0 / peak))
@@ -135,14 +163,35 @@ def generate_trace(cfg: TrafficConfig) -> list[Arrival]:
         tail = tuple(int(x) for x in
                      tail_rng.randint(0, cfg.vocab_size, size=ntail))
         interactive = float(rng.uniform()) < cfg.interactive_fraction
+        prompt = prefixes[tenant] + tail
+        max_new = (cfg.interactive_max_new if interactive
+                   else cfg.batch_max_new)
+        deadline = (cfg.interactive_deadline_s if interactive
+                    else cfg.batch_deadline_s)
+        prio = 0 if interactive else 1
+        session = -1
+        resume: Optional[Arrival] = None
+        # Guarded draws: with resume_fraction == 0 the rng stream is
+        # untouched and pre-existing traces stay byte-identical.
+        if cfg.resume_fraction > 0 and \
+                float(rng.uniform()) < cfg.resume_fraction:
+            session = next_session
+            next_session += 1
+            gap = float(rng.exponential(cfg.cold_gap_mean_s))
+            rtail = tuple(int(x) for x in tail_rng.randint(
+                0, cfg.vocab_size, size=cfg.resume_tail_tokens))
+            resume = Arrival(
+                at_s=t + gap, tenant_idx=tenant, user=user,
+                prompt=prompt + rtail, max_new=max_new,
+                deadline_s=deadline, priority=prio,
+                session=session, resumed=True)
         out.append(Arrival(
-            at_s=t, tenant_idx=tenant, user=user,
-            prompt=prefixes[tenant] + tail,
-            max_new=(cfg.interactive_max_new if interactive
-                     else cfg.batch_max_new),
-            deadline_s=(cfg.interactive_deadline_s if interactive
-                        else cfg.batch_deadline_s),
-            priority=0 if interactive else 1))
+            at_s=t, tenant_idx=tenant, user=user, prompt=prompt,
+            max_new=max_new, deadline_s=deadline, priority=prio,
+            session=session))
+        if resume is not None:
+            out.append(resume)
+    out.sort(key=lambda a: a.at_s)     # resumes land out of order
     return out
 
 
@@ -167,21 +216,55 @@ def run_open_loop(gw, tokens: list, trace: list[Arrival], *,
     i = 0
     rounds = 0
     start = gw.clock.now()          # trace times are relative to run start
-    while i < len(trace) or gw.outstanding():
+    sessions: dict[int, tuple] = {}    # session id -> (rid, orig prompt len)
+    # Resumed arrivals whose original is still in flight: a follow-up turn
+    # cannot precede the reply it quotes, so these hold until the original
+    # reaches a terminal state (DONE -> splice the reply in; SHED -> resume
+    # without it) and submit at the next round. Everything else stays pure
+    # open-loop; with resume_fraction == 0 this pool is always empty.
+    pending: list[Arrival] = []
+
+    def _ready(a: Arrival) -> bool:
+        if not a.resumed or a.session not in sessions:
+            return True
+        job = gw.jobs[sessions[a.session][0]]
+        return job.status is JobState.DONE or job.status is JobState.SHED
+
+    def _submit(a: Arrival) -> None:
+        prompt = list(a.prompt)
+        if a.resumed and a.session in sessions:
+            # The resumed conversation includes the assistant's actual
+            # reply: splice the original's emitted tokens between its
+            # prompt and the fresh user turn.
+            orid, plen = sessions[a.session]
+            job = gw.jobs[orid]
+            if job.tokens is not None:
+                prompt = prompt[:plen] + list(job.tokens) + prompt[plen:]
+        rid = gw.submit(tokens[a.tenant_idx], prompt,
+                        max_new=a.max_new, deadline_s=a.deadline_s,
+                        priority=a.priority)
+        if a.session >= 0 and not a.resumed:
+            sessions[a.session] = (rid, len(a.prompt))
+        if on_submit is not None:
+            on_submit(a, rid)
+
+    while i < len(trace) or pending or gw.outstanding():
         now = gw.clock.now()
+        for a in [a for a in pending if _ready(a)]:
+            pending.remove(a)
+            _submit(a)
         while i < len(trace) and start + trace[i].at_s <= now:
             a = trace[i]
             i += 1
-            rid = gw.submit(tokens[a.tenant_idx], list(a.prompt),
-                            max_new=a.max_new, deadline_s=a.deadline_s,
-                            priority=a.priority)
-            if on_submit is not None:
-                on_submit(a, rid)
+            if _ready(a):
+                _submit(a)
+            else:
+                pending.append(a)
         gw.step()
         rounds += 1
         if rounds > max_rounds:
             raise RuntimeError(
                 f"open-loop run exceeded {max_rounds} rounds "
-                f"({i}/{len(trace)} submitted, {gw.outstanding()} "
-                "outstanding)")
+                f"({i}/{len(trace)} submitted, {len(pending)} pending, "
+                f"{gw.outstanding()} outstanding)")
     return rounds

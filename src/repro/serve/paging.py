@@ -40,10 +40,31 @@ namespace-scoped radix tree.
 from __future__ import annotations
 
 from collections import deque
+from dataclasses import dataclass
 
 import numpy as np
 
 _FP_SALT = "kotta-prefix-fp"
+
+
+@dataclass(frozen=True)
+class EvictionEvent:
+    """One :meth:`PrefixCache.evict` call's worth of index removals.
+
+    The explicit eviction contract: ``pages`` is every page whose index
+    entry was dropped (the reallocated page plus the scrubbed subtree it
+    anchored), ``namespace`` is the (tenant, data-zone) domain those
+    entries lived under — subtrees are namespace-pure, rooted at the
+    namespace's own root — and ``epoch`` is the cache epoch after the
+    removals. Subscribers (tier demotion, accounting) observe "these pages
+    left the index" at the only moment it is knowable; every page in the
+    event is either already demoted to a lower tier or refcount-zero free,
+    never silently lost.
+    """
+
+    pages: tuple
+    namespace: object
+    epoch: int
 
 
 def chain_hashes(prompt, page_size: int, namespace=None) -> list[int]:
@@ -126,8 +147,16 @@ class PrefixCache:
         self.page_size = page_size
         self._full = {}      # (parent_page|-1, tokens) -> page
         self._partial = {}   # parent_page|-1 -> list[(tokens, page)]
-        self._owned = {}     # page -> ("full", key) | ("partial", parent, toks)
+        # page -> ("full", key, ns) | ("partial", parent, toks, ns); the
+        # trailing namespace is carried so EvictionEvents can name the
+        # domain an entry lived under without re-walking to its root.
+        self._owned = {}
         self._kids = {}      # parent_page -> list of full keys under it
+        # Explicit eviction contract: callback(EvictionEvent) fired once
+        # per evict() that removed at least one entry. Demotion subscribes
+        # here — the single seam where "a page left the index" is
+        # observable.
+        self.on_evict = None
         # Incremental fingerprint: chain hash per owned full entry, plus an
         # epoch-tagged add/remove journal so routers can mirror the
         # fingerprint with deltas instead of a full snapshot per round.
@@ -200,7 +229,7 @@ class PrefixCache:
             if page is None:
                 page = pages[i]
                 self._full[key] = page
-                self._owned[page] = ("full", key)
+                self._owned[page] = ("full", key, namespace)
                 self._kids.setdefault(parent, []).append(key)
                 self._chain[page] = hash((parent_hash, tup))
                 self._record(+1, self._chain[page])
@@ -211,13 +240,20 @@ class PrefixCache:
             lst = self._partial.setdefault(parent, [])
             if all(toks != rem for toks, _ in lst):
                 lst.append((rem, pages[n_full]))
-                self._owned[pages[n_full]] = ("partial", parent, rem)
+                self._owned[pages[n_full]] = ("partial", parent, rem,
+                                              namespace)
 
     # -- eviction ------------------------------------------------------------
     def evict(self, page: int) -> None:
-        """Drop ``page``'s entries: its physical contents are being reused."""
+        """Drop ``page``'s entries: its physical contents are being reused.
+
+        Fires ``on_evict`` with one :class:`EvictionEvent` covering the
+        page and its scrubbed subtree when any entry was removed.
+        """
+        dropped: list[tuple[int, object]] = []   # (page, namespace)
         owned = self._owned.pop(page, None)
         if owned is not None:
+            dropped.append((page, owned[-1]))
             if owned[0] == "full":
                 self._full.pop(owned[1], None)
                 ch = self._chain.pop(page, None)
@@ -235,26 +271,40 @@ class PrefixCache:
                     if not kids:
                         del self._kids[owned[1][0]]
             else:
-                _, parent, toks = owned
+                _, parent, toks, _ns = owned
                 lst = self._partial.get(parent)
                 if lst is not None:
                     lst[:] = [e for e in lst if e[0] != toks]
         # Entries keyed under this page id would silently re-anchor to the
         # page's NEW contents — scrub the whole subtree.
-        self._scrub(page)
+        self._scrub(page, dropped)
+        if dropped and self.on_evict is not None:
+            self.on_evict(EvictionEvent(
+                pages=tuple(p for p, _ in dropped),
+                namespace=dropped[0][1],
+                epoch=self.epoch))
 
-    def _scrub(self, page: int) -> None:
+    def _scrub(self, page: int,
+               dropped: list[tuple[int, object]] | None = None) -> None:
         for key in self._kids.pop(page, ()):
             child = self._full.pop(key, None)
-            if child is not None and self._owned.get(child) == ("full", key):
-                del self._owned[child]
-                ch = self._chain.pop(child, None)
-                if ch is not None:
-                    self._record(-1, ch)
-                self._scrub(child)
+            if child is not None:
+                ent = self._owned.get(child)
+                if ent is not None and ent[0] == "full" and ent[1] == key:
+                    del self._owned[child]
+                    if dropped is not None:
+                        dropped.append((child, ent[2]))
+                    ch = self._chain.pop(child, None)
+                    if ch is not None:
+                        self._record(-1, ch)
+                    self._scrub(child, dropped)
         for toks, child in self._partial.pop(page, ()):
-            if self._owned.get(child) == ("partial", page, toks):
+            ent = self._owned.get(child)
+            if ent is not None and ent[0] == "partial" and ent[1] == page \
+                    and ent[2] == toks:
                 del self._owned[child]
+                if dropped is not None:
+                    dropped.append((child, ent[3]))
 
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:

@@ -28,6 +28,14 @@ heartbeat plus their modelled per-decode-step latency every gateway round
 The gateway stops placing new work (dispatch, handoffs, evacuations) on
 anything not ``up`` and drains queued-but-unstarted work off it; states
 recover on their own when heartbeats return / latency normalizes.
+
+Fingerprints also interlock with the storage hierarchy
+(:mod:`repro.serve.kv_store`): a request whose prefix is already
+device-resident somewhere (``best_match_tokens`` ≥ the demoted match)
+skips the tiered restore entirely and routes on affinity, and a
+completed restore (``engine.restore_pages``) re-registers the prefix in
+the landing replica's radix cache, so the next fingerprint delta
+advertises it fleet-wide.
 """
 from __future__ import annotations
 

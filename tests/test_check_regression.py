@@ -241,6 +241,52 @@ def test_absent_saturation_section_fails(tmp_path):
     assert "saturation" in res.stdout
 
 
+def test_session_resume_advantage_collapse_fails(tmp_path):
+    """Losing the tiered-restore win (tiered resumed TTFT inflating to the
+    re-prefill baseline's) fails the gate — the ratio is recomputed from
+    the raw per-mode fields."""
+    def collapse(gateway):
+        s = gateway["session_resume"]
+        s["tiered"]["resumed_ttft_mean_s"] = \
+            s["reprefill"]["resumed_ttft_mean_s"]
+    res = _run(_candidates(tmp_path, gateway_edit=collapse))
+    assert res.returncode != 0
+    assert "session_resume.resumed_ttft_ratio" in res.stdout
+
+
+def test_session_resume_cost_inflation_fails(tmp_path):
+    """$/1k resumed tokens is recomputed from the raw compute + storage
+    cost fields — a storage-pricing slip or an accounting leak fails."""
+    def inflate(gateway):
+        gateway["session_resume"]["tiered"]["cost_usd"] *= 1.5
+    res = _run(_candidates(tmp_path, gateway_edit=inflate))
+    assert res.returncode != 0
+    assert "session_resume.tiered.usd_per_1k_resumed_tokens" in res.stdout
+
+
+@pytest.mark.parametrize("delta", [-1, +1], ids=["fewer", "more"])
+def test_session_resume_restore_count_gates_exactly(tmp_path, delta):
+    """The restore count is structural (trace + demotion state, no
+    numerics): a drop means resumes stopped coming back through the store,
+    a rise means the device radix or the affinity skip broke — both fail."""
+    def shift(gateway):
+        gateway["session_resume"]["tiered"]["kv_restores"] += delta
+    res = _run(_candidates(tmp_path, gateway_edit=shift))
+    assert res.returncode != 0
+    assert "session_resume.tiered.kv_restores" in res.stdout
+
+
+def test_session_resume_token_divergence_fails(tmp_path):
+    """Token identity across demote/restore gates at ZERO tolerance for
+    the f32 run AND the int8 scale-page leg."""
+    for field in ("token_identity", "int8_token_identity"):
+        def diverge(gateway, f=field):
+            gateway["session_resume"][f] = False
+        res = _run(_candidates(tmp_path, gateway_edit=diverge))
+        assert res.returncode != 0
+        assert f"session_resume.{field}" in res.stdout
+
+
 def test_within_tolerance_noise_passes(tmp_path):
     """Small same-direction noise (5%) stays green — the gate is a
     regression check, not an exact-match check."""

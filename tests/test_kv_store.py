@@ -1,0 +1,364 @@
+"""Tiered KV-cache hierarchy: the page-residency API (unified export with
+reason tags, deprecated aliases, ``page_nbytes`` as the single sizing
+truth), demote -> OBJECT-spill -> restore -> resume token identity (plain
+and speculative decode, f32 and int8 pools), per-tenant storage budgets
+(typed refusal), restore racing eviction (graceful re-prefill fallback),
+and the PrefixCache EvictionEvent contract."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.clock import VirtualClock
+from repro.core.elastic import ProvisioningModel, ScalingPolicy
+from repro.core.security import PolicyEngine, provision_tenant
+from repro.models import get_family
+from repro.models.params import init_params
+from repro.serve import (ContinuousBatchingEngine, EngineRequest,
+                         ExportReason, JobState, KottaServeGateway,
+                         PageResidency, ServiceModel, StorageBudgetExceeded,
+                         Tier, TieredKVStore)
+
+MAX_LEN = 48
+SLOTS = 2
+NS = ("alice", "public")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced_config("yi-6b").replace(dtype="float32", page_size=8)
+    fam = get_family(cfg)
+    params = init_params(fam.layout(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_chunk", 4)
+    return ContinuousBatchingEngine(cfg, params, **kw)
+
+
+def _security(*tenants):
+    sec = PolicyEngine(clock=VirtualClock())
+    tokens = {t: provision_tenant(sec, t, f"pw-{t}",
+                                  data_zones=("public", t))
+              for t in tenants}
+    return sec, tokens
+
+
+def _gateway(model, sec, *, engine_kw=None, **kw):
+    kw.setdefault("provisioning",
+                  ProvisioningModel(base_delay_s=5.0, jitter_s=0.0,
+                                    volatility_prob=0.0))
+    kw.setdefault("service_model", ServiceModel(decode_step_s=0.05))
+
+    def factory(m=model, ekw=engine_kw):
+        return _engine(m, **(ekw or {}))
+    return KottaServeGateway(factory, sec,
+                             scaling=ScalingPolicy.none(
+                                 1, market="on_demand"), **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.RandomState(seed).randint(
+        0, cfg.vocab_size, size=n).tolist()
+
+
+def _run_to_done(eng, max_steps=200):
+    """Admit + decode until idle; returns {rid: emitted tokens}."""
+    out = {}
+    for _ in range(max_steps):
+        if not eng.has_work:
+            return out
+        eng.admit()
+        for req, toks in eng.decode_step():
+            out[req.rid] = list(toks)
+    raise RuntimeError("engine did not drain")
+
+
+# ---------------------------------------------------------------------------
+# Residency API: protocol shape, unified export, sizing truth
+# ---------------------------------------------------------------------------
+
+def test_engine_satisfies_page_residency_protocol(model):
+    eng = _engine(model)
+    assert isinstance(eng, PageResidency)
+    assert [r.value for r in ExportReason] == ["handoff", "evacuate",
+                                               "demote"]
+
+
+def test_export_requires_exactly_one_handle(model):
+    cfg, _ = model
+    eng = _engine(model)
+    eng.enqueue(EngineRequest(rid="a", prompt=_prompt(cfg, 12), max_new=8,
+                              namespace=NS))
+    eng.admit()
+    with pytest.raises(ValueError, match="exactly one"):
+        eng.export()
+    with pytest.raises(ValueError, match="exactly one"):
+        eng.export(slot=0, rid="a")
+    slot = next(iter(eng._live))
+    payload = eng.export(slot=slot, reason=ExportReason.DEMOTE)
+    assert payload.reason is ExportReason.DEMOTE
+
+
+@pytest.mark.parametrize("dtype", [None, "int8"])
+def test_page_nbytes_is_the_sizing_truth(model, dtype):
+    """``ShippedKV.nbytes`` must equal the actual content-array bytes AND
+    ``page_nbytes() * n_content`` — one sizing truth for ship budgets and
+    tier capacities, scale pages included on int8 pools."""
+    cfg, _ = model
+    eng = _engine(model, kv_cache_dtype=dtype)
+    eng.enqueue(EngineRequest(rid="a", prompt=_prompt(cfg, 20), max_new=4,
+                              namespace=NS))
+    eng.admit()
+    slot = next(iter(eng._live))
+    payload = eng.export(slot=slot)
+    n_content = next(iter(payload.content.values())).shape[2]
+    manual = sum(a.nbytes for a in payload.content.values())
+    assert payload.nbytes == manual == eng.page_nbytes() * n_content
+    if dtype == "int8":
+        f32 = _engine(model).page_nbytes()
+        assert eng.page_nbytes() < f32     # int8 data + f32 scale < f32 data
+
+
+# ---------------------------------------------------------------------------
+# Token identity across pause -> demote -> OBJECT spill -> restore -> resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_kw", [
+    {},
+    {"enable_spec_decode": True},
+    {"kv_cache_dtype": "int8"},
+    {"kv_cache_dtype": "int8", "enable_spec_decode": True},
+], ids=["f32", "f32-spec", "int8", "int8-spec"])
+def test_demote_restore_token_identity(model, engine_kw):
+    """A request paused mid-decode, exported with reason=DEMOTE, parked in
+    the store with zero HOST capacity (straight to the OBJECT tier, i.e.
+    through full serialize/deserialize), restored, and re-imported must
+    finish with greedy tokens identical to an undisturbed run."""
+    cfg, _ = model
+    prompt = _prompt(cfg, 14, seed=7)
+    oracle = _run_to_done(_deferred_engine(model, engine_kw, prompt))["s"]
+
+    eng = _engine(model, **engine_kw)
+    eng.enqueue(EngineRequest(rid="s", prompt=prompt, max_new=12,
+                              namespace=NS))
+    eng.admit()
+    eng.decode_step()                       # emit a few tokens mid-stream
+    slot = next(iter(eng._live))
+    eng.preempt(slot)
+    # Deprecated alias must still reach the unified entry point.
+    payload = eng.export_paused("s", reason=ExportReason.DEMOTE)
+    assert not eng.has_work                 # pages fully off the engine
+
+    store = TieredKVStore(host_capacity_bytes=0)    # everything spills
+    assert store.demote(payload, "alice", now=0.0) is Tier.OBJECT
+    stream = tuple(prompt) + tuple(payload.tokens)
+    key, matched, tier = store.match(NS, stream)
+    assert tier is Tier.OBJECT and matched == len(stream)
+    ticket = store.request_restore(key, "s", now=1.0)
+    assert ticket.ready_at > 1.0            # OBJECT restores are not free
+    restored = store.complete_restore(ticket, ticket.ready_at)
+    assert restored is not None
+
+    eng.import_pages(restored)
+    final = _run_to_done(eng)["s"]
+    assert final == oracle
+    assert store.stats["restores_object"] == 1
+
+
+def _deferred_engine(model, engine_kw, prompt):
+    eng = _engine(model, **engine_kw)
+    eng.enqueue(EngineRequest(rid="s", prompt=prompt, max_new=12,
+                              namespace=NS))
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant storage budgets
+# ---------------------------------------------------------------------------
+
+def test_tenant_storage_budget_typed_refusal(model):
+    cfg, _ = model
+    eng = _engine(model)
+    payloads = []
+    for i, seed in enumerate((1, 2, 3)):
+        eng.enqueue(EngineRequest(rid=i, prompt=_prompt(cfg, 16, seed),
+                                  max_new=4, namespace=NS))
+        eng.admit()
+        slot = next(iter(eng._live))
+        payloads.append(eng.export(slot=slot, reason=ExportReason.DEMOTE))
+
+    budget = payloads[0].nbytes + payloads[1].nbytes
+    store = TieredKVStore(host_capacity_bytes=1 << 30,
+                          tenant_budget_bytes=budget)
+    store.demote(payloads[0], "alice", now=0.0)
+    store.demote(payloads[1], "alice", now=0.0)
+    with pytest.raises(StorageBudgetExceeded) as ei:
+        store.demote(payloads[2], "alice", now=0.0)
+    assert ei.value.reason == "storage_budget_exceeded"
+    assert store.stats["budget_refusals"] == 1
+    # Budgets are per tenant: another tenant's demotion still lands.
+    assert store.demote(payloads[2], "bob", now=0.0) is Tier.HOST
+
+
+# ---------------------------------------------------------------------------
+# Restore racing eviction
+# ---------------------------------------------------------------------------
+
+def test_restore_racing_eviction_returns_none(model):
+    """An entry evicted while its restore is in flight: ``complete_restore``
+    reports the loss as None (a restore miss), never a crash."""
+    cfg, _ = model
+    eng = _engine(model)
+    payloads = []
+    for i, seed in enumerate((4, 5)):
+        eng.enqueue(EngineRequest(rid=i, prompt=_prompt(cfg, 16, seed),
+                                  max_new=4, namespace=NS))
+        eng.admit()
+        slot = next(iter(eng._live))
+        payloads.append(eng.export(slot=slot, reason=ExportReason.DEMOTE))
+
+    store = TieredKVStore(host_capacity_bytes=0,
+                          object_capacity_bytes=payloads[0].nbytes)
+    store.demote(payloads[0], "alice", now=0.0)
+    key, _, _ = store.match(NS, tuple(payloads[0].req.prompt)
+                            + tuple(payloads[0].tokens))
+    ticket = store.request_restore(key, 0, now=1.0)
+    # Capacity pressure while the restore is in flight evicts the entry.
+    store.demote(payloads[1], "alice", now=2.0)
+    assert store.tier_of(key) is None
+    assert store.complete_restore(ticket, ticket.ready_at) is None
+    assert store.stats["restore_misses"] == 1
+
+
+def test_gateway_restore_fallback_reprefills(model):
+    """Gateway-level race: a parked RESTORE_PENDING job whose store entry
+    vanishes mid-flight falls back to plain re-prefill — same tokens as a
+    store-less gateway, no crash, and the miss is counted."""
+    cfg, _ = model
+    prompt = _prompt(cfg, 16, seed=9)
+
+    def run(store):
+        sec, tok = _security("alice")
+        gw = _gateway(model, sec, kv_store=store)
+        r1 = gw.submit(tok["alice"], prompt, max_new=4, data_zone="public")
+        gw.drain()
+        reply = gw.result(r1)
+        r2 = gw.submit(tok["alice"], prompt + reply + _prompt(cfg, 4, 10),
+                       max_new=4, data_zone="public")
+        if store is not None:
+            gw.step()           # parks r2 RESTORE_PENDING on the ticket
+            assert gw.jobs[r2].status is JobState.RESTORE_PENDING
+            # The entry vanishes while the restore is in flight (capacity
+            # eviction seen from the gateway's side).
+            store._entries.clear()
+        gw.drain()
+        assert gw.jobs[r2].status is JobState.DONE
+        return gw.result(r2), gw
+
+    # Slow restores guarantee the park window outlives one step.
+    store = TieredKVStore(host_capacity_bytes=1 << 30,
+                          host_restore_bytes_per_s=64.0)
+    got, gw = run(store)
+    want, _ = run(None)
+    assert got == want
+    assert gw.stats["kv_restore_fallbacks"] == 1
+    assert gw.stats["kv_restores"] == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache eviction contract
+# ---------------------------------------------------------------------------
+
+def test_eviction_events_cover_only_free_pages(model):
+    """Every page in an EvictionEvent is refcount-zero at event time (the
+    only pages the allocator may recycle), namespaces are preserved, and
+    epochs advance monotonically."""
+    cfg, _ = model
+    eng = _engine(model, num_pages=12)
+    events = []
+
+    def on_evict(ev):
+        for p in ev.pages:
+            assert eng.alloc.refs[p] == 0, \
+                f"page {p} evicted while still referenced"
+        events.append(ev)
+
+    eng.prefix_cache.on_evict = on_evict
+    for seed in range(6):                   # churn the 12-page pool
+        eng.enqueue(EngineRequest(rid=seed,
+                                  prompt=_prompt(cfg, 16, seed + 20),
+                                  max_new=4, namespace=NS))
+        _run_to_done(eng)
+    assert events, "pool churn produced no eviction events"
+    epochs = [e.epoch for e in events]
+    assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs)
+    assert all(e.namespace == NS for e in events)
+    assert all(0 < p < 12 for e in events for p in e.pages)
+
+
+def test_gateway_demotes_before_device_eviction(model):
+    """With a store attached, a finished session's stream is demoted at
+    retirement — so later device-index evictions can never lose content:
+    the resumed request restores and extends the stream token-identically.
+    """
+    cfg, _ = model
+    prompt = _prompt(cfg, 16, seed=30)
+    tail = _prompt(cfg, 4, seed=31)
+
+    def run(store):
+        sec, tok = _security("alice")
+        gw = _gateway(model, sec, kv_store=store,
+                      engine_kw={"num_pages": 12})
+        r1 = gw.submit(tok["alice"], prompt, max_new=4, data_zone="public")
+        gw.drain()
+        reply = gw.result(r1)
+        # Churn the 12-page pool so the finished stream's device copy is
+        # recycled before the resume arrives.
+        for s in range(3):
+            gw.submit(tok["alice"], _prompt(cfg, 16, seed=40 + s),
+                      max_new=4, data_zone="public")
+        gw.drain()
+        r2 = gw.submit(tok["alice"], prompt + reply + tail, max_new=4,
+                       data_zone="public")
+        gw.drain()
+        return gw.result(r2), gw
+
+    store = TieredKVStore(host_capacity_bytes=1 << 30)
+    got, gw = run(store)
+    want, _ = run(None)
+    assert got == want
+    assert gw.stats["kv_demotions"] >= 4        # every retirement demoted
+    assert gw.stats["kv_restores"] == 1         # the resume came back
+    assert store.stats["eviction_events"] > 0   # device index did churn
+    assert store.stats["device_evicted_pages"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Storage accounting
+# ---------------------------------------------------------------------------
+
+def test_gb_hours_accrue_per_tier_and_tenant(model):
+    cfg, _ = model
+    eng = _engine(model)
+    eng.enqueue(EngineRequest(rid="a", prompt=_prompt(cfg, 16, 50),
+                              max_new=4, namespace=NS))
+    eng.admit()
+    payload = eng.export(slot=next(iter(eng._live)),
+                         reason=ExportReason.DEMOTE)
+    store = TieredKVStore(host_capacity_bytes=1 << 30)
+    store.demote(payload, "alice", now=0.0)
+    store.accrue(now=0.0)                   # open the accrual interval
+    usd = store.accrue(now=3600.0)          # one GB-hour later
+    gb = payload.nbytes / 1e9
+    assert store.gb_hours[Tier.HOST] == pytest.approx(gb)
+    assert usd == pytest.approx(gb * store.rate_per_gb_hour[Tier.HOST])
+    assert store.cost_by_tenant["alice"] == pytest.approx(usd)
+    assert store.gb_hours_by_tenant["alice"][Tier.HOST] == \
+        pytest.approx(gb)
